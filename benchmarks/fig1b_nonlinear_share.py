@@ -1,0 +1,38 @@
+"""Fig. 1(b): fraction of decoder runtime spent in nonlinear ops grows with
+sequence length (the paper's motivation for accelerating the nonlinear
+unit). Reproduced by timing the linear path (QKV/O + MLP GEMMs) vs the
+nonlinear path (softmax + SiLU) of one decoder layer on this host across
+sequence lengths."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_us
+
+D, H, FF = 512, 8, 2048
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    wq = jax.random.normal(key, (D, D)) * 0.02
+    wf = jax.random.normal(key, (D, FF)) * 0.02
+    wo = jax.random.normal(key, (FF, D)) * 0.02
+
+    out = []
+    prev_share = 0.0
+    monotone = True
+    for s in [128, 512, 2048]:
+        x = jax.random.normal(key, (1, s, D))
+        scores = jax.random.normal(key, (1, H, s, s))
+        hmid = jax.random.normal(key, (1, s, FF))
+
+        lin = jax.jit(lambda x, h: ((x @ wq) @ (wq.T), (x @ wf), (h @ wo)))
+        nl = jax.jit(lambda sc, h: (jax.nn.softmax(sc, -1), jax.nn.silu(h)))
+        t_lin = time_us(lin, x, hmid)
+        t_nl = time_us(nl, scores, hmid)
+        share = t_nl / (t_nl + t_lin)
+        out.append(row(f"fig1b/seq{s}", t_lin + t_nl,
+                       f"nonlinear_share={share:.2%}"))
+        monotone &= share >= prev_share - 0.02
+        prev_share = share
+    out.append(row("fig1b/share_grows_with_seq", 0.0, monotone))
+    return out

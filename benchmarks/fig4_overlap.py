@@ -1,0 +1,31 @@
+"""Fig. 4 + Algorithm 1: overlap width selection for width-6 BBFP.
+Paper claim: PPL vs overlap is U-shaped-ish; Algo 1 balances PPL against
+hardware overhead via the weight w."""
+import jax
+
+from benchmarks.common import get_outlier_tiny_lm, eval_ppl, row
+from repro.core import bbfp as B
+from repro.core.overlap import overhead, select_overlap_width
+from repro.quant import linear as Q
+
+
+def run():
+    cfg, params = get_outlier_tiny_lm()
+
+    def ppl_fn(fmt: B.QuantFormat) -> float:
+        return eval_ppl(cfg, params,
+                        Q.QuantConfig(linear=fmt.name, nonlinear="none"),
+                        n_batches=4)
+
+    out = []
+    ppls = {}
+    for o in range(0, 6):
+        fmt = B.QuantFormat("bbfp", 6, o)
+        p = ppl_fn(fmt)
+        ppls[o] = p
+        out.append(row(f"fig4/BBFP(6,{o})", 0.0,
+                       f"ppl={p:.3f};overhead={overhead(fmt):.2f}"))
+    for w in (0.0, 0.5, 0.9):
+        best, diag = select_overlap_width(lambda f: ppls[f.overlap], 6, w=w)
+        out.append(row(f"fig4/algo1_w={w}", 0.0, f"best_o={best}"))
+    return out

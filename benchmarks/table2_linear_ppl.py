@@ -1,0 +1,34 @@
+"""Table II: perplexity of the quantised model (linear layers, weights +
+activations, NO calibration) under each format.
+
+Evaluated on the tiny LM with function-preserving LLM-outlier emulation
+(benchmarks.common.emulate_llm_outliers — the Fig. 1a activation regime).
+Paper claims reproduced as orderings:
+  BBFP(3,1) better than BFP4;  BBFP(4,2) ~ BFP6 (within a few %);
+  BBFP(6,3)/(6,4) ~ FP16.
+"""
+from benchmarks.common import get_outlier_tiny_lm, eval_ppl, row
+from repro.quant import linear as Q
+
+FORMATS = ["none", "BFP6", "BFP4", "BBFP(3,1)", "BBFP(4,2)", "BBFP(4,3)",
+           "BBFP(6,3)", "BBFP(6,4)", "INT8"]
+
+
+def run():
+    cfg, params = get_outlier_tiny_lm()
+    out = []
+    ppl = {}
+    for f in FORMATS:
+        p = eval_ppl(cfg, params, Q.QuantConfig(linear=f, nonlinear="none"))
+        ppl[f] = p
+        out.append(row(f"table2/{'FP16' if f == 'none' else f}", 0.0,
+                       f"ppl={p:.3f}"))
+    checks = {
+        "bbfp31_beats_bfp4": ppl["BBFP(3,1)"] < ppl["BFP4"],
+        "bbfp42_close_to_bfp6": ppl["BBFP(4,2)"] < ppl["BFP6"] * 1.06,
+        "bbfp63_close_to_fp16": ppl["BBFP(6,3)"] < ppl["none"] * 1.02,
+        "bbfp64_close_to_fp16": ppl["BBFP(6,4)"] < ppl["none"] * 1.02,
+    }
+    for k, v in checks.items():
+        out.append(row(f"table2/{k}", 0.0, v))
+    return out

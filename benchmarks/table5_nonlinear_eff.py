@@ -1,0 +1,33 @@
+"""Table V: nonlinear-unit efficiency. ADP/EDP are ASIC metrics; the TPU
+re-derivation is (a) wall-time of the LUT unit vs float transcendental on
+this host, (b) arithmetic-intensity: the LUT path does ZERO transcendental
+flops — one gather + fixed-point post-ops per element — which is the
+mechanism behind the paper's ~30x efficiency over the high-precision unit."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_us
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+
+
+def run():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 2048)) * 3
+    sm_fp = jax.jit(lambda x: jax.nn.softmax(x, -1))
+    sm_lut = jax.jit(lambda x: NL.softmax_lut(x, fmt=B.BBFP105))
+    si_fp = jax.jit(jax.nn.silu)
+    si_lut = jax.jit(lambda x: NL.silu_lut(x, fmt=B.BBFP105))
+    out = [
+        row("table5/softmax_fp32", time_us(sm_fp, x), "transcendental exp"),
+        row("table5/softmax_lut_bbfp", time_us(sm_lut, x),
+            "segmented LUT, 0 transcendental flops"),
+        row("table5/silu_fp32", time_us(si_fp, x), ""),
+        row("table5/silu_lut_bbfp", time_us(si_lut, x), ""),
+    ]
+    spec = NL.get_lut("exp", B.BBFP105)
+    out.append(row("table5/lut_vmem_bytes", 0.0, spec.table.nbytes))
+    out.append(row("table5/subtables", 0.0,
+                   f"exp={NL.get_lut('exp', B.BBFP105).n_subtables};"
+                   f"silu={NL.get_lut('one_plus_exp_neg', B.BBFP105).n_subtables}"
+                   f" (paper: 18 softmax, 24 SiLU)"))
+    return out

@@ -1,0 +1,35 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps with
+BBFP QAT (fake-quant linears, straight-through gradients), with async
+checkpointing and an injected mid-run failure to demonstrate restart.
+
+Reduced width by default so it finishes on CPU; pass --full100m for the
+real 100M config (slower).
+
+  PYTHONPATH=src python examples/train_tiny_bbfp.py --steps 200
+"""
+import argparse
+
+from repro.launch import train as T
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--quant", default="BBFP(4,2)")
+    p.add_argument("--fail-at", type=int, default=120,
+                   help="inject one failure to demo checkpoint-restart")
+    args = p.parse_args()
+
+    argv = ["--arch", "llama7b", "--tiny", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--quant", args.quant,
+            "--ckpt-dir", "/tmp/repro_example_ckpt",
+            "--ckpt-every", "50", "--log-every", "20"]
+    if args.fail_at >= 0:
+        argv += ["--fail-at", str(args.fail_at)]
+    state, hist = T.main(argv)
+    print(f"\ntrained with {args.quant} QAT: loss {hist['loss'][0]:.3f} -> "
+          f"{hist['loss'][-1]:.3f}, survived {hist['restarts']} failure(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+llama7b family). Each module exposes CONFIG (full, dry-run only) and
+smoke_config() (reduced, runs on CPU)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "internvl2_76b",
+    "qwen3_moe_30b_a3b",
+    "deepseek_v2_lite_16b",
+    "gemma3_4b",
+    "qwen2_5_32b",
+    "qwen3_32b",
+    "internlm2_1_8b",
+    "mamba2_2_7b",
+    "whisper_tiny",
+    "recurrentgemma_2b",
+    "llama7b",   # the paper's own evaluation family
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get(name: str):
+    """Return the config module for an arch id ('qwen2.5-32b', 'qwen3_32b'...)."""
+    mod_name = name.replace(".", "_").replace("-", "_")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def full_config(name: str):
+    return get(name).CONFIG
+
+
+def smoke_config(name: str):
+    return get(name).smoke_config()

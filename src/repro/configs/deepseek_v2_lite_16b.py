@@ -1,0 +1,26 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H, MLA kv_lora=512,
+moe d_ff=1408, 64 routed top-6 + 2 shared experts, first layer dense,
+vocab=102400. [arXiv:2405.04434; hf]"""
+from repro.models.common import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="decoder",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1408, vocab=102400, act="silu",
+    mla=MLAConfig(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                  v_head_dim=128),
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                  d_shared=1408, first_dense=1, d_ff_dense=10944),
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="deepseek-v2-smoke", family="decoder",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=64, vocab=512, act="silu",
+        mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                      v_head_dim=16),
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=64, n_shared=1,
+                      d_shared=64, first_dense=1, d_ff_dense=128),
+    )

@@ -1,0 +1,22 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144, 5:1 local:global (window 1024), GELU, tied embeddings,
+sandwich norms, 128k context. [hf:google/gemma-3-1b-pt; unverified]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-4b", family="decoder",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=10240, vocab=262144, act="gelu", rope_theta=1e6,
+    tie_embeddings=True, embed_scale=True, post_norm=True, qk_norm=True,
+    sliding_window=1024, global_every=6,   # layers 5, 11, ... are global
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="gemma3-smoke", family="decoder",
+        n_layers=6, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, act="gelu",
+        tie_embeddings=True, embed_scale=True, post_norm=True, qk_norm=True,
+        sliding_window=8, global_every=3,
+    )

@@ -1,0 +1,17 @@
+"""internlm2-1.8b [dense]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544. [arXiv:2403.17297; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-1.8b", family="decoder",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=92544, act="silu", rope_theta=1e6,
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="internlm2-smoke", family="decoder",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, act="silu",
+    )

@@ -1,0 +1,22 @@
+"""internvl2-76b [vlm]: InternViT frontend (STUB: precomputed patch
+embeddings) + InternLM2-style 76B GQA decoder backbone.
+[arXiv:2404.16821; unverified]  80L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256."""
+from repro.models.common import ArchConfig
+
+VIS_LEN = 256   # stub patch embeddings per image
+
+CONFIG = ArchConfig(
+    name="internvl2-76b", family="decoder",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab=128256, act="silu", rope_theta=1e6,
+    vis_len=VIS_LEN,
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="internvl2-smoke", family="decoder",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, act="silu", vis_len=8,
+    )

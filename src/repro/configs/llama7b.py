@@ -1,0 +1,28 @@
+"""llama7b: the paper's own evaluation family (Table II/IV) — 32L
+d_model=4096 32H MHA d_ff=11008 vocab=32000. Used by the benchmarks and
+the end-to-end examples (at reduced size)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama7b", family="decoder",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab=32000, act="silu", rope_theta=1e4,
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="llama-smoke", family="decoder",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512, act="silu",
+    )
+
+
+def tiny_lm_config(vocab: int = 512):
+    """~100M-class config for the end-to-end training example (CPU-feasible
+    at reduced width) and the Table II PPL benchmark."""
+    return ArchConfig(
+        name="llama-tiny", family="decoder",
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, head_dim=32,
+        d_ff=1024, vocab=vocab, act="silu",
+    )

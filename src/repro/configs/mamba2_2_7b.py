@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 attn-free, SSD state=128,
+head_dim=64 (80 heads at expand=2), vocab=50280. [arXiv:2405.21060;
+unverified]"""
+from repro.models.common import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b", family="mamba2",
+    n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4, chunk=256),
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="mamba2-smoke", family="mamba2",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, head_dim=0,
+        d_ff=0, vocab=512,
+        ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4, chunk=16),
+    )

@@ -1,0 +1,17 @@
+"""qwen2.5-32b [dense]: 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b", family="decoder",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=27648, vocab=152064, act="silu", qkv_bias=True, rope_theta=1e6,
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="qwen2.5-smoke", family="decoder",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, act="silu", qkv_bias=True,
+    )

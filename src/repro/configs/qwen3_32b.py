@@ -1,0 +1,17 @@
+"""qwen3-32b [dense]: 64L d_model=5120 64H (GQA kv=8) d_ff=25600
+vocab=151936, qk_norm. [hf:Qwen/Qwen3-8B; hf]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b", family="decoder",
+    n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=25600, vocab=151936, act="silu", qk_norm=True, rope_theta=1e6,
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="qwen3-smoke", family="decoder",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, act="silu", qk_norm=True,
+    )

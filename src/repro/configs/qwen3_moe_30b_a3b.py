@@ -1,0 +1,19 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) moe d_ff=768,
+vocab=151936, 128 experts top-8, qk_norm. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.models.common import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="decoder",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=768, vocab=151936, act="silu", qk_norm=True, rope_theta=1e6,
+    moe=MoEConfig(n_experts=128, top_k=8, d_expert=768),
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="qwen3-moe-smoke", family="decoder",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=512, act="silu", qk_norm=True,
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=64),
+    )

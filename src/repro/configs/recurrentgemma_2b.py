@@ -1,0 +1,24 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (MQA kv=1, hd=256)
+d_ff=7680, RG-LRU + local attention 1:2 (pattern rec,rec,attn),
+vocab=256000. [arXiv:2402.19427; hf]"""
+from repro.models.common import ArchConfig, GriffinConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="griffin",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000, act="gelu", tie_embeddings=True,
+    embed_scale=True,
+    griffin=GriffinConfig(lru_width=2560, conv_width=4, window=2048,
+                          pattern=("rec", "rec", "attn")),
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="recurrentgemma-smoke", family="griffin",
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab=512, act="gelu", tie_embeddings=True,
+        embed_scale=True,
+        griffin=GriffinConfig(lru_width=64, conv_width=4, window=8,
+                              pattern=("rec", "rec", "attn")),
+    )

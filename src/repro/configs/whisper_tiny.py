@@ -1,0 +1,20 @@
+"""whisper-tiny [audio]: enc-dec, 4+4L d_model=384 6H d_ff=1536
+vocab=51865, conv frontend STUBBED (precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.models.common import ArchConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="whisper",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+    d_ff=1536, vocab=51865, act="gelu", rope_theta=0.0,
+    encoder=EncoderConfig(n_layers=4, n_frames=1500, max_dec_pos=32768),
+)
+
+
+def smoke_config():
+    return ArchConfig(
+        name="whisper-smoke", family="whisper",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512, act="gelu", rope_theta=0.0,
+        encoder=EncoderConfig(n_layers=2, n_frames=16, max_dec_pos=128),
+    )

@@ -1,0 +1,14 @@
+"""Core: the paper's BBFP data format, error analysis and nonlinear unit."""
+from repro.core.bbfp import (  # noqa: F401
+    QuantFormat, parse_format, fake_quant, quantize, dequantize,
+    to_int_repr, folded_max, equivalent_bit_width, memory_efficiency,
+    bbfp_matmul_ref, FORMATS, DEFAULT_BLOCK,
+    FP_NONE, BFP4, BFP6, BFP8, BFP10, BBFP31, BBFP32, BBFP42, BBFP43,
+    BBFP63, BBFP64, BBFP65, BBFP105, INT8,
+)
+from repro.core.nonlinear import (  # noqa: F401
+    softmax_bbfp, silu_bbfp, gelu_bbfp, lut_apply, get_lut, build_lut,
+    softmax_lut, silu_lut, gelu_lut,
+    softmax_bfp_naive, silu_bfp_naive, LutSpec,
+)
+from repro.core import error, overlap  # noqa: F401

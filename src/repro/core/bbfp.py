@@ -1,0 +1,372 @@
+"""Bidirectional Block Floating Point (BBFP) — the paper's core data format.
+
+Implements, in pure JAX:
+
+  * plain BFP quantisation (block shares the *max* exponent; Eq. 2),
+  * BBFP quantisation (shared exponent = max - (m - o), per-element 1-bit flag
+    selecting a high/low mantissa window; Eqs. 4-6 and 9),
+  * dequantisation / fake-quant (round-trip) for both,
+  * integer decomposition used by the Pallas matmul kernel: each block is
+    (int mantissa with the flag folded in) x (power-of-two per-block scale).
+
+Numerical convention
+--------------------
+For an element x with exponent e = floor(log2 |x|):
+
+  BFP(k)       : E = max_e,           step = 2^(E - k + 1),           q = round(|x|/step)
+  BBFP(m, o)   : E_s = max_e - (m-o)
+                 flag = e > E_s
+                 step = 2^(E_s - m + 1) * (2^(m-o) if flag else 1)
+                 q    = clip(round(|x|/step), 0, 2^m - 1)
+
+so the high window (flag=1) has exactly the precision plain BFP(m) would give
+the outliers (step 2^(E_s - o + 1) = 2^(max_e - m + 1)), while the low window
+gains (m-o) bits for the bulk of the values.  This is the arithmetic
+equivalent of the paper's bit-window shift/truncate description (Eq. 4).
+
+The *stored* form per block of N values is
+  shared_exp  : int32 (one per block)
+  mantissa    : uint  m bits  (one per element)
+  flag, sign  : 1 bit each    (one per element)
+giving the equivalent bit-widths of Table I:  (1+1+m) + (5+o?)/N ... see
+``equivalent_bit_width``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Fixed by the paper: 5-bit shared exponent in all configurations.
+SHARED_EXPONENT_BITS = 5
+DEFAULT_BLOCK = 32  # paper's BlockSize (Table I); also the TPU VPU lane width.
+
+_EXP_MIN = -(2 ** (SHARED_EXPONENT_BITS - 1))      # -16
+_EXP_MAX = 2 ** (SHARED_EXPONENT_BITS - 1) - 1     # +15
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """A block-format descriptor. kind: 'bfp' | 'bbfp' | 'int' | 'none'."""
+    kind: Literal["bfp", "bbfp", "int", "none"]
+    mantissa: int = 4          # m  (stored mantissa bits, unsigned; sign separate)
+    overlap: int = 2           # o  (bbfp only)
+    block: int = DEFAULT_BLOCK
+    # shared-exponent strategy offset relative to Eq. 9. 0 = paper's max-(m-o).
+    # +1 = "max-1" strategy of Fig. 3, -1 = "max-3" strategy. bfp ignores it.
+    exponent_offset: int = 0
+
+    def __post_init__(self):
+        if self.kind == "bbfp" and not (0 <= self.overlap <= self.mantissa):
+            raise ValueError(f"overlap must be in [0, m]; got {self}")
+
+    @property
+    def name(self) -> str:
+        if self.kind == "bbfp":
+            return f"BBFP({self.mantissa},{self.overlap})"
+        if self.kind == "bfp":
+            return f"BFP{self.mantissa}"
+        if self.kind == "int":
+            return f"INT{self.mantissa}"
+        return "FP"
+
+    @property
+    def shift(self) -> int:
+        """m - o: the flag=1 left-shift amount (Eq. 6's log2 f)."""
+        return self.mantissa - self.overlap
+
+
+# Formats used throughout the paper's tables.
+FP_NONE = QuantFormat("none")
+BFP4 = QuantFormat("bfp", 4)
+BFP6 = QuantFormat("bfp", 6)
+BFP8 = QuantFormat("bfp", 8)
+BFP10 = QuantFormat("bfp", 10)
+BBFP31 = QuantFormat("bbfp", 3, 1)
+BBFP32 = QuantFormat("bbfp", 3, 2)
+BBFP42 = QuantFormat("bbfp", 4, 2)
+BBFP43 = QuantFormat("bbfp", 4, 3)
+BBFP63 = QuantFormat("bbfp", 6, 3)
+BBFP64 = QuantFormat("bbfp", 6, 4)
+BBFP65 = QuantFormat("bbfp", 6, 5)
+BBFP105 = QuantFormat("bbfp", 10, 5)
+INT8 = QuantFormat("int", 8)
+
+FORMATS = {
+    f.name: f
+    for f in [FP_NONE, BFP4, BFP6, BFP8, BFP10, BBFP31, BBFP32, BBFP42, BBFP43,
+              BBFP63, BBFP64, BBFP65, BBFP105, INT8]
+}
+
+
+def parse_format(spec: str) -> QuantFormat:
+    """'BBFP(4,2)' | 'bbfp4_2' | 'BFP6' | 'int8' | 'none' -> QuantFormat."""
+    s = spec.strip()
+    if s in FORMATS:
+        return FORMATS[s]
+    low = s.lower().replace(" ", "")
+    if low in ("none", "fp", "fp16", "fp32", "bf16"):
+        return FP_NONE
+    if low.startswith("bbfp"):
+        body = low[4:].strip("()_").replace("_", ",")
+        m, o = (int(v) for v in body.split(","))
+        return QuantFormat("bbfp", m, o)
+    if low.startswith("bfp"):
+        return QuantFormat("bfp", int(low[3:]))
+    if low.startswith("int"):
+        return QuantFormat("int", int(low[3:]))
+    raise ValueError(f"unknown quant format {spec!r}")
+
+
+# ---------------------------------------------------------------------------
+# exponent helpers
+# ---------------------------------------------------------------------------
+
+def _exponent(x: jax.Array) -> jax.Array:
+    """floor(log2 |x|) as int32; zeros map to _EXP_MIN (so they never drive
+    the block max). Clipped into the 5-bit shared-exponent range."""
+    ax = jnp.abs(x).astype(jnp.float32)
+    # frexp: x = f * 2^e with f in [0.5, 1)  =>  floor(log2|x|) = e - 1
+    _, e = jnp.frexp(ax)
+    e = (e - 1).astype(jnp.int32)
+    e = jnp.where(ax == 0, _EXP_MIN, e)
+    return jnp.clip(e, _EXP_MIN, _EXP_MAX)
+
+
+def _to_blocks(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    """Reshape last dim into (n_blocks, block), zero-padding if needed.
+    Returns (blocked, pad)."""
+    *lead, n = x.shape
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (len(lead)) + [(0, pad)])
+    return x.reshape(*lead, (n + pad) // block, block), pad
+
+
+def _from_blocks(xb: jax.Array, pad: int) -> jax.Array:
+    *lead, nb, b = xb.shape
+    x = xb.reshape(*lead, nb * b)
+    if pad:
+        x = x[..., : nb * b - pad]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# quantise / dequantise
+# ---------------------------------------------------------------------------
+
+def shared_exponent(x_blocked: jax.Array, fmt: QuantFormat) -> jax.Array:
+    """Per-block shared exponent. BFP: block max. BBFP: Eq. 9 (+offset)."""
+    e = _exponent(x_blocked)
+    e_max = jnp.max(e, axis=-1)
+    if fmt.kind == "bfp":
+        return e_max
+    if fmt.kind == "bbfp":
+        return jnp.clip(e_max - fmt.shift + fmt.exponent_offset, _EXP_MIN, _EXP_MAX)
+    raise ValueError(fmt.kind)
+
+
+def quantize_blocked(x_blocked: jax.Array, fmt: QuantFormat):
+    """Quantise an already-blocked array (..., n_blocks, block).
+
+    Returns dict with:
+      mantissa : int32  (unsigned value, 0..2^m-1)
+      sign     : int32  (+1/-1)
+      flag     : int32  (0/1; always 0 for bfp)
+      exp      : int32  per-block shared exponent  (..., n_blocks)
+    """
+    x = x_blocked.astype(jnp.float32)
+    m = fmt.mantissa
+    if fmt.kind == "int":
+        # symmetric per-block int quantisation (absmax scale) — the INT8 baseline.
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = jnp.where(amax == 0, 1.0, amax / (2 ** (m - 1) - 1))
+        q = jnp.clip(jnp.round(x / scale), -(2 ** (m - 1) - 1), 2 ** (m - 1) - 1)
+        return {
+            "mantissa": jnp.abs(q).astype(jnp.int32),
+            "sign": jnp.where(q < 0, -1, 1).astype(jnp.int32),
+            "flag": jnp.zeros_like(q, jnp.int32),
+            "exp": scale[..., 0],  # float scale stored in 'exp' slot for int kind
+        }
+
+    e_s = shared_exponent(x, fmt)                      # (..., nb)
+    e = _exponent(x)
+    if fmt.kind == "bfp":
+        flag = jnp.zeros_like(e)
+        step_log2 = e_s[..., None] - m + 1
+    else:
+        flag = (e > e_s[..., None]).astype(jnp.int32)
+        step_log2 = e_s[..., None] - m + 1 + flag * fmt.shift
+    step = jnp.exp2(step_log2.astype(jnp.float32))
+    q = jnp.round(jnp.abs(x) / step)
+    q = jnp.clip(q, 0, 2**m - 1)
+    sign = jnp.where(jnp.signbit(x), -1, 1).astype(jnp.int32)
+    return {
+        "mantissa": q.astype(jnp.int32),
+        "sign": sign,
+        "flag": flag.astype(jnp.int32),
+        "exp": e_s,
+    }
+
+
+def dequantize_blocked(qdict, fmt: QuantFormat) -> jax.Array:
+    m = fmt.mantissa
+    if fmt.kind == "int":
+        scale = qdict["exp"][..., None]
+        return (qdict["sign"] * qdict["mantissa"]).astype(jnp.float32) * scale
+    step_log2 = qdict["exp"][..., None] - m + 1
+    if fmt.kind == "bbfp":
+        step_log2 = step_log2 + qdict["flag"] * fmt.shift
+    step = jnp.exp2(step_log2.astype(jnp.float32))
+    return qdict["sign"] * qdict["mantissa"].astype(jnp.float32) * step
+
+
+def fake_quant(x: jax.Array, fmt: QuantFormat, axis: int = -1) -> jax.Array:
+    """Round-trip quantise along `axis` (blocked). Identity for kind='none'.
+    Straight-through gradient (the QAT path)."""
+    if fmt.kind == "none":
+        return x
+    x_ = jnp.moveaxis(x, axis, -1)
+    xb, pad = _to_blocks(x_, fmt.block)
+    y = dequantize_blocked(quantize_blocked(xb, fmt), fmt)
+    y = _from_blocks(y, pad)
+    y = jnp.moveaxis(y, -1, axis)
+    # straight-through estimator: forward quantised, backward identity.
+    zero = x - jax.lax.stop_gradient(x)
+    return zero + jax.lax.stop_gradient(y.astype(x.dtype))
+
+
+def quantize(x: jax.Array, fmt: QuantFormat, axis: int = -1):
+    """Quantise along axis; returns (qdict, pad). Blocked layout (..., nb, B)."""
+    x_ = jnp.moveaxis(x, axis, -1)
+    xb, pad = _to_blocks(x_, fmt.block)
+    return quantize_blocked(xb, fmt), pad
+
+
+def dequantize(qdict, fmt: QuantFormat, pad: int = 0, axis: int = -1) -> jax.Array:
+    y = _from_blocks(dequantize_blocked(qdict, fmt), pad)
+    return jnp.moveaxis(y, -1, axis)
+
+
+# ---------------------------------------------------------------------------
+# integer decomposition for the MXU matmul kernel
+# ---------------------------------------------------------------------------
+
+def to_int_repr(x: jax.Array, fmt: QuantFormat):
+    """Decompose x (blocked along last dim) into (q_int, scale):
+         x ≈ q_int * scale[..., None]
+    with q_int = sign * mantissa * 2^(shift*flag)  — the flag folded in, so a
+    plain integer dot over the block reproduces Eq. 7/10. For BBFP(m,o) the
+    folded magnitude is < 2^(2m-o), i.e. int8-safe for m=4,o=2 (<=60) and
+    m=3 (<=28); int16 for m=6,o=3 (<=504)."""
+    qd, _pad = quantize(x, fmt, axis=-1)
+    if fmt.kind == "int":
+        q = qd["sign"] * qd["mantissa"]
+        return q, qd["exp"]
+    fold = qd["mantissa"] << (qd["flag"] * fmt.shift) if fmt.kind == "bbfp" else qd["mantissa"]
+    q = qd["sign"] * fold
+    scale = jnp.exp2((qd["exp"] - fmt.mantissa + 1).astype(jnp.float32))
+    return q, scale
+
+
+def folded_max(fmt: QuantFormat) -> int:
+    """Max |q_int| after flag folding — decides int8 vs wider accumulation."""
+    if fmt.kind == "bbfp":
+        return (2**fmt.mantissa - 1) << fmt.shift
+    return 2**fmt.mantissa - 1
+
+
+# ---------------------------------------------------------------------------
+# packed weight storage (serving): int8 folded mantissas + per-block scales
+# ---------------------------------------------------------------------------
+
+def pack_weight(w: jax.Array, fmt: QuantFormat, cast_dtype=jnp.bfloat16):
+    """Offline weight packing for serving. w: (..., K, N), blocks along K
+    (the contraction dim, K % 32 == 0). Returns
+       {"q": int8/int16 (..., K, N), "scale": f32 (..., K/32, N)}
+    with  unpack_weight(pack_weight(w)) == fake_quant(w.astype(cast_dtype),
+    axis=-2)  exactly (the runtime fake-quant path sees bf16-cast weights,
+    so packing mirrors that cast). Storage is 8 bits/elt + one scale per 32
+    — Table I's memory-efficiency claim made real in the serving HLO."""
+    *lead, k, n = w.shape
+    assert k % DEFAULT_BLOCK == 0, (w.shape,)
+    if cast_dtype is not None:
+        w = w.astype(cast_dtype)
+    w2 = jnp.swapaxes(w, -2, -1)                    # (..., N, K)
+    qd, pad = quantize(w2, fmt, axis=-1)            # blocked along K
+    assert pad == 0
+    if fmt.kind == "bbfp":
+        fold = qd["mantissa"] << (qd["flag"] * fmt.shift)
+    else:
+        fold = qd["mantissa"]
+    q2 = qd["sign"] * fold                          # (..., N, nb, 32)
+    nb = k // DEFAULT_BLOCK
+    q = jnp.swapaxes(q2.reshape(*lead, n, k), -2, -1)
+    scale2 = jnp.exp2((qd["exp"] - fmt.mantissa + 1).astype(jnp.float32))
+    scale = jnp.swapaxes(scale2, -2, -1)            # (..., nb, N)
+    dtype = jnp.int8 if folded_max(fmt) <= 127 else jnp.int16
+    return {"q": q.astype(dtype), "scale": scale}
+
+
+def unpack_weight(packed: dict, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantise a packed weight: one multiply per element (fusable)."""
+    q, scale = packed["q"], packed["scale"]
+    *lead, k, n = q.shape
+    nb = scale.shape[-2]
+    qb = q.astype(jnp.float32).reshape(*lead, nb, k // nb, n)
+    w = qb * scale[..., :, None, :]
+    return w.reshape(*lead, k, n).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# format metadata (Table I)
+# ---------------------------------------------------------------------------
+
+def equivalent_bit_width(fmt: QuantFormat, block: int | None = None) -> float:
+    """Bits per element as stored (Table I 'Equivalent Bit-Width').
+
+    BFPm  : sign + m mantissa + shared exp amortised      -> 1 + m + 5/N
+    BBFP  : sign + flag + m mantissa + shared exp         -> 2 + m + 5/N
+    FP16  : 16.  INTk: k (+ fp scale amortised, like BFP exponent).
+    Matches the paper: BFP8@32 -> 9.16, BFP6@32 -> 7.16, BBFP(8,4)@32 -> 10.16,
+    BBFP(6,3)@32 -> 8.16.
+    """
+    n = block or fmt.block
+    if fmt.kind == "none":
+        return 16.0
+    if fmt.kind == "int":
+        return fmt.mantissa + SHARED_EXPONENT_BITS / n
+    if fmt.kind == "bfp":
+        return 1 + fmt.mantissa + SHARED_EXPONENT_BITS / n
+    return 2 + fmt.mantissa + SHARED_EXPONENT_BITS / n
+
+
+def memory_efficiency(fmt: QuantFormat, block: int | None = None) -> float:
+    """Table I 'Mem Eff.' = 16 / equivalent_bit_width."""
+    return 16.0 / equivalent_bit_width(fmt, block)
+
+
+# ---------------------------------------------------------------------------
+# reference BBFP matmul (oracle used by kernels/ref.py and tests)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("a_fmt", "b_fmt"))
+def bbfp_matmul_ref(a: jax.Array, b: jax.Array,
+                    a_fmt: QuantFormat = BBFP42,
+                    b_fmt: QuantFormat | None = None) -> jax.Array:
+    """C = quant(A) @ quant(B) computed exactly as the accelerator would:
+    per-K-block integer mantissa dot, scaled by the two shared exponents
+    (Eq. 7), accumulated across blocks in fp32 (the 'FP adder').
+
+    a: (M, K), b: (K, N). Block dim = K.
+    """
+    b_fmt = b_fmt or a_fmt
+    qa, sa = to_int_repr(a, a_fmt)                # (M, nb, B), (M, nb)
+    qb, sb = to_int_repr(b.T, b_fmt)              # (N, nb, B), (N, nb)
+    # integer block dot: (M, N, nb) = sum_B qa * qb   (exact in fp32 for our ranges)
+    blk = jnp.einsum("mkb,nkb->mnk", qa.astype(jnp.float32), qb.astype(jnp.float32))
+    return jnp.einsum("mnk,mk,nk->mn", blk, sa, sb)

@@ -1,0 +1,58 @@
+"""Quantisation-error analysis (paper §III.B, Eq. 8).
+
+Eq. 8 (Kalliojarvi & Astola): for round-to-nearest block floating point,
+    sigma^2 = 2^(-2 Lm) / 12 * sum_i p(gamma_i) 2^(2 gamma_i)
+i.e. the error variance is the mean of step^2/12 over the distribution of the
+(per-element effective) block exponent.  BBFP lowers sigma^2 purely by moving
+probability mass of the effective exponent downward (flag=0 elements use a
+step 2^(m-o) smaller than BFP's).  We expose both the closed-form estimate
+(from the quantiser's actual steps) and empirical MSE/SNR.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bbfp as B
+
+
+def _steps(x: jax.Array, fmt: B.QuantFormat) -> jax.Array:
+    """Per-element quantisation step actually used by the quantiser."""
+    x_ = jnp.moveaxis(x, -1, -1).astype(jnp.float32)
+    xb, _ = B._to_blocks(x_, fmt.block)
+    e_s = B.shared_exponent(xb, fmt)[..., None]
+    if fmt.kind == "bfp":
+        return jnp.broadcast_to(jnp.exp2((e_s - fmt.mantissa + 1).astype(jnp.float32)), xb.shape)
+    e = B._exponent(xb)
+    flag = (e > e_s).astype(jnp.int32)
+    return jnp.exp2((e_s - fmt.mantissa + 1 + flag * fmt.shift).astype(jnp.float32))
+
+
+def theoretical_variance(x: jax.Array, fmt: B.QuantFormat) -> jax.Array:
+    """Eq. 8 evaluated with the empirical exponent pmf: E[step^2] / 12."""
+    s = _steps(x, fmt)
+    return jnp.mean(s.astype(jnp.float32) ** 2) / 12.0
+
+
+def empirical_mse(x: jax.Array, fmt: B.QuantFormat) -> jax.Array:
+    y = B.fake_quant(x, fmt)
+    return jnp.mean((x - y).astype(jnp.float32) ** 2)
+
+
+def snr_db(x: jax.Array, fmt: B.QuantFormat) -> jax.Array:
+    """Signal-to-quantisation-noise ratio in dB (higher is better)."""
+    mse = empirical_mse(x, fmt)
+    sig = jnp.mean(x.astype(jnp.float32) ** 2)
+    return 10.0 * jnp.log10(sig / jnp.maximum(mse, 1e-30))
+
+
+def llm_activation_sample(key: jax.Array, shape=(4096, 512),
+                          outlier_frac: float = 1e-3,
+                          outlier_scale: float = 40.0) -> jax.Array:
+    """Synthetic tensor matched to Fig. 1(a): ~N(0,1) bulk plus a sparse
+    heavy tail (channel-correlated outliers, as observed in OPT/Llama)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    bulk = jax.random.normal(k1, shape)
+    mask = jax.random.bernoulli(k2, outlier_frac, shape)
+    out = jax.random.normal(k3, shape) * outlier_scale
+    return jnp.where(mask, out, bulk).astype(jnp.float32)

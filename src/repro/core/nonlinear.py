@@ -1,0 +1,257 @@
+"""Exponent-segmented LUT nonlinear unit (paper §IV.B).
+
+The paper's unit:
+  1. Align-Exponent: inputs are converted FP16 -> BBFP(10,5); a block shares
+     one 5-bit exponent.
+  2. Segmented LUT: the function's value table is split into sub-tables, one
+     per (shared exponent, flag, sign) segment (2^5 x 2 in principle; 18 are
+     materialised for softmax's exp, 24 for SiLU).  The sub-table for the
+     block's shared exponent is loaded, and the top 7 bits of the mantissa are
+     *directly* the address (no FP->index mapping as in float LUTs).
+  3. Fixed-point post-ops: max unit, adder tree, Div unit implement
+     softmax = exp(x - max) / sum;  SiLU = x / (1 + e^-x);  GELU likewise.
+
+TPU adaptation: each sub-table is 2^7 = 128 entries; the whole table bank for
+a function is <= 64*128 fp32 = 32 KiB, i.e. resident in VMEM.  Sub-table
+select + address formation become a single gather with a composite index
+(jnp.take), which is exactly what the Pallas kernel does per block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bbfp as B
+
+ADDRESS_BITS = 7  # paper: "the address width of each LUT being 7-bit"
+EXP_LUT_RANGE = -32.0  # exp-unit input domain (bounded -> few sub-tables)
+
+
+@dataclasses.dataclass(frozen=True)
+class LutSpec:
+    """A materialised segmented LUT for one scalar function.
+
+    table is a concrete *numpy* array (2, 2, n_exp, 2^ADDRESS_BITS) indexed
+    [sign][flag][e][addr] — numpy so that lazily building it under an ambient
+    jit trace can never cache a tracer."""
+    name: str
+    fmt: B.QuantFormat          # BBFP(10,5) in the paper
+    table: np.ndarray
+    e_min: int
+    e_max: int
+
+    @property
+    def n_subtables(self) -> int:
+        """Number of non-trivial sub-tables (paper reports 18 for exp, 24 SiLU)."""
+        t = np.asarray(self.table)
+        nz = 0
+        for s in range(2):
+            for f in range(2):
+                for e in range(t.shape[2]):
+                    col = t[s, f, e]
+                    if not (np.allclose(col, col[0])):
+                        nz += 1
+        return nz
+
+
+def build_lut(fn: Callable[[np.ndarray], np.ndarray], name: str,
+              fmt: B.QuantFormat = B.BBFP105,
+              e_range: tuple[int, int] = (-16, 15),
+              quantize_entries: bool = True) -> LutSpec:
+    """Tabulate fn at every representable BBFP bucket centre.
+
+    For segment (sign s, flag f, shared exp e): element value is
+       v = s * (addr_center) * 2^(e - m + 1 + f*shift)
+    with addr in [0, 2^A), addr_center = (addr + 0.5) * 2^(m - A) (the 10-bit
+    mantissa's top-7-bit bucket centre).
+    """
+    m, sh = fmt.mantissa, fmt.shift
+    e_min, e_max = e_range
+    n_exp = e_max - e_min + 1
+    addr = (np.arange(2**ADDRESS_BITS, dtype=np.float64) + 0.5) * 2 ** (m - ADDRESS_BITS)
+    tab = np.zeros((2, 2, n_exp, 2**ADDRESS_BITS), np.float64)
+    for si, s in enumerate((1.0, -1.0)):
+        for f in (0, 1):
+            for ei, e in enumerate(range(e_min, e_max + 1)):
+                x = s * addr * 2.0 ** (e - m + 1 + f * sh)
+                tab[si, f, ei] = fn(x)
+    if quantize_entries:
+        # paper: "each entry in the sub-table can be converted from FP16 to
+        # BBFP" so the LUT output stays in-format for the next fixed-point op.
+        # numpy (not jnp) so tables stay concrete even when built under a jit
+        # trace (get_lut may first be hit inside a traced model apply).
+        tab = _np_fake_quant(tab.astype(np.float32), fmt)
+    return LutSpec(name, fmt, np.asarray(tab, np.float32), e_min, e_max)
+
+
+def _np_fake_quant(t: np.ndarray, fmt: B.QuantFormat) -> np.ndarray:
+    """numpy mirror of bbfp.fake_quant along the last dim (block 32)."""
+    m, sh = fmt.mantissa, fmt.shift
+    *lead, n = t.shape
+    pad = (-n) % B.DEFAULT_BLOCK
+    x = np.pad(t, [(0, 0)] * len(lead) + [(0, pad)]) if pad else t
+    x = x.reshape(*lead, -1, B.DEFAULT_BLOCK).astype(np.float64)
+    ax = np.abs(x)
+    e = np.where(ax == 0, B._EXP_MIN,
+                 np.clip(np.floor(np.log2(np.maximum(ax, 1e-300))), B._EXP_MIN, B._EXP_MAX)
+                 ).astype(np.int64)
+    e_max = e.max(-1)
+    if fmt.kind == "bfp":
+        e_s, flag = e_max, np.zeros_like(e)
+        sh = 0
+    else:
+        e_s = np.clip(e_max - sh, B._EXP_MIN, B._EXP_MAX)
+        flag = (e > e_s[..., None]).astype(np.int64)
+    step = 2.0 ** (e_s[..., None] - m + 1 + flag * sh)
+    q = np.clip(np.round(ax / step), 0, 2**m - 1)
+    y = np.where(x < 0, -q, q) * step
+    y = y.reshape(*lead, -1)[..., :n]
+    return y.astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("spec_static",))
+def _lut_apply_impl(x, table, spec_static):
+    fmt, e_min, a_bits = spec_static
+    x_ = x.astype(jnp.float32)
+    xb, pad = B._to_blocks(x_, fmt.block)
+    qd = B.quantize_blocked(xb, fmt)
+    addr = qd["mantissa"] >> (fmt.mantissa - a_bits)
+    sign_idx = (qd["sign"] < 0).astype(jnp.int32)
+    e_idx = jnp.clip(qd["exp"] - e_min, 0, table.shape[2] - 1)[..., None]
+    n_exp, n_addr = table.shape[2], table.shape[3]
+    composite = ((sign_idx * 2 + qd["flag"]) * n_exp + e_idx) * n_addr + addr
+    y = jnp.take(table.reshape(-1), composite)
+    return B._from_blocks(y, pad)
+
+
+def lut_apply(x: jax.Array, spec: LutSpec) -> jax.Array:
+    """Evaluate the tabulated function elementwise via segmented lookup."""
+    shape = x.shape
+    flat = x.reshape(-1) if x.ndim == 0 else x.reshape(*x.shape[:-1], x.shape[-1])
+    y = _lut_apply_impl(flat, spec.table, (spec.fmt, spec.e_min, ADDRESS_BITS))
+    return y.reshape(shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the unit's function library (built lazily, cached)
+# ---------------------------------------------------------------------------
+
+_LUT_CACHE: dict[tuple, LutSpec] = {}
+
+
+def get_lut(name: str, fmt: B.QuantFormat = B.BBFP105) -> LutSpec:
+    key = (name, fmt.name, fmt.block)   # block size changes the quantiser
+    if key not in _LUT_CACHE:
+        fns = {
+            # softmax path: exp(x) for x <= 0 (post max-subtraction)
+            "exp": lambda x: np.exp(np.clip(x, -87.0, 0.0)),
+            # SiLU path per the paper: 1 + e^-x tabulated, Div unit does x / (.)
+            "one_plus_exp_neg": lambda x: 1.0 + np.exp(np.clip(-x, -87.0, 87.0)),
+            # GELU via tanh approximation's inner transcendental
+            "gelu_inner": lambda x: np.tanh(np.sqrt(2 / np.pi) * (x + 0.044715 * x**3)),
+            "sigmoid": lambda x: 1.0 / (1.0 + np.exp(np.clip(-x, -87.0, 87.0))),
+        }
+        _LUT_CACHE[key] = build_lut(fns[name], name, fmt)
+    return _LUT_CACHE[key]
+
+
+def _row_fmt(fmt: B.QuantFormat, row: int) -> B.QuantFormat:
+    """The paper's Align Exponent Unit computes ONE shared exponent per
+    input vector ('once a shared exponent is calculated during the
+    alignment phase, the corresponding sub-table can be loaded'), i.e. the
+    nonlinear unit's block = the whole row, not 32."""
+    if fmt.kind == "none":
+        return fmt
+    return dataclasses.replace(fmt, block=max(row, B.DEFAULT_BLOCK))
+
+
+def softmax_lut(x: jax.Array, axis: int = -1,
+                fmt: B.QuantFormat = B.BBFP105,
+                where: jax.Array | None = None) -> jax.Array:
+    """Softmax via the nonlinear unit: Max Unit -> Sub -> LUT(exp) ->
+    Adder Tree -> Div Unit -> Output Encoder (Fig. 6 computation sequence).
+    Alignment is per ROW (the Align Exponent Unit), see _row_fmt.
+
+    This is where plain BFP dies (Table IV): the LUT address is the
+    row-max-aligned mantissa, so the inputs that matter most for exp — the
+    near-zero shifted logits of the *dominant* tokens — fall many bits below
+    the row max and lose all address resolution, and the output encoder
+    crushes probabilities ~1/seq to zero. BBFP's flag=0 low window gives
+    both 2^(m-o) x finer treatment.
+    """
+    fmt = _row_fmt(fmt, x.shape[axis])
+    x_ = jnp.moveaxis(x, axis, -1)
+    if where is not None:
+        w_ = jnp.moveaxis(jnp.broadcast_to(where, x.shape), axis, -1)
+        x_ = jnp.where(w_, x_, -1e30)
+    x_max = jax.lax.stop_gradient(jnp.max(x_, axis=-1, keepdims=True))
+    shifted = x_ - x_max                                    # <= 0
+    # the unit's exp input range is bounded (that's why 18 sub-tables
+    # suffice): mask sentinels must NOT reach the Align Exponent Unit or
+    # they poison the row's shared exponent. exp(-32) == 0 for our widths.
+    shifted = jnp.maximum(shifted, EXP_LUT_RANGE)
+    if fmt.kind == "none":
+        e = jnp.exp(shifted)
+    else:
+        e = lut_apply(shifted, get_lut("exp", fmt))
+    if where is not None:
+        e = jnp.where(w_, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)              # adder tree (fp32)
+    out = e / jnp.maximum(denom, 1e-30)                     # div unit
+    if fmt.kind != "none":
+        out = B.fake_quant(out, fmt)                        # output encoder
+    return jnp.moveaxis(out, -1, axis).astype(x.dtype)
+
+
+def softmax_bbfp(x: jax.Array, axis: int = -1,
+                 fmt: B.QuantFormat = B.BBFP105,
+                 where: jax.Array | None = None) -> jax.Array:
+    return softmax_lut(x, axis=axis, fmt=fmt, where=where)
+
+
+def silu_bbfp(x: jax.Array, fmt: B.QuantFormat = B.BBFP105) -> jax.Array:
+    """SiLU = x / (1 + e^-x): LUT gives the denominator, Div Unit divides.
+    Row-aligned like the paper's Align Exponent Unit; the Div Unit saturates
+    (fixed-point hardware) so a denominator quantised toward 0 can't inf."""
+    if fmt.kind == "none":
+        return jax.nn.silu(x)
+    denom = lut_apply(x, get_lut("one_plus_exp_neg", _row_fmt(fmt, x.shape[-1])))
+    denom = jnp.maximum(denom, jnp.exp2(-16.0))
+    return (x / denom).astype(x.dtype)
+
+
+silu_lut = silu_bbfp  # same unit, format-parameterised
+
+
+def gelu_bbfp(x: jax.Array, fmt: B.QuantFormat = B.BBFP105) -> jax.Array:
+    if fmt.kind == "none":
+        return jax.nn.gelu(x)
+    inner = lut_apply(x, get_lut("gelu_inner", _row_fmt(fmt, x.shape[-1])))
+    return (0.5 * x * (1.0 + inner)).astype(x.dtype)
+
+
+gelu_lut = gelu_bbfp
+
+
+def softmax_bfp_naive(x: jax.Array, axis: int = -1,
+                      fmt: B.QuantFormat = B.BFP10) -> jax.Array:
+    """The BFP10 baseline of Table IV: same pipeline but inputs/outputs pass
+    through plain max-aligned BFP quantisation (which crushes the small
+    post-softmax probabilities -> the paper's 3x+ PPL blow-up)."""
+    x_ = jnp.moveaxis(x, axis, -1)
+    xq = B.fake_quant(x_, fmt)
+    x_max = jnp.max(xq, axis=-1, keepdims=True)
+    e = jnp.exp(xq - x_max)
+    e = B.fake_quant(e, fmt)
+    out = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    return jnp.moveaxis(B.fake_quant(out, fmt), -1, axis).astype(x.dtype)
+
+
+def silu_bfp_naive(x: jax.Array, fmt: B.QuantFormat = B.BFP10) -> jax.Array:
+    xq = B.fake_quant(x, fmt)
+    return B.fake_quant(jax.nn.silu(xq), fmt).astype(x.dtype)

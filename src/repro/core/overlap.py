@@ -1,0 +1,40 @@
+"""Algorithm 1 — selection of the overlap bit width.
+
+score[o] = w * Overhead_norm[o] + (1 - w) * PPL_norm[o];  pick argmin.
+
+`ppl_fn(fmt)` is injected (benchmarks use the tiny-LM PPL; tests use an MSE
+proxy) so the algorithm itself is exactly the paper's.  Overhead model: the
+stored bits per element (Table I equivalent bit-width) times a multiplier for
+the wider integer path when the folded mantissa exceeds int8 (the TPU analogue
+of the paper's wider multipliers/adders).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from repro.core import bbfp as B
+
+
+def overhead(fmt: B.QuantFormat) -> float:
+    """Relative hardware/compute cost of a BBFP(m,o) MAC on TPU: memory bits
+    per element plus an accumulation-width penalty when the folded integer
+    leaves the int8 MXU path."""
+    bits = B.equivalent_bit_width(fmt)
+    fold = B.folded_max(fmt)
+    acc_penalty = 1.0 if fold <= 127 else (2.0 if fold <= 32767 else 4.0)
+    return bits * acc_penalty
+
+
+def select_overlap_width(ppl_fn: Callable[[B.QuantFormat], float],
+                         mantissa: int,
+                         w: float = 0.5,
+                         candidates: Sequence[int] | None = None) -> tuple[int, dict]:
+    """Algorithm 1. Returns (best_o, diagnostics)."""
+    cand = list(candidates) if candidates is not None else list(range(0, mantissa))
+    fmts = [B.QuantFormat("bbfp", mantissa, o) for o in cand]
+    ppl = [float(ppl_fn(f)) for f in fmts]
+    ovh = [overhead(f) for f in fmts]
+    ppl_max, ovh_max = max(ppl), max(ovh)
+    scores = [w * (ov / ovh_max) + (1 - w) * (p / ppl_max) for p, ov in zip(ppl, ovh)]
+    best = min(range(len(cand)), key=lambda i: scores[i])
+    return cand[best], {"o": cand, "ppl": ppl, "overhead": ovh, "score": scores}

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the BBFP hot spots (validated in interpret mode).
+
+bbfp_matmul         — block-quantised matmul, the PE-array analogue (int8 MXU)
+lut_nonlinear       — exponent-segmented LUT elementwise apply (nonlinear unit)
+flash_lut_attention — flash attention with the Fig. 6 LUT softmax fused into
+                      the VMEM tile loop (scores never touch HBM)
+ops                 — public jit wrappers;  ref — pure-jnp oracles
+"""
+from repro.kernels.ops import bbfp_matmul, lut_apply  # noqa: F401
+from repro.kernels.flash_lut_attention import flash_lut_attention  # noqa: F401

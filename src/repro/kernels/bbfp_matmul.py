@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: BBFP block-quantised matmul (the PE-array analogue).
+
+TPU adaptation of the paper's weight-stationary BBFP PE array (§IV.A):
+
+  * the 4x4 PE block becomes a (TM, TN) = (128, 128) MXU-aligned output tile;
+  * the per-block shared exponent lives on K-blocks of 32 (paper's BlockSize,
+    = VPU lane width); quantisation of both operands happens *inside* the
+    kernel, in VMEM, so HBM only ever sees the fp source once;
+  * Eq. 10's flag-aware mantissa multiply + shift is folded into the stored
+    integer (q = m << (shift*flag)), so each K-block contributes one int8xint8
+    -> int32 MXU matmul (exact), scaled by the two power-of-two shared
+    exponents (Eq. 7) and accumulated in an fp32 VMEM scratch — the paper's
+    "FP adder" for inter-block partial sums;
+  * the paper's carry-chain sparse adder has no MXU analogue (documented in
+    DESIGN.md); its spirit — never spill partial sums — is kept by
+    accumulating across the K grid dimension in VMEM scratch.
+
+Validated against ``ref.bbfp_matmul_ref`` in interpret mode (CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bbfp as B
+
+KBLOCK = B.DEFAULT_BLOCK  # 32
+
+
+def _exponent_tile(x):
+    """floor(log2|x|) for fp32 x via bit tricks (no frexp in Mosaic)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    e = jnp.where(x == 0.0, B._EXP_MIN, e)
+    return jnp.clip(e, B._EXP_MIN, B._EXP_MAX)
+
+
+def _quantize_kblocks(x, m: int, o: int, kind: str):
+    """Quantise (R, TK) tile along K in blocks of KBLOCK.
+
+    Returns (q, scale): q int32 (R, TK) with flag folded in (sign applied),
+    scale fp32 (R, TK//KBLOCK) power of two such that x ~= q * scale per block.
+    """
+    r, tk = x.shape
+    nb = tk // KBLOCK
+    xb = x.reshape(r, nb, KBLOCK).astype(jnp.float32)
+    if kind == "int":
+        # symmetric absmax int baseline (float per-block scale)
+        amax = jnp.max(jnp.abs(xb), axis=-1)
+        scale = jnp.where(amax == 0, 1.0, amax / (2 ** (m - 1) - 1))
+        q = jnp.clip(jnp.round(xb / scale[..., None]),
+                     -(2 ** (m - 1) - 1), 2 ** (m - 1) - 1)
+        return q.reshape(r, tk).astype(jnp.int32), scale
+    e = _exponent_tile(xb)
+    e_max = jnp.max(e, axis=-1)
+    if kind == "bfp":
+        e_s = e_max
+        flag = jnp.zeros_like(e)
+        shift = 0
+    else:
+        shift = m - o
+        e_s = jnp.clip(e_max - shift, B._EXP_MIN, B._EXP_MAX)
+        flag = (e > e_s[..., None]).astype(jnp.int32)
+    step = jnp.exp2((e_s[..., None] - m + 1 + flag * shift).astype(jnp.float32))
+    q = jnp.clip(jnp.round(jnp.abs(xb) / step), 0, 2**m - 1)
+    q = jnp.where(xb < 0, -q, q) * jnp.exp2((flag * shift).astype(jnp.float32))
+    scale = jnp.exp2((e_s - m + 1).astype(jnp.float32))
+    return q.reshape(r, tk).astype(jnp.int32), scale
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, m, o, kind, n_k, int8_path):
+    """Grid = (M/TM, N/TN, K/TK); K innermost for accumulation."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    bT = b_ref[...].T  # (TN, TK): quantise B along its K dim
+    qa, sa = _quantize_kblocks(a, m, o, kind)       # (TM, TK), (TM, nb)
+    qb, sb = _quantize_kblocks(bT, m, o, kind)      # (TN, TK), (TN, nb)
+    tk = a.shape[-1]
+    nb = tk // KBLOCK
+    acc = acc_ref[...]
+    for blk in range(nb):
+        sl = slice(blk * KBLOCK, (blk + 1) * KBLOCK)
+        if int8_path:
+            # int8 x int8 -> int32 MXU dot (exact for |q| <= 127)
+            prod = jax.lax.dot_general(
+                qa[:, sl].astype(jnp.int8), qb[:, sl].astype(jnp.int8),
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+            prod = prod.astype(jnp.float32)
+        else:
+            prod = jax.lax.dot_general(
+                qa[:, sl].astype(jnp.float32), qb[:, sl].astype(jnp.float32),
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        acc = acc + prod * sa[:, blk][:, None] * sb[:, blk][None, :]
+    acc_ref[...] = acc
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "tm", "tn", "tk", "interpret"))
+def bbfp_matmul(a: jax.Array, b: jax.Array, fmt_name: str = "BBFP(4,2)",
+                tm: int = 128, tn: int = 128, tk: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """C = Q(a) @ Q(b) with in-kernel BBFP quantisation of both operands.
+
+    a: (M, K) fp, b: (K, N) fp. M, N, K must be multiples of the tile sizes
+    (the ops.py wrapper pads).
+    """
+    fmt = B.parse_format(fmt_name)
+    m_, k_ = a.shape
+    k2_, n_ = b.shape
+    assert k_ == k2_ and m_ % tm == 0 and n_ % tn == 0 and k_ % tk == 0, (
+        (a.shape, b.shape, tm, tn, tk))
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n_k = k_ // tk
+    int8_path = B.folded_max(fmt) <= 127
+    kernel = functools.partial(
+        _matmul_kernel, m=fmt.mantissa, o=fmt.overlap, kind=fmt.kind,
+        n_k=n_k, int8_path=int8_path)
+    grid = (m_ // tm, n_ // tn, n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_, n_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: flash attention with the BBFP segmented-LUT softmax
+FUSED into the tile loop (the paper's Fig. 6 unit living inside VMEM).
+
+Why this kernel exists (EXPERIMENTS.md §Perf): the dominant residual memory
+term of the BBFP serving cells is the LUT-exp quantisation chain on score
+tiles — ~20 elementwise ops that the CPU lowering materialises in HBM. On
+TPU they belong INSIDE the attention kernel: scores never leave VMEM, the
+64 KiB exp table is VMEM-resident, and HBM sees only q/k/v/out. This kernel
+is that fusion, validated (interpret mode) against the pure-jnp chunked
+online-softmax reference to fp32 tolerance.
+
+Grid: (batch*kv_heads*groups, Sq/TQ, Skv/TK), K innermost; m/l/acc carried
+in VMEM scratch across the K dimension (same pattern as bbfp_matmul).
+Causal tiles above the diagonal are masked (a production version would use
+a custom grid to skip them; the jnp path already does — §Perf C1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+
+NEG = -1e30
+
+
+def _lut_exp_tile(s, table, *, m, o, e_min, a_bits):
+    """exp(s) for s<=0 via the segmented LUT; blocks of 32 along the last
+    dim (the KV axis) — identical semantics to quant.qexp_for_online_softmax."""
+    r, c = s.shape
+    nb = c // B.DEFAULT_BLOCK
+    xb = s.reshape(r, nb, B.DEFAULT_BLOCK)
+    bits = jax.lax.bitcast_convert_type(xb.astype(jnp.float32), jnp.int32)
+    e = jnp.where(xb == 0.0, B._EXP_MIN, ((bits >> 23) & 0xFF) - 127)
+    e = jnp.clip(e, B._EXP_MIN, B._EXP_MAX)
+    e_s = jnp.clip(jnp.max(e, axis=-1) - (m - o), B._EXP_MIN, B._EXP_MAX)
+    flag = (e > e_s[..., None]).astype(jnp.int32)
+    step = jnp.exp2((e_s[..., None] - m + 1 + flag * (m - o)).astype(jnp.float32))
+    q = jnp.clip(jnp.round(jnp.abs(xb) / step), 0, 2**m - 1).astype(jnp.int32)
+    addr = q >> (m - a_bits)
+    sign_idx = (xb < 0).astype(jnp.int32)
+    n_exp, n_addr = table.shape[2], table.shape[3]
+    e_idx = jnp.clip(e_s[..., None] - e_min, 0, n_exp - 1)
+    comp = ((sign_idx * 2 + flag) * n_exp + e_idx) * n_addr + addr
+    y = jnp.take(table.reshape(-1), comp.reshape(r, c), axis=0)
+    return y
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale, causal, n_k, tq, tk, m_bits, o_bits, e_min, a_bits,
+                  exp_lo):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (TQ, hd)
+    k = k_ref[0].astype(jnp.float32)                 # (TK, hd)
+    v = v_ref[0].astype(jnp.float32)                 # (TK, hd_v)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        kpos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    shifted = jnp.maximum(s - m_new[:, None], exp_lo)   # bounded unit domain
+    p = _lut_exp_tile(shifted, tab_ref[...], m=m_bits, o=o_bits,
+                      e_min=e_min, a_bits=a_bits)
+    if causal:
+        p = jnp.where(kpos <= qpos, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "causal", "tq", "tk",
+                                             "interpret"))
+def flash_lut_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        fmt_name: str = "BBFP(10,5)", causal: bool = True,
+                        tq: int = 128, tk: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """out[bh, Sq, hd_v] = softmax_LUT(q k^T / sqrt(hd)) v, fused.
+
+    q: (BH, Sq, hd); k: (BH, Skv, hd); v: (BH, Skv, hd_v).
+    Sq % tq == 0, Skv % tk == 0, tk % 32 == 0 (LUT block).
+    """
+    fmt = B.parse_format(fmt_name)
+    spec = NL.get_lut("exp", fmt)
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    hd_v = v.shape[2]
+    assert sq % tq == 0 and skv % tk == 0 and tk % B.DEFAULT_BLOCK == 0
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n_k = skv // tk
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (hd ** 0.5), causal=causal, n_k=n_k,
+        tq=tq, tk=tk, m_bits=fmt.mantissa, o_bits=fmt.overlap,
+        e_min=spec.e_min, a_bits=NL.ADDRESS_BITS, exp_lo=NL.EXP_LUT_RANGE)
+    grid = (bh, sq // tq, n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, hd_v), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec(spec.table.shape, lambda b, i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, hd_v), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd_v), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),       # running max
+            pltpu.VMEM((tq,), jnp.float32),       # running sum
+            pltpu.VMEM((tq, hd_v), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, spec.table)

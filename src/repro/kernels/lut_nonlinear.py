@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: exponent-segmented LUT nonlinear apply (§IV.B).
+
+The whole table bank (2 signs x 2 flags x 32 exponents x 128 addresses fp32
+= 64 KiB) fits in VMEM, so the paper's "load the sub-table for the block's
+shared exponent from external memory, pipelined" becomes: the table rides in
+as a whole-array BlockSpec block (grid-invariant -> fetched once), and each
+(8, 128)-lane data tile does quantise -> composite-index -> in-VMEM gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+
+
+def _lut_kernel(x_ref, tab_ref, o_ref, *, m, o, kind, e_min, a_bits):
+    x = x_ref[...].astype(jnp.float32)
+    r, c = x.shape
+    nb = c // B.DEFAULT_BLOCK
+    xb = x.reshape(r, nb, B.DEFAULT_BLOCK)
+    bits = jax.lax.bitcast_convert_type(xb, jnp.int32)
+    e = jnp.where(xb == 0.0, B._EXP_MIN, ((bits >> 23) & 0xFF) - 127)
+    e = jnp.clip(e, B._EXP_MIN, B._EXP_MAX)
+    e_max = jnp.max(e, axis=-1)
+    shift = (m - o) if kind == "bbfp" else 0
+    e_s = jnp.clip(e_max - shift, B._EXP_MIN, B._EXP_MAX)
+    flag = (e > e_s[..., None]).astype(jnp.int32) if kind == "bbfp" else jnp.zeros_like(e)
+    step = jnp.exp2((e_s[..., None] - m + 1 + flag * shift).astype(jnp.float32))
+    q = jnp.clip(jnp.round(jnp.abs(xb) / step), 0, 2**m - 1).astype(jnp.int32)
+    addr = q >> (m - a_bits)
+    sign_idx = (xb < 0).astype(jnp.int32)
+    n_exp = tab_ref.shape[2]
+    n_addr = tab_ref.shape[3]
+    e_idx = jnp.clip(e_s[..., None] - e_min, 0, n_exp - 1)
+    comp = ((sign_idx * 2 + flag) * n_exp + e_idx) * n_addr + addr
+    flat = tab_ref[...].reshape(-1)
+    y = jnp.take(flat, comp.reshape(r, c), axis=0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fn_name", "fmt_name", "tr", "tc", "interpret"))
+def lut_apply_kernel(x: jax.Array, fn_name: str = "exp",
+                     fmt_name: str = "BBFP(10,5)",
+                     tr: int = 8, tc: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """Elementwise f(x) via the segmented LUT. x: (R, C), C % block == 0.
+    The ops.py wrapper handles reshaping/padding of arbitrary tensors."""
+    fmt = B.parse_format(fmt_name)
+    spec = NL.get_lut(fn_name, fmt)
+    r_, c_ = x.shape
+    assert r_ % tr == 0 and c_ % tc == 0 and tc % B.DEFAULT_BLOCK == 0, (x.shape, tr, tc)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    kernel = functools.partial(
+        _lut_kernel, m=fmt.mantissa, o=fmt.overlap, kind=fmt.kind,
+        e_min=spec.e_min, a_bits=NL.ADDRESS_BITS)
+    grid = (r_ // tr, c_ // tc)
+    tab = spec.table
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec(tab.shape, lambda i, j: (0, 0, 0, 0)),  # whole table, VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r_, c_), x.dtype),
+        interpret=interpret,
+    )(x, tab)

@@ -1,0 +1,62 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle arbitrary leading dims + padding, pick interpret mode on CPU,
+and fall back to the jnp reference when shapes are too small to tile (the
+reference *is* the same arithmetic, so this is purely a dispatch decision).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bbfp as B
+from repro.kernels import ref as _ref
+from repro.kernels.bbfp_matmul import bbfp_matmul as _matmul_kernel_call
+from repro.kernels.lut_nonlinear import lut_apply_kernel
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x
+
+
+def bbfp_matmul(a: jax.Array, b: jax.Array, fmt_name: str = "BBFP(4,2)",
+                use_kernel: bool = True) -> jax.Array:
+    """C[..., M, N] = Q(a)[..., M, K] @ Q(b)[K, N] in BBFP arithmetic.
+
+    K-block boundaries (32) align between the kernel's 128-wide K tiles and
+    the reference's whole-K blocking, so kernel == ref exactly.
+    """
+    *lead, m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
+    a2 = a.reshape(-1, k_dim)
+    rows = a2.shape[0]
+    if not use_kernel or rows * n_dim < 128 * 128:
+        out = _ref.bbfp_matmul_ref(a2, b, fmt_name)
+        return out.reshape(*lead, m_dim, n_dim)
+    a2 = _pad_axis(_pad_axis(a2, 128, 0), 128, 1)
+    b2 = _pad_axis(_pad_axis(b, 128, 0), 128, 1)
+    out = _matmul_kernel_call(a2, b2, fmt_name)[:rows, :n_dim]
+    return out.reshape(*lead, m_dim, n_dim)
+
+
+def lut_apply(x: jax.Array, fn_name: str, fmt_name: str = "BBFP(10,5)",
+              use_kernel: bool = True) -> jax.Array:
+    """Elementwise segmented-LUT f(x). Blocks of 32 run along the LAST dim of
+    x (zero-padded tail block), matching the reference oracle exactly."""
+    if not use_kernel or x.size < 8 * 512 or x.ndim == 0:
+        return _ref.lut_apply_ref(x, fn_name, fmt_name)
+    c = x.shape[-1]
+    x2 = x.reshape(-1, c)
+    rows = x2.shape[0]
+    # pad C to a multiple of 32 (ref does the same inside _to_blocks), then to
+    # the 512 tile width; extra zero-blocks are stripped after the call.
+    x2 = _pad_axis(_pad_axis(x2, 32, 1), 512, 1)
+    x2 = _pad_axis(x2, 8, 0)
+    y = lut_apply_kernel(x2, fn_name, fmt_name, tr=8, tc=512)
+    y = y[:rows, :c]
+    return y.reshape(x.shape)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+
+
+def bbfp_matmul_ref(a: jax.Array, b: jax.Array, fmt_name: str = "BBFP(4,2)") -> jax.Array:
+    """Block-quantise both operands along K, then exact fp32 matmul of the
+    dequantised values — identical arithmetic to the kernel's scaled integer
+    dot (both are exact in fp32 for our mantissa ranges)."""
+    fmt = B.parse_format(fmt_name)
+    return B.bbfp_matmul_ref(a, b, fmt)
+
+
+def lut_apply_ref(x: jax.Array, fn_name: str = "exp",
+                  fmt_name: str = "BBFP(10,5)") -> jax.Array:
+    fmt = B.parse_format(fmt_name)
+    return NL.lut_apply(x, NL.get_lut(fn_name, fmt))
+
+
+def quantize_ref(x: jax.Array, fmt_name: str = "BBFP(4,2)"):
+    """Blocked int decomposition oracle: returns (q, scale)."""
+    fmt = B.parse_format(fmt_name)
+    return B.to_int_repr(x, fmt)

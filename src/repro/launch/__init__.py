@@ -1,0 +1,3 @@
+"""Launch layer: meshes, sharding rules, input-shape cells, dry-run,
+trainers and the serving driver. dryrun.py is the multi-pod proof:
+lower+compile every (arch x shape) on the 16x16 and 2x16x16 meshes."""

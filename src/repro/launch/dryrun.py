@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                    # noqa: E402
+from repro.launch import hlo_analysis as H   # noqa: E402
+from repro.launch import sharding as S       # noqa: E402
+from repro.launch import specs as SP         # noqa: E402
+from repro.launch import steps as ST         # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import partitioning as PT  # noqa: E402
+from repro.optim import adamw as O           # noqa: E402
+from repro.quant import linear as Q          # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, quant: str = "paper"):
+    """Lower + compile one (arch x shape x mesh) cell. Returns result dict."""
+    cfg_full = configs.full_config(arch)
+    ok, why = SP.cell_supported(cfg_full, shape_name)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    packed = quant.endswith("-packed")
+    base_quant = quant.replace("-packed", "")
+    if base_quant == "paper":
+        qcfg = Q.PAPER
+    elif base_quant == "fp":
+        qcfg = Q.FP
+    else:
+        qcfg = Q.QuantConfig(linear=base_quant, nonlinear="BBFP(10,5)")
+    if packed:  # weights pre-quantised offline (quant.packed): acts only
+        qcfg = Q.QuantConfig(linear=qcfg.linear, nonlinear=qcfg.nonlinear,
+                             quantize_weights=False)
+    sh = SP.SHAPES[shape_name]
+    kind = sh["kind"]
+    t0 = time.time()
+    long_ctx = sh["batch"] == 1
+    act_rules = PT.LONG_RULES if long_ctx else (
+        PT.TRAIN_RULES if kind == "train" else PT.SERVE_RULES)
+
+    if kind == "train":
+        cfg = cfg_full
+        ocfg = O.AdamWConfig()
+        step = ST.make_train_step(cfg, ocfg, qcfg, remat=True)
+        pshapes = SP.param_specs(cfg)
+        state_shapes = jax.eval_shape(
+            lambda p: {"params": p, "opt": O.adamw_init(p)}, pshapes)
+        psh = S.param_shardings(pshapes, mesh, "train")
+        state_sh = {"params": psh,
+                    "opt": {"mu": psh, "nu": psh,
+                            "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}}
+        batch_shapes = SP.input_specs(cfg, shape_name)
+        bsh = S.batch_shardings(batch_shapes, mesh)
+        with PT.activation_sharding(mesh, act_rules):
+            lowered = jax.jit(step, in_shardings=(state_sh, bsh),
+                              donate_argnums=(0,)).lower(state_shapes, batch_shapes)
+    else:
+        cfg = SP.serve_config(cfg_full)
+        pshapes = SP.param_specs(cfg)
+        if packed:
+            from repro.core import bbfp as B
+            from repro.quant import packed as PK
+            fmt = B.parse_format(qcfg.linear)
+            pshapes = jax.eval_shape(lambda p: PK.pack_params(p, fmt), pshapes)
+        psh = S.param_shardings(pshapes, mesh, "serve")
+        batch_shapes = SP.input_specs(cfg, shape_name)
+        bsh = S.batch_shardings(batch_shapes, mesh)
+        with PT.activation_sharding(mesh, act_rules):
+            if kind == "prefill":
+                step = ST.make_prefill_step(cfg, qcfg)
+                lowered = jax.jit(step, in_shardings=(psh, bsh)).lower(pshapes, batch_shapes)
+            else:
+                step = ST.make_decode_step(cfg, qcfg)
+                cshapes = SP.cache_specs(cfg, shape_name)
+                csh = S.cache_shardings(cshapes, mesh)
+                lowered = jax.jit(step, in_shardings=(psh, csh, bsh),
+                                  donate_argnums=(1,)).lower(pshapes, cshapes, batch_shapes)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    cost = H.analyze(txt, total_devices=n_chips)
+    terms = H.roofline_terms(cost, n_chips)
+    res = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant": quant,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "xla_cost_analysis": {"flops": ca.get("flops"),
+                              "bytes": ca.get("bytes accessed")},
+        "memory": _mem_analysis(compiled),
+        "roofline": terms,
+        "hlo_lines": txt.count("\n"),
+    }
+    return res
+
+
+def cell_key(arch, shape, meshname, quant):
+    return f"{arch}|{shape}|{meshname}|{quant}"
+
+
+def run_cells(cells, out_path=RESULTS, force=False):
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    for arch, shape, multi_pod, quant in cells:
+        meshname = "multi" if multi_pod else "single"
+        key = cell_key(arch, shape, meshname, quant)
+        if key in results and results[key].get("status") in ("ok", "skipped") and not force:
+            print(f"[cached] {key}")
+            continue
+        print(f"[lower+compile] {key} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, multi_pod, quant)
+        except Exception as e:
+            traceback.print_exc()
+            res = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+        results[key] = res
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+        if res["status"] == "ok":
+            r = res["roofline"]
+            print(f"  ok: compile {res['compile_s']}s  "
+                  f"compute {r['compute_s']:.2e}s  memory {r['memory_s']:.2e}s  "
+                  f"collective {r['collective_s']:.2e}s", flush=True)
+        else:
+            print(f"  {res['status']}: {res.get('reason', res.get('error',''))}",
+                  flush=True)
+    return results
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(SP.SHAPES) + [None])
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--quant", default="paper")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--out", default=RESULTS)
+    args = p.parse_args()
+
+    archs = [a.replace("_", "-") for a in configs.ARCHS if a != "llama7b"] \
+        if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SP.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multi"]
+    cells = [(a, s, m, args.quant) for a in archs for s in shapes for m in meshes]
+    run_cells(cells, args.out, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,368 @@
+"""Post-SPMD HLO text analyzer for the roofline terms.
+
+XLA's compiled.cost_analysis() visits each instruction ONCE — a scan-over-80-
+layers model reports 1/80th of the real FLOPs (verified). This module parses
+``compiled.as_text()`` and rolls the call graph up properly:
+
+  * dot FLOPs = 2 * numel(result) * prod(contracting dims)  (per instruction)
+  * elementwise/reduce FLOPs ~= numel(result)
+  * while bodies multiply by the trip count recovered from the loop-condition
+    constant (scan emits `compare(counter, constant(N)), direction=LT`)
+  * fusions contribute their interior FLOPs but only their *boundary* bytes
+    (fused interiors never touch HBM)
+  * collective bytes follow ring-algorithm wire-cost conventions:
+      all-reduce 2*s*(n-1)/n | all-gather / reduce-scatter / all-to-all
+      s*(n-1)/n | collective-permute s,   with n = replica-group size.
+
+Outputs feed EXPERIMENTS.md §Roofline directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"calls=(%?[\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%?[\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "floor",
+    "ceil", "round-nearest-even", "round-nearest-afz", "sign", "compare",
+    "select", "and", "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "clamp", "convert", "exponential-minus-one",
+    "log-plus-one", "logistic", "reduce", "reduce-window", "cbrt", "atan2",
+    "remainder",
+}
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "reshape", "broadcast",
+}
+# copy/transpose DO move bytes in a partitioned program (SPMD resharding
+# materialises them); costed as read+write of the result.
+_MOVE_OPS = {"copy", "copy-start", "copy-done", "transpose"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every shape literal in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_numel_bytes(result: str) -> tuple[int, int]:
+    numel, byt = 0, 0
+    for dt, dims in _SHAPE_RE.findall(result):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        byt += n * _DTYPE_BYTES[dt]
+    return numel, byt
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f):
+        return Cost(self.flops * f, self.bytes * f, self.coll_bytes * f,
+                    {k: v * f for k, v in self.coll_by_kind.items()})
+
+
+# result type is either a tuple "(f32[..], /*index=5*/ s32[..], ...)" (no
+# nested parens; may contain "=" inside /*index=N*/ comments) or a bare shape.
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota v2 format [ngroups,group_size]
+        return max(1, int(m.group(2)))
+    return default
+
+
+def parse_computations(hlo_text: str) -> dict:
+    """name -> list of instruction lines."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?[^{]*\{\s*$", line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Loop bound from the condition computation: the constant compared
+    against the induction variable."""
+    cands = []
+    for ln in cond_lines:
+        for c in _CONST_RE.findall(ln):
+            v = int(c)
+            if 1 <= v <= 10**7:
+                cands.append(v)
+    return max(cands) if cands else 1
+
+
+def analyze(hlo_text: str, total_devices: int = 1, on_cost=None) -> Cost:
+    """on_cost(op_label, result_str, Cost, multiplier) is called per
+    instruction when provided (hlo_census builds its buckets from it)."""
+    comps = parse_computations(hlo_text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    if m:
+        entry = m.group(1)
+    else:  # fall back to last computation
+        entry = list(comps)[-1]
+
+    # name -> result-shape string, per computation (operands are printed
+    # without shapes in modern HLO text)
+    shapes: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        d = {}
+        for line in lines:
+            mi = _INSTR_RE.match(line)
+            if mi:
+                d[mi.group(1)] = mi.group(2)
+        # parameters are declared in the computation signature; recover them
+        shapes[cname] = d
+
+    memo: dict[str, Cost] = {}
+
+    def operand_info(cname: str, line: str) -> list:
+        """(bytes, numel) of each named operand."""
+        body = line.split("(", 1)[1] if "(" in line else ""
+        body = body.split("), ")[0]
+        out = []
+        for nm in _OPERAND_RE.findall(body):
+            s = shapes[cname].get(nm)
+            if s:
+                n, b = _result_numel_bytes(s)
+                out.append((b, n))
+        return out
+
+    def operand_bytes(cname: str, line: str) -> int:
+        return sum(b for b, _ in operand_info(cname, line))
+
+    def comp_cost(name: str, depth=0) -> Cost:
+        name = name.lstrip("%")
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # break cycles defensively
+        total = Cost()
+        for line in comps.get(name, []):
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            _nm, result, op = mi.group(1), mi.group(2), mi.group(3)
+            numel, rbytes = _result_numel_bytes(result)
+            if op == "while":
+                mw = _WHILE_RE.search(line)
+                if mw:
+                    cond, body = mw.group(1), mw.group(2)
+                    trips = _trip_count(comps.get(cond.lstrip("%"), []))
+                    total += comp_cost(body, depth + 1).scaled(trips)
+                continue
+            if op == "conditional":
+                mb = _BRANCHES_RE.search(line)
+                if mb:
+                    branch_costs = [comp_cost(b.strip(), depth + 1)
+                                    for b in mb.group(1).split(",")]
+                    if branch_costs:
+                        total += max(branch_costs, key=lambda c: c.flops)
+                continue
+            if op in ("call", "async-start"):
+                mc = _TO_APPLY_RE.search(line) or _CALLS_RE.search(line)
+                if mc:
+                    total += comp_cost(mc.group(1), depth + 1)
+                continue
+            if op == "fusion":
+                mc = _CALLS_RE.search(line)
+                if mc:
+                    inner = comp_cost(mc.group(1), depth + 1)
+                    # interior flops count; interior bytes don't touch HBM
+                    total += Cost(flops=inner.flops,
+                                  coll_bytes=inner.coll_bytes,
+                                  coll_by_kind=dict(inner.coll_by_kind))
+                ob_list = operand_info(name, line)
+                ob = sum(b for b, _ in ob_list)
+                # in-place update pattern: a LARGE operand aliases the result
+                # numel-wise (scan-carried cache/weight buffers); only the
+                # delta moves. Guard: the aliased operand must dominate the
+                # fusion (>=8x the rest) so ordinary elementwise fusions
+                # keep the full boundary cost.
+                aliased = [b for b, n in ob_list if n == numel and n > 0]
+                rest = ob - (max(aliased) if aliased else 0)
+                if aliased and rest * 8 <= max(aliased):
+                    total += Cost(bytes=2.0 * rest + min(rbytes, 4 * rest))
+                else:
+                    total += Cost(bytes=rbytes + ob)
+                continue
+            if op in _ZERO_COST:
+                continue
+            if op in _MOVE_OPS:
+                total += Cost(bytes=2.0 * rbytes)
+                continue
+            base = op.replace("-start", "") if op.endswith("-start") else op
+            if base in _COLLECTIVES or base in ("all-reduce", "all-gather",
+                                                "reduce-scatter", "all-to-all",
+                                                "collective-permute"):
+                n = _group_size(line, total_devices)
+                # wire bytes per participating device (ring conventions)
+                if base.startswith("all-reduce"):
+                    wire = 2.0 * rbytes * (n - 1) / max(n, 1)
+                elif base == "collective-permute":
+                    wire = float(rbytes)
+                else:
+                    wire = float(rbytes) * (n - 1) / max(n, 1)
+                total += Cost(bytes=rbytes * 2.0, coll_bytes=wire,
+                              coll_by_kind={base: wire})
+                continue
+            if op == "dynamic-update-slice":
+                # in-place update: traffic = read+write of the UPDATE region,
+                # not the whole buffer (XLA aliases the result).
+                body = line.split("(", 1)[1]
+                ops_ = _OPERAND_RE.findall(body)
+                upd = shapes[name].get(ops_[1]) if len(ops_) > 1 else None
+                ub = _shape_bytes(upd) if upd else rbytes
+                total += Cost(bytes=2.0 * ub)
+                continue
+            if op in ("dynamic-slice", "gather"):
+                # reads only the sliced/gathered region, not the operand
+                total += Cost(bytes=2.0 * rbytes)
+                continue
+            if op == "scatter":
+                # in-place: traffic ~ the non-buffer operands (indices+updates)
+                ob_list = [b for b, _ in operand_info(name, line)]
+                total += Cost(bytes=2.0 * (sum(ob_list) - max(ob_list))
+                              if ob_list else float(rbytes))
+                continue
+            op_bytes = rbytes + operand_bytes(name, line)
+            if op in ("dot", "dot-general"):
+                k = _dot_contract_size(name, line, shapes)
+                total += Cost(flops=2.0 * numel * k, bytes=op_bytes)
+            elif op == "convolution":
+                k = _conv_kernel_size(line)
+                total += Cost(flops=2.0 * numel * k, bytes=op_bytes)
+            elif base in _ELEMENTWISE:
+                total += Cost(flops=float(numel), bytes=op_bytes)
+            else:
+                total += Cost(bytes=op_bytes)
+        memo[name] = total
+        return total
+
+    return comp_cost(entry)
+
+
+def _dot_contract_size(cname: str, line: str, shapes) -> int:
+    """prod of lhs contracting dims (lhs shape looked up by operand name)."""
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if not mdims:
+        return 1
+    # first operand name inside dot(...)
+    body = line.split("dot(", 1)[-1]
+    ops = _OPERAND_RE.findall(body)
+    shape_str = None
+    if ops:
+        shape_str = shapes[cname].get(ops[0])
+    if shape_str is None:
+        m = re.search(r"dot\(\s*(\w+\[[\d,]*\])", line)  # legacy typed form
+        shape_str = m.group(1) if m else None
+    if shape_str is None:
+        return 1
+    found = _SHAPE_RE.findall(shape_str)
+    if not found:
+        return 1
+    _, dims = found[0]
+    shape = [int(d) for d in dims.split(",") if d]
+    k = 1
+    for i in (int(x) for x in mdims.group(1).split(",") if x):
+        if i < len(shape):
+            k *= shape[i]
+    return k
+
+
+def _conv_kernel_size(line: str) -> int:
+    shapes = _SHAPE_RE.findall(line.split("convolution(")[-1])
+    if len(shapes) >= 2:
+        _, dims = shapes[1]
+        k = 1
+        for d in dims.split(","):
+            if d:
+                k *= int(d)
+        return max(1, k // 1)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9  # ~50 GB/s/link
+
+
+def roofline_terms(cost: Cost, n_chips: int) -> dict:
+    """The three §Roofline terms, in seconds. `cost` is whole-program
+    (per-replica SPMD program == per-chip work for flops/bytes; coll_bytes is
+    already per-device wire bytes)."""
+    return {
+        "compute_s": cost.flops / PEAK_FLOPS_BF16,
+        "memory_s": cost.bytes / HBM_BW,
+        "collective_s": cost.coll_bytes / ICI_BW_PER_LINK,
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "coll_bytes": cost.coll_bytes,
+        "coll_by_kind": dict(cost.coll_by_kind),
+    }

@@ -1,0 +1,129 @@
+"""Per-op cost census over the rolled-up HLO call graph — the 'profiler'
+for the dry-run perf loop (§Perf). Buckets (op kind, result shape) by bytes
+and flops with while-loop trip multiplication.
+
+Costing rules MIRROR hlo_analysis.analyze (keep in sync): in-place dus /
+dynamic-slice / gather / scatter cost only the moved region; fusions whose
+result aliases a dominant operand (scan-carried buffers) cost the delta.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.launch import hlo_analysis as H
+
+
+def census(hlo_text: str, total_devices: int = 1):
+    comps = H.parse_computations(hlo_text)
+    import re
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    entry = m.group(1) if m else list(comps)[-1]
+
+    shapes = {}
+    for cname, lines in comps.items():
+        d = {}
+        for line in lines:
+            mi = H._INSTR_RE.match(line)
+            if mi:
+                d[mi.group(1)] = mi.group(2)
+        shapes[cname] = d
+
+    buckets = defaultdict(lambda: {"bytes": 0.0, "flops": 0.0, "count": 0.0})
+    stack = []
+
+    def operand_info(cname, line):
+        body = line.split("(", 1)[1] if "(" in line else ""
+        body = body.split("), ")[0]
+        out = []
+        for nm in H._OPERAND_RE.findall(body):
+            s = shapes[cname].get(nm)
+            if s:
+                n, b = H._result_numel_bytes(s)
+                out.append((b, n))
+        return out
+
+    def walk(name, mult, depth=0):
+        name = name.lstrip("%")
+        if depth > 40 or name in stack:
+            return
+        stack.append(name)
+        for line in comps.get(name, []):
+            mi = H._INSTR_RE.match(line)
+            if not mi:
+                continue
+            _nm, result, op = mi.groups()
+            numel, rbytes = H._result_numel_bytes(result)
+            if op == "while":
+                mw = H._WHILE_RE.search(line)
+                if mw:
+                    trips = H._trip_count(comps.get(mw.group(1).lstrip("%"), []))
+                    walk(mw.group(2), mult * trips, depth + 1)
+                continue
+            if op in ("call",):
+                mc = H._TO_APPLY_RE.search(line) or H._CALLS_RE.search(line)
+                if mc:
+                    walk(mc.group(1), mult, depth + 1)
+                continue
+            if op == "fusion":
+                mc = H._CALLS_RE.search(line)
+                key = "fusion"
+                if mc:
+                    inner = comps.get(mc.group(1).lstrip("%"), [])
+                    kinds = sorted({H._INSTR_RE.match(l).group(3)
+                                    for l in inner if H._INSTR_RE.match(l)}
+                                   - H._ZERO_COST)
+                    key = f"fusion[{','.join(kinds[:4])}]"
+                    walk(mc.group(1), mult, depth + 1)
+                oi = operand_info(name, line)
+                ob = sum(b for b, _ in oi)
+                aliased = [b for b, n in oi if n == numel and n > 0]
+                rest = ob - (max(aliased) if aliased else 0)
+                if aliased and rest * 8 <= max(aliased):
+                    byt = 2.0 * rest + min(rbytes, 4 * rest)
+                else:
+                    byt = rbytes + ob
+                b = buckets[(key, result[:48])]
+                b["bytes"] += mult * byt
+                b["count"] += mult
+                continue
+            if op in H._ZERO_COST:
+                continue
+            base = op.replace("-start", "")
+            if base in H._COLLECTIVES or base in (
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"):
+                b = buckets[(op, result[:48])]
+                b["bytes"] += mult * rbytes * 2.0
+                b["count"] += mult
+                continue
+            b = buckets[(op, result[:48])]
+            if op == "dynamic-update-slice":
+                oi = operand_info(name, line)
+                ub = oi[1][0] if len(oi) > 1 else rbytes
+                b["bytes"] += mult * 2.0 * ub
+            elif op in ("dynamic-slice", "gather"):
+                b["bytes"] += mult * 2.0 * rbytes
+            elif op == "scatter":
+                oi = [x for x, _ in operand_info(name, line)]
+                b["bytes"] += mult * (2.0 * (sum(oi) - max(oi)) if oi else rbytes)
+            else:
+                b["bytes"] += mult * (rbytes + sum(x for x, _ in operand_info(name, line)))
+            b["count"] += mult
+            if op == "dot":
+                k = H._dot_contract_size(name, line, shapes)
+                b["flops"] += mult * 2.0 * numel * k
+            elif base in H._ELEMENTWISE:
+                b["flops"] += mult * numel
+        stack.pop()
+
+    walk(entry, 1.0)
+    return buckets
+
+
+def top(buckets, by="bytes", n=25):
+    rows = sorted(buckets.items(), key=lambda kv: -kv[1][by])[:n]
+    out = []
+    for (op, shape), v in rows:
+        out.append(f"{v[by]:.3e}  {op:40s} {shape:48s} x{v['count']:.0f} "
+                   f"(flops {v['flops']:.2e})")
+    return out

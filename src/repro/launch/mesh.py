@@ -1,0 +1,31 @@
+"""Production meshes. A FUNCTION (not module-level state) so importing this
+module never touches jax device initialisation."""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)           # 256 chips (TPU v5e pod slice)
+MULTI_POD = (2, 16, 16)         # 2 pods = 512 chips
+
+
+def _auto(axes):
+    return (jax.sharding.AxisType.Auto,) * len(axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+
+
+def make_host_mesh():
+    """Whatever this host actually has — used by tests/examples (1..N CPU
+    devices). data axis = all devices, model = 1."""
+    n = len(jax.devices())
+    axes = ("data", "model")
+    return jax.make_mesh((n, 1), axes, axis_types=_auto(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carry the global batch."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

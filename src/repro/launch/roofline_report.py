@@ -1,0 +1,120 @@
+"""Render results/dryrun.json into the EXPERIMENTS.md §Roofline table:
+three terms per (arch x shape), dominant bottleneck, MODEL_FLOPS ratio,
+and a one-line 'what would move the dominant term' note.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro import configs
+from repro.launch import specs as SP
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+
+CHIP_PEAK = 197e12
+N_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_per_chip(arch: str, shape: str, n_chips: int) -> float:
+    """MODEL_FLOPS: 6·N·D train / 2·N_active·D prefill / 2·N_active decode,
+    divided across chips."""
+    cfg = configs.full_config(arch)
+    n = cfg.param_count()
+    # active params for MoE (routed experts count only top_k/E of expert mass)
+    n_active = n
+    if cfg.moe:
+        m = cfg.moe
+        expert_params = (cfg.n_layers - m.first_dense) * m.n_experts * 3 * cfg.d_model * m.d_expert
+        n_active = n - expert_params * (1 - m.top_k / m.n_experts)
+    sh = SP.SHAPES[shape]
+    tokens = sh["batch"] * sh["seq"]
+    if sh["kind"] == "train":
+        total = 6.0 * n_active * tokens      # 6·N_active·D for MoE, 6·N·D dense
+    elif sh["kind"] == "prefill":
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * sh["batch"]
+    return total / n_chips
+
+
+def hint(dom: str, shape: str, arch: str) -> str:
+    if dom == "memory":
+        if "decode" in shape or "long" in shape:
+            return "KV/cache traffic dominates: shrink or shard the cache (ring buffers, grouped local/global caches), quantise KV to BBFP"
+        return "activation + quant-op traffic: chunked attention (never materialise S^2 probs), bf16 quant ops, fuse fake-quant into the matmul"
+    if dom == "collective":
+        return "reshard: reduce weight all-gather volume (bigger FSDP grain), overlap collectives with compute, compress cross-pod grads"
+    return "compute-bound: int8 MXU path for BBFP<=4 mantissas halves cycles vs bf16"
+
+
+def render(results_path: str = RESULTS, quant: str = "paper",
+           mesh: str = "16x16") -> str:
+    with open(results_path) as f:
+        res = json.load(f)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPs/HLO | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    meshname = "single" if mesh == "16x16" else "multi"
+    for arch in [a.replace("_", "-") for a in configs.ARCHS if a != "llama7b"]:
+        for shape in SP.SHAPES:
+            key = f"{arch}|{shape}|{meshname}|{quant}"
+            r = res.get(key)
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | {r['reason'][:40]} |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | ERROR | — | {r.get('error','')[:40]} |")
+                continue
+            t = r["roofline"]
+            terms = {"compute": t["compute_s"], "memory": t["memory_s"],
+                     "collective": t["collective_s"]}
+            dom = max(terms, key=terms.get)
+            mf = model_flops_per_chip(arch, shape, r["n_chips"])
+            ratio = mf / max(t["flops"], 1.0)
+            lines.append(
+                f"| {arch} | {shape} | {terms['compute']:.2e} | "
+                f"{terms['memory']:.2e} | {terms['collective']:.2e} | {dom} | "
+                f"{ratio:.2f} | {hint(dom, shape, arch)[:80]} |")
+    return "\n".join(lines)
+
+
+def summary(results_path: str = RESULTS, quant: str = "paper"):
+    """Pick hillclimb candidates: worst roofline fraction, most
+    collective-bound, most paper-representative."""
+    with open(results_path) as f:
+        res = json.load(f)
+    rows = []
+    for key, r in res.items():
+        if r.get("status") != "ok" or f"|{quant}" not in key:
+            continue
+        arch, shape, meshname, _ = key.split("|")
+        if meshname != "single":
+            continue
+        t = r["roofline"]
+        mf = model_flops_per_chip(arch, shape, r["n_chips"])
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = (mf / CHIP_PEAK) / max(bound, 1e-12)  # useful-compute fraction
+        rows.append({"arch": arch, "shape": shape, "frac": frac,
+                     "coll_ratio": t["collective_s"] / max(bound, 1e-12),
+                     "terms": (t["compute_s"], t["memory_s"], t["collective_s"])})
+    rows.sort(key=lambda r: r["frac"])
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16"])
+    p.add_argument("--quant", default="paper")
+    args = p.parse_args()
+    print(render(mesh=args.mesh, quant=args.quant))
+    print("\nWorst useful-compute fractions (hillclimb candidates):")
+    for r in summary(quant=args.quant)[:8]:
+        print(f"  {r['arch']:24s} {r['shape']:12s} frac={r['frac']:.4f} "
+              f"coll_share={r['coll_ratio']:.2f}")

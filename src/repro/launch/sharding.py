@@ -1,0 +1,185 @@
+"""Sharding rules: param path -> PartitionSpec.
+
+Train  = FSDP x TP ("ZeRO-3 via GSPMD"): each weight's TP dim is sharded
+         over "model" and its other large dim over "data"; SPMD inserts the
+         per-layer weight all-gathers. Batch rides ("pod","data"); the pod
+         axis is pure DP (params replicated across pods, one gradient
+         all-reduce crossing pods per step).
+Serve  = TP over "model" only (weights replicated over "data"/"pod";
+         batch sharded over ("pod","data")).
+
+MoE expert weights put the expert dim on "model" (expert parallelism; the
+dispatch gather/scatter become all-to-alls). Scan-stacked params have a
+leading n_layers dim which always stays unsharded (the scan slices it).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(shape, dim, mesh, axis):
+    return shape[dim] % _axis_size(mesh, axis) == 0 and _axis_size(mesh, axis) > 1
+
+
+# (regex on path, TP dim from the right, FSDP dim from the right)
+# dims are negative indices into shape; None = no dim of that kind.
+# NOTE path leaves: MoE banks are bare arrays ("ffn/w_gate"); dense layers
+# nest a dict ("ffn/w_gate/w").
+_RULES = [
+    # MoE expert banks: (L, E, d, f) / (L, E, f, d): EP on E, FSDP on d.
+    # (/q, /scale: packed serving form — same layout, same specs)
+    (re.compile(r"ffn/w_(gate|up)(/(q|scale))?$"),
+     {4: (-1, -2), 3: (-1, -2), 2: (-1, -2)}),
+    (re.compile(r"ffn/w_down(/(q|scale))?$"),
+     {4: (-2, -1), 3: (-2, -1), 2: (-2, -1)}),
+    # dense gated MLPs anywhere (decoder ffn, shared experts, griffin, whisper)
+    (re.compile(r"w_(gate|up)/(w|q|scale)$"), {3: (-1, -2), 2: (-1, -2)}),
+    (re.compile(r"w_down/(w|q|scale)$"), {3: (-2, -1), 2: (-2, -1)}),
+    # attention projections
+    (re.compile(r"(wq|wk|wv|w_dkv|w_uk|w_uv|in_proj|proj_x|proj_gate|wa|wx)/(w|q|scale)$"),
+     {3: (-1, -2), 2: (-1, -2)}),
+    (re.compile(r"(wo|out_proj|proj_out)/(w|q|scale)$"), {3: (-2, -1), 2: (-2, -1)}),
+    # embeddings: TP on vocab, FSDP on d
+    (re.compile(r"embed/w$"), {2: (-2, -1)}),
+    (re.compile(r"(lm_head)/w$"), {2: (-1, -2)}),
+    (re.compile(r"(enc_pos|dec_pos)/w$"), {2: (None, -1)}),
+]
+
+_MOE_EP = re.compile(r"ffn/w_(gate|up|down)(/(q|scale))?$")
+
+
+def path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_spec(path: str, shape, mesh, mode: str) -> P:
+    """mode: 'train' (FSDP x TP) or 'serve' (TP only)."""
+    rank = len(shape)
+    spec = [None] * rank
+    matched = None
+    for rex, table in _RULES:
+        if rex.search(path) and rank in table:
+            matched = table[rank]
+            break
+    if matched is None:
+        # fallback: FSDP-shard the biggest divisible dim in train mode
+        if mode == "train" and rank >= 1:
+            order = sorted(range(rank), key=lambda i: -shape[i])
+            for dim in order:
+                if shape[dim] >= 1024 and _fits(shape, dim, mesh, "data"):
+                    spec[dim] = "data"
+                    break
+        return P(*spec)
+
+    tp_dim, fsdp_dim = matched
+    is_moe_bank = _MOE_EP.search(path) and rank >= 3
+    if is_moe_bank:
+        # expert dim = rank-3 (after optional leading L)
+        e_dim = rank - 3
+        if _fits(shape, e_dim, mesh, "model"):
+            spec[e_dim] = "model"
+        if mode == "train" and fsdp_dim is not None and _fits(shape, fsdp_dim, mesh, "data"):
+            spec[fsdp_dim % rank] = "data"
+        return P(*spec)
+
+    if tp_dim is not None and _fits(shape, tp_dim, mesh, "model"):
+        spec[tp_dim % rank] = "model"
+    if mode == "train" and fsdp_dim is not None:
+        d = fsdp_dim % rank
+        if spec[d] is None and _fits(shape, d, mesh, "data"):
+            spec[d] = "data"
+    return P(*spec)
+
+
+def param_shardings(param_shapes, mesh, mode: str):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStruct."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(path_str(path), leaf.shape, mesh, mode)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_spec(shape, mesh) -> P:
+    """Shard dim0 (global batch) over the batch axes when divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if shape and shape[0] % n == 0 and n > 1:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P()
+
+
+def batch_shardings(batch_shapes, mesh):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)), batch_shapes)
+
+
+def cache_spec(path: str, shape, mesh, batch_dim: int = 1) -> P:
+    """KV/state caches: batch over ("pod","data") when divisible, else the
+    time/sequence dim over "data" (long-context, batch=1).
+
+    For GQA k/v caches (..., B, T, KH, hd) the "model" axis goes on KH when
+    divisible; otherwise on T (*sequence-parallel KV*): attention then runs
+    with sharded keys — per-chip partial scores plus tiny max/sum/output
+    all-reduces — instead of resharding the whole cache every layer to chase
+    the q-head layout (the 'involuntary full remat' the SPMD partitioner
+    warned about; §Perf iteration A)."""
+    rank = len(shape)
+    spec = [None] * rank
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    if rank > batch_dim and shape[batch_dim] % nb == 0 and nb > 1:
+        spec[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+        data_used = True
+    else:
+        data_used = False
+
+    from repro.perf_flags import enabled
+    leaf = path.rsplit("/", 1)[-1]
+    is_kv = leaf in ("k", "v") and rank >= batch_dim + 4 and enabled("seqkv_cache")
+    t_dim = batch_dim + 1
+    if is_kv:
+        kh_dim = rank - 2
+        if _fits(shape, kh_dim, mesh, "model"):
+            spec[kh_dim] = "model"
+        elif _fits(shape, t_dim, mesh, "model") and shape[t_dim] >= 2048:
+            spec[t_dim] = "model"            # sequence-parallel KV cache
+        elif _fits(shape, rank - 1, mesh, "model"):
+            spec[rank - 1] = "model"
+    else:
+        # model axis on a feature dim (from the right, largest divisible)
+        for dim in range(rank - 1, batch_dim, -1):
+            if spec[dim] is None and _fits(shape, dim, mesh, "model") and shape[dim] >= 16:
+                spec[dim] = "model"
+                break
+    # long-context: put seq on "data" if the batch couldn't use it
+    if not data_used and rank > t_dim:
+        if spec[t_dim] is None and _fits(shape, t_dim, mesh, "data") and shape[t_dim] >= 4096:
+            spec[t_dim] = "data"
+        elif spec[t_dim] == "model" and shape[t_dim] % (mesh.shape["model"] * _axis_size(mesh, "data")) == 0:
+            spec[t_dim] = ("data", "model")   # 2D sequence-parallel cache
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        ps = path_str(path)
+        if leaf.ndim == 0 or ps.endswith("pos"):
+            out.append(NamedSharding(mesh, P()))
+        else:
+            out.append(NamedSharding(mesh, cache_spec(ps, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)

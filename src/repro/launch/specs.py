@@ -1,0 +1,80 @@
+"""Input shape cells: ShapeDtypeStruct stand-ins for every (arch x shape).
+
+Shapes (assigned, LM family — seq_len x global_batch):
+  train_4k     4,096 x 256   (training:   train_step)
+  prefill_32k  32,768 x 32   (inference:  prefill_step)
+  decode_32k   32,768 x 128  (decode:     serve_step, KV cache of seq_len)
+  long_500k    524,288 x 1   (long decode; SSM/hybrid/local-attn only)
+
+The skip table lives in DESIGN.md §6 and is enforced by `cell_supported`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import common as C
+from repro.models import model as M
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# archs allowed to run long_500k (sub-quadratic / bounded-window attention)
+LONG_OK = {"mamba2-2.7b", "recurrentgemma-2b", "gemma3-4b"}
+
+
+def cell_supported(cfg: C.ArchConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "pure full attention — long_500k skipped (DESIGN.md §6)"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: C.ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs for the step's *data* inputs (params/cache handled
+    separately by the dry-run via eval_shape)."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    if kind == "train":
+        batch = {"tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32)}
+        if cfg.vis_len:
+            batch["vis_embed"] = sds((b, cfg.vis_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "whisper":
+            batch["frames"] = sds((b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    if kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.vis_len:
+            batch["vis_embed"] = sds((b, cfg.vis_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "whisper":
+            batch["frames"] = sds((b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of capacity s
+    return {"tokens": sds((b, 1), jnp.int32)}
+
+
+def cache_specs(cfg: C.ArchConfig, shape_name: str):
+    """eval_shape of init_cache with pos=seq-1 semantics."""
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(lambda: M.init_cache(cfg, sh["batch"], sh["seq"]))
+
+
+def param_specs(cfg: C.ArchConfig):
+    return jax.eval_shape(
+        lambda k: M.init(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def serve_config(cfg: C.ArchConfig) -> C.ArchConfig:
+    """bf16 weights on the serving path."""
+    return dataclasses.replace(cfg, param_dtype=jnp.bfloat16)

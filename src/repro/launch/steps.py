@@ -1,0 +1,58 @@
+"""jit-able step functions (train / prefill / decode) shared by the dry-run,
+the trainers and the examples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw as O
+from repro.optim import compression as GC
+from repro.quant import linear as Q
+
+
+def make_train_step(cfg, ocfg: O.AdamWConfig, qcfg: Q.QuantConfig,
+                    compress_grads: bool = False, remat: bool = True):
+    """state = {"params","opt"[,"err"]}; batch = {"tokens","labels",...}.
+
+    Gradient mean across the sharded batch falls out of autodiff under jit
+    (GSPMD inserts the reduce); the optional int8+error-feedback compression
+    emulates the compressed cross-pod all-reduce (see optim.compression).
+    """
+
+    def train_step(state, batch):
+        def lossf(p):
+            return M.loss_fn(p, cfg, batch, qcfg, remat=remat)
+        (loss, metrics), grads = jax.value_and_grad(lossf, has_aux=True)(state["params"])
+        if compress_grads:
+            grads, err = GC.compress_gradients(grads, state["err"])
+        params, opt, om = O.adamw_update(ocfg, state["params"], grads, state["opt"])
+        new_state = {"params": params, "opt": opt}
+        if compress_grads:
+            new_state["err"] = err
+        return new_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_init_state(cfg, ocfg, key, compress_grads: bool = False):
+    params = M.init(cfg, key)
+    state = {"params": params, "opt": O.adamw_init(params)}
+    if compress_grads:
+        state["err"] = GC.compression_init(params)
+    return state
+
+
+def make_prefill_step(cfg, qcfg: Q.QuantConfig, max_len: int | None = None):
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k in ("vis_embed", "frames")}
+        return M.prefill(params, cfg, batch["tokens"], qcfg, max_len=max_len, **extras)
+    return prefill_step
+
+
+def make_decode_step(cfg, qcfg: Q.QuantConfig):
+    def decode_step(params, cache, batch):
+        return M.decode_step(params, cfg, cache, batch["tokens"], qcfg)
+    return decode_step

@@ -1,0 +1,6 @@
+"""Model zoo: decoder (dense/GQA/MLA/MoE/VLM), mamba2 (SSD), griffin
+(RG-LRU), whisper (enc-dec) — all quant-aware through repro.quant."""
+from repro.models.common import (  # noqa: F401
+    ArchConfig, MoEConfig, MLAConfig, SSMConfig, GriffinConfig, EncoderConfig,
+)
+from repro.models import model  # noqa: F401

@@ -1,0 +1,309 @@
+"""Attention: GQA (with local/global windows), MLA (DeepSeek), caches.
+
+Three execution regimes, all quant-aware:
+  * full     — materialised scores; used when S_kv <= FULL_ATTN_MAX. The
+               softmax goes through the paper's segmented-LUT unit when
+               qcfg.nonlinear is set.
+  * chunked  — two-level online softmax (q-chunks x kv-chunks) for long
+               prefill; O(chunk^2) activation memory. exp() still comes from
+               the LUT unit; the running rescale stays fp32.
+  * decode   — single query position against a pre-allocated cache, written
+               at `pos` via dynamic_update_slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.quant import linear as Q
+
+FULL_ATTN_MAX = 4096
+Q_CHUNK = 2048
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: C.ArchConfig) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": C.dense_init(ks[0], d, h * hd, cfg.qkv_bias, cfg.param_dtype),
+        "wk": C.dense_init(ks[1], d, kh * hd, cfg.qkv_bias, cfg.param_dtype),
+        "wv": C.dense_init(ks[2], d, kh * hd, cfg.qkv_bias, cfg.param_dtype),
+        "wo": C.dense_init(ks[3], h * hd, d, False, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = C.rmsnorm_init(hd, cfg.param_dtype)
+        p["k_norm"] = C.rmsnorm_init(hd, cfg.param_dtype)
+    return p
+
+
+def mla_init(key, cfg: C.ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": C.dense_init(ks[0], d, h * (m.qk_nope_dim + m.qk_rope_dim),
+                           False, cfg.param_dtype),
+        "w_dkv": C.dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_dim,
+                              False, cfg.param_dtype),
+        "ckv_norm": C.rmsnorm_init(m.kv_lora_rank, cfg.param_dtype),
+        "w_uk": C.dense_init(ks[2], m.kv_lora_rank, h * m.qk_nope_dim,
+                             False, cfg.param_dtype),
+        "w_uv": C.dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim,
+                             False, cfg.param_dtype),
+        "wo": C.dense_init(ks[4], h * m.v_head_dim, d, False, cfg.param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# score/mask helpers
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, causal: bool, window) -> jax.Array:
+    """(..., Sq, Sk) bool validity mask. window: 0/None = unbounded."""
+    m = jnp.ones(q_pos.shape + k_pos.shape, bool)
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window          # window is traced-scalar friendly
+    return m
+
+
+def _full_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
+    """q: (B,Sq,KH,G,hd); k,v: (B,Sk,KH,hd)."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * scale
+    mask = _mask(q_pos, k_pos, causal, window)
+    probs = Q.qsoftmax(scores.astype(jnp.float32), qcfg, axis=-1, where=mask)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
+    """Two-level online softmax. Shapes as _full_attention; supports
+    v head_dim != q head_dim (MLA) and non-divisible sequence lengths
+    (padded; pad keys get position 2^30 so the causal mask kills them)."""
+    b, sq_orig, kh, g, hd = q.shape
+    sk_orig = k.shape[1]
+    qc = min(Q_CHUNK, sq_orig)
+    kc = min(KV_CHUNK, sk_orig)
+
+    def pad_seq(x, mult, axis, pos=None):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x, pos
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+        if pos is not None:
+            pos = jnp.concatenate([pos, jnp.full((pad,), 1 << 30, pos.dtype)])
+        return x, pos
+
+    q, q_pos = pad_seq(q, qc, 1, q_pos if q_pos.ndim else None)
+    k, k_pos = pad_seq(k, kc, 1, k_pos)
+    v, _ = pad_seq(v, kc, 1)
+    sq, sk = q.shape[1], k.shape[1]
+    hd_v = v.shape[-1]
+    n_qc, n_kc = sq // qc, sk // kc
+    # static positions let us bound the causal/window KV range per q-chunk
+    static_pos = sq == sk and q_pos is not None
+
+    def q_chunk_body(qi):
+        qs = q_pos[qi * qc:(qi + 1) * qc] if q_pos.ndim else q_pos
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+
+        # §Perf H1 (causal chunk skip): q-chunk qi can only see kv chunks
+        # whose positions overlap [qi*qc - window + 1, (qi+1)*qc); skip the
+        # rest STATICALLY -> ~2x fewer attention tiles for causal prefill.
+        from repro.perf_flags import enabled
+        k_lo, k_hi = 0, n_kc
+        if enabled("causal_skip"):
+            if static_pos and causal:
+                k_hi = min(n_kc, ((qi + 1) * qc + kc - 1) // kc)
+            if static_pos and window is not None and isinstance(window, int):
+                k_lo = max(0, (qi * qc - window + 1) // kc)
+        n_live = k_hi - k_lo
+
+        def kv_body(carry, ki):
+            m_run, l_run, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+            ks_ = jax.lax.dynamic_slice_in_dim(k_pos, ki * kc, kc, axis=0)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32) * scale
+            msk = _mask(qs, ks_, causal, window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            # LUT exp on the (<=0) shifted scores; rescale stays exact fp32
+            p = Q.qexp_for_online_softmax(s - m_new[..., None], qcfg)
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v.dtype), v_blk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, hd_v), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                          jnp.arange(k_lo, k_hi), length=n_live)
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return jnp.einsum("bkgqd->bqkgd", out)
+
+    outs = [q_chunk_body(i) for i in range(n_qc)]   # unrolled q chunks
+    return jnp.concatenate(outs, axis=1)[:, :sq_orig].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
+              positions, causal=True, window=None, cache=None, pos=None,
+              kv_override=None, ring_positions=None):
+    """x: (B,S,d). Returns (out, new_cache).
+
+    cache: {"k": (B,T,KH,hd), "v": ...} pre-allocated; pos: current write
+    index (decode). kv_override: (k, v, k_positions) for cross-attention.
+    ring_positions: (true_pos, capacity) when the cache is a ring buffer —
+    `pos` is then the write SLOT and validity is true_pos-based (every live
+    slot holds one of the last `capacity` positions).
+    """
+    b, s, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = cfg.q_per_kv
+    dt = x.dtype
+
+    xq, pre = Q.qact_shared(x, qcfg)          # q/k/v share one quantisation
+    q = Q.qlinear(params["wq"], xq, qcfg, x_prequantized=pre).reshape(b, s, h, hd)
+    if kv_override is None:
+        k = Q.qlinear(params["wk"], xq, qcfg, x_prequantized=pre).reshape(b, s, kh, hd)
+        v = Q.qlinear(params["wv"], xq, qcfg, x_prequantized=pre).reshape(b, s, kh, hd)
+    else:
+        k, v, _ = kv_override
+
+    if cfg.qk_norm:
+        q = C.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        if kv_override is None:
+            k = C.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    if kv_override is None and positions is not None:
+        cos, sin = C.rope_tables(positions, hd, cfg.rope_theta)
+        q = C.apply_rope(q, cos, sin)
+        k = C.apply_rope(k, cos, sin)
+
+    new_cache = cache
+    if cache is not None and kv_override is None:
+        # BBFP KV cache (serving): values land on the storage grid at write
+        k_st = Q.qkv_cache(k, qcfg).astype(cache["k"].dtype)
+        v_st = Q.qkv_cache(v, qcfg).astype(cache["v"].dtype)
+        if pos is not None:   # decode: write this step's k/v at pos
+            k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_st, pos, axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_st, pos, axis=1)
+            new_cache = {"k": k_all, "v": v_all}
+            k, v = k_all.astype(dt), v_all.astype(dt)
+            k_pos = jnp.arange(cache["k"].shape[1])
+        else:                 # prefill: cache <- computed k/v
+            new_cache = {"k": k_st, "v": v_st}
+            k_pos = jnp.arange(s)
+    elif kv_override is not None:
+        k_pos = kv_override[2]
+    else:
+        k_pos = jnp.arange(s)
+
+    q_grp = q.reshape(b, s, kh, g, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s_kv = k.shape[1]
+    if pos is not None:
+        # decode: mask by pos (cache beyond pos is garbage)
+        if ring_positions is not None:
+            true_pos, _cap = ring_positions
+            valid = k_pos <= true_pos          # slot j first written at step j
+        else:
+            eff_window = window if window is not None else s_kv + 1
+            valid = (k_pos <= pos) & (k_pos > pos - eff_window)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q_grp, k).astype(jnp.float32) * scale
+        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=valid[None, None, None, None, :])
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(dt), v)
+    elif s_kv <= FULL_ATTN_MAX:
+        out = _full_attention(q_grp, k, v, positions if positions is not None else jnp.arange(s),
+                              k_pos, causal, window, scale, qcfg)
+    else:
+        out = _chunked_attention(q_grp, k, v, positions if positions is not None else jnp.arange(s),
+                                 k_pos, causal, window, scale, qcfg)
+    out = out.reshape(b, s, h * hd).astype(dt)
+    return Q.qlinear(params["wo"], out, qcfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (DeepSeek-V2): compressed-KV attention
+# ---------------------------------------------------------------------------
+
+def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
+              positions, cache=None, pos=None):
+    """Prefill/train: materialise k,v from the compressed cache.
+    Decode: absorbed form — scores directly against the (B,T,lora) cache."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dt = x.dtype
+    nope, rope_d, lora, vdim = m.qk_nope_dim, m.qk_rope_dim, m.kv_lora_rank, m.v_head_dim
+
+    xq, pre = Q.qact_shared(x, qcfg)          # wq/w_dkv share one quantisation
+    q = Q.qlinear(params["wq"], xq, qcfg, x_prequantized=pre).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = Q.qlinear(params["w_dkv"], xq, qcfg, x_prequantized=pre)
+    ckv = C.rmsnorm(params["ckv_norm"], dkv[..., :lora], cfg.norm_eps)   # (B,S,lora)
+    k_rope = dkv[..., lora:].reshape(b, s, 1, rope_d)
+
+    cos, sin = C.rope_tables(positions, rope_d, cfg.rope_theta)
+    q_rope = C.apply_rope(q_rope, cos, sin)
+    k_rope = C.apply_rope(k_rope, cos, sin)[:, :, 0]                     # (B,S,rope)
+
+    scale = 1.0 / jnp.sqrt(nope + rope_d).astype(jnp.float32)
+    new_cache = cache
+
+    if pos is not None:
+        # MLA's compressed latent is NOT quantised: it feeds both k_nope and
+        # v through learned up-projections, which amplify quantisation error
+        # ~4x vs a plain KV cache (measured; DESIGN.md §5). The latent is
+        # already 4.5x smaller than a GQA cache, so the win is small anyway.
+        ckv_st = ckv.astype(cache["ckv"].dtype)
+        kr_st = k_rope.astype(cache["krope"].dtype)
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_st, pos, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_st, pos, axis=1)
+        new_cache = {"ckv": ckv_all, "krope": kr_all}
+        t = ckv_all.shape[1]
+        # absorbed attention: q_nope -> lora space via w_uk
+        w_uk = params["w_uk"]["w"].reshape(lora, h, nope).astype(dt)
+        q_lora = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)              # (B,1,H,lora)
+        s_nope = jnp.einsum("bqhl,btl->bhqt", q_lora, ckv_all.astype(dt))
+        s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope, kr_all.astype(dt))
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        valid = jnp.arange(t) <= pos
+        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=valid[None, None, None, :])
+        ctx = jnp.einsum("bhqt,btl->bqhl", probs.astype(dt), ckv_all.astype(dt))
+        w_uv = params["w_uv"]["w"].reshape(lora, h, vdim).astype(dt)
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
+    else:
+        if cache is not None:
+            new_cache = {"ckv": ckv.astype(cache["ckv"].dtype),
+                         "krope": k_rope.astype(cache["krope"].dtype)}
+        k_nope = Q.qlinear(params["w_uk"], ckv, qcfg).reshape(b, s, h, nope)
+        v = Q.qlinear(params["w_uv"], ckv, qcfg).reshape(b, s, h, vdim)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, rope_d))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1).reshape(b, s, h, 1, nope + rope_d)
+        if s <= FULL_ATTN_MAX:
+            out = _full_attention(qq, k, v, positions, jnp.arange(s), True, None, scale, qcfg)
+        else:
+            out = _chunked_attention(qq, k, v, positions, jnp.arange(s), True, None, scale, qcfg)
+        out = out.reshape(b, s, h, vdim)
+
+    out = out.reshape(b, s, h * vdim).astype(dt)
+    return Q.qlinear(params["wo"], out, qcfg), new_cache

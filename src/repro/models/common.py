@@ -1,0 +1,153 @@
+"""Shared model plumbing: ArchConfig, param init helpers, norms, RoPE."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int               # per-expert FFN hidden dim
+    n_shared: int = 0           # shared (always-on) experts
+    d_shared: int = 0           # hidden dim of the shared expert MLP
+    capacity_factor: float = 1.25
+    first_dense: int = 0        # leading layers that use a dense FFN instead
+    d_ff_dense: int = 0         # hidden dim of those dense layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:                 # Mamba-2 SSD
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig:             # RecurrentGemma
+    lru_width: int = 2560
+    conv_width: int = 4
+    window: int = 2048
+    pattern: tuple = ("rec", "rec", "attn")   # repeating block pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:             # whisper-style encoder (frontend stubbed)
+    n_layers: int = 4
+    n_frames: int = 1500         # precomputed frame embeddings (stub)
+    max_dec_pos: int = 32768     # learned decoder position table size
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # decoder | mamba2 | griffin | whisper
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    act: str = "silu"            # silu | gelu
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False    # gemma: embeddings scaled by sqrt(d)
+    post_norm: bool = False      # gemma3 sandwich norms
+    # local/global attention: window size + period ("5:1" -> every 6th global)
+    sliding_window: int = 0      # 0 = all-global
+    global_every: int = 0        # 0 = all layers local (if window) / all global
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    griffin: Optional[GriffinConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vis_len: int = 0             # VLM: number of stub patch embeddings
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def layer_is_global(self, i: int) -> bool:
+        """Attention span of layer i under the local:global pattern."""
+        if self.sliding_window == 0:
+            return True
+        if self.global_every == 0:
+            return False
+        return (i % self.global_every) == (self.global_every - 1)
+
+    def param_count(self) -> int:
+        """Exact parameter count from the init shapes."""
+        from repro.models import model as M
+        shapes = jax.eval_shape(lambda k: M.init(self, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# small functional layers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> dict:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """cos/sin tables for positions (...,). Returns (cos, sin) (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (S, D/2) (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)   # (S, 1, D/2) broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def stacked_init(fn, key, n: int):
+    """vmap a per-layer init over n layers -> stacked params for lax.scan."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)

@@ -1,0 +1,308 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local-MQA attention,
+repeating pattern (rec, rec, attn). Each layer = temporal block + gated MLP.
+
+Layers are period-stacked for lax.scan (one period = the 3-layer pattern);
+the non-divisible tail is unrolled. RG-LRU runs as an associative scan
+(log-depth on TPU); the recurrence itself stays fp32 (DESIGN.md §5), the
+projections are BBFP-quantised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import ffn as F
+from repro.models.partitioning import constrain
+from repro.quant import linear as Q
+
+RGLRU_C = 8.0
+
+
+def _pattern_counts(cfg):
+    p = cfg.griffin.pattern
+    n_periods = cfg.n_layers // len(p)
+    tail = cfg.n_layers - n_periods * len(p)
+    return p, n_periods, tail
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _rec_init(key, cfg: C.ArchConfig) -> dict:
+    g = cfg.griffin
+    d, w = cfg.d_model, g.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": C.rmsnorm_init(d, cfg.param_dtype),
+        "proj_x": C.dense_init(ks[0], d, w, False, cfg.param_dtype),
+        "proj_gate": C.dense_init(ks[1], d, w, False, cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[2], (g.conv_width, w)) * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((w,), cfg.param_dtype),
+        "wa": C.dense_init(ks[3], w, w, True, cfg.param_dtype),
+        "wx": C.dense_init(ks[4], w, w, True, cfg.param_dtype),
+        "lam": (jax.random.uniform(ks[5], (w,), minval=2.0, maxval=5.0)
+                ).astype(cfg.param_dtype),  # sigmoid(lam)^c in (0.88..0.99)^8
+        "proj_out": C.dense_init(ks[5], w, d, False, cfg.param_dtype),
+    }
+
+
+def _rglru(lp, x, qcfg, h0=None):
+    """x: (B,S,W). h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t).
+    Returns (y, h_last)."""
+    r = jax.nn.sigmoid(Q.qlinear(lp["wa"], x, qcfg).astype(jnp.float32))
+    i = jax.nn.sigmoid(Q.qlinear(lp["wx"], x, qcfg).astype(jnp.float32))
+    log_a = RGLRU_C * r * jax.nn.log_sigmoid(lp["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    if h0 is not None:  # single-step decode
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None].astype(x.dtype), h
+    # associative scan: (a2,b2) o (a1,b1) = (a1*a2, b1*a2 + b2)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hs.astype(x.dtype), hs[:, -1]
+
+
+def _rec_apply(lp, h, cfg, qcfg, conv_state=None, lru_state=None, decode=False):
+    h = constrain(h, "batch", "seq", None)
+    x = C.rmsnorm(lp["norm"], h, cfg.norm_eps)
+    branch = Q.qlinear(lp["proj_x"], x, qcfg)
+    gate = jax.nn.gelu(Q.qlinear(lp["proj_gate"], x, qcfg))
+    from repro.models.mamba2 import _conv1d
+    branch, new_conv = _conv1d(branch, lp["conv_w"], lp["conv_b"], conv_state)
+    y, h_last = _rglru(lp, branch, qcfg, h0=lru_state if decode else None)
+    out = Q.qlinear(lp["proj_out"], y * gate, qcfg)
+    return h + out, (new_conv, h_last)
+
+
+def _attn_init(key, cfg: C.ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": A.gqa_init(k1, cfg),
+    }
+
+
+def _attn_apply(lp, h, cfg, qcfg, positions, cache=None, pos=None):
+    h = constrain(h, "batch", "seq", None)
+    x = C.rmsnorm(lp["norm"], h, cfg.norm_eps)
+    out, nc = A.gqa_apply(lp["attn"], x, cfg, qcfg, positions=positions,
+                          causal=True, window=cfg.griffin.window,
+                          cache=cache, pos=pos)
+    return h + out, nc
+
+
+def _mlp_init(key, cfg):
+    return {"norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mlp": F.mlp_init(key, cfg)}
+
+
+def _mlp_apply(lp, h, cfg, qcfg):
+    return h + F.mlp_apply(lp["mlp"], C.rmsnorm(lp["norm"], h, cfg.norm_eps), cfg, qcfg)
+
+
+def _period_init(key, cfg) -> dict:
+    pat, _, _ = _pattern_counts(cfg)
+    p = {}
+    ks = jax.random.split(key, 2 * len(pat))
+    for j, kind in enumerate(pat):
+        tinit = _rec_init if kind == "rec" else _attn_init
+        p[f"t{j}"] = tinit(ks[2 * j], cfg)
+        p[f"m{j}"] = _mlp_init(ks[2 * j + 1], cfg)
+    return p
+
+
+def init(cfg: C.ArchConfig, key) -> dict:
+    pat, n_periods, tail = _pattern_counts(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "embed": {"w": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02
+                        ).astype(cfg.param_dtype)},
+        "periods": C.stacked_init(lambda k: _period_init(k, cfg), k2, n_periods),
+        "final_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if tail:
+        tks = jax.random.split(k3, tail)
+        params["tail"] = [{"t": _rec_init(tks[i], cfg), "m": _mlp_init(tks[i], cfg)}
+                          for i in range(tail)]  # tail layers are rec (pattern starts rec)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = C.dense_init(k4, cfg.d_model, cfg.vocab, False, cfg.param_dtype)
+    return params
+
+
+def _unembed(params, cfg, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["w"].T.astype(h.dtype)
+    return Q.qlinear(params["lm_head"], h, Q.FP)
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+def _zero_states(cfg, b, kv_len):
+    g = cfg.griffin
+    return {
+        "conv": jnp.zeros((b, g.conv_width - 1, g.lru_width), jnp.float32),
+        "lru": jnp.zeros((b, g.lru_width), jnp.float32),
+        "k": jnp.zeros((b, kv_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jnp.zeros((b, kv_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }
+
+
+def forward(params, cfg: C.ArchConfig, tokens, qcfg, remat=False, cache=None):
+    pat, n_periods, tail = _pattern_counts(cfg)
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(jnp.sqrt(cfg.d_model), h.dtype)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    want_cache = cache is not None
+    kv_len = s
+
+    def period_body(h, pp):
+        states = {}
+        for j, kind in enumerate(pat):
+            if kind == "rec":
+                h, (conv, lru) = _rec_apply(pp[f"t{j}"], h, cfg, qcfg)
+                states[f"conv{j}"], states[f"lru{j}"] = conv, lru
+            else:
+                kvc = {"k": jnp.zeros((b, kv_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                       "v": jnp.zeros((b, kv_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
+                h, nc = _attn_apply(pp[f"t{j}"], h, cfg, qcfg, positions,
+                                    cache=kvc if want_cache else None)
+                if want_cache:
+                    states[f"k{j}"], states[f"v{j}"] = nc["k"], nc["v"]
+            h = _mlp_apply(pp[f"m{j}"], h, cfg, qcfg)
+        return h, states if want_cache else None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    h, period_states = jax.lax.scan(body, h, params["periods"])
+
+    tail_states = []
+    for i in range(tail):
+        h, (conv, lru) = _rec_apply(params["tail"][i]["t"], h, cfg, qcfg)
+        h = _mlp_apply(params["tail"][i]["m"], h, cfg, qcfg)
+        tail_states.append({"conv": conv, "lru": lru})
+
+    h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _unembed(params, cfg, h)
+    new_cache = None
+    if want_cache:
+        new_cache = {"periods": period_states,
+                     "tail": tail_states,
+                     "pos": jnp.asarray(s, jnp.int32)}
+    return logits, new_cache, jnp.asarray(0.0, jnp.float32)
+
+
+def loss_fn(params, cfg, batch, qcfg, remat=True):
+    logits, _, _ = forward(params, cfg, batch["tokens"], qcfg, remat=remat)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def init_cache(cfg: C.ArchConfig, b: int, max_len: int):
+    """Attention caches are WINDOW-bounded (ring buffer) — this is what makes
+    long_500k decode sub-quadratic memory for this family."""
+    pat, n_periods, tail = _pattern_counts(cfg)
+    g = cfg.griffin
+    kv_len = min(max_len, g.window)
+    per = {}
+    for j, kind in enumerate(pat):
+        if kind == "rec":
+            per[f"conv{j}"] = jnp.zeros((n_periods, b, g.conv_width - 1, g.lru_width), jnp.float32)
+            per[f"lru{j}"] = jnp.zeros((n_periods, b, g.lru_width), jnp.float32)
+        else:
+            per[f"k{j}"] = jnp.zeros((n_periods, b, kv_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+            per[f"v{j}"] = jnp.zeros((n_periods, b, kv_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+    return {
+        "periods": per,
+        "tail": [{"conv": jnp.zeros((b, g.conv_width - 1, g.lru_width), jnp.float32),
+                  "lru": jnp.zeros((b, g.lru_width), jnp.float32)} for _ in range(tail)],
+        "pos": jnp.asarray(0, jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, qcfg, max_len=None, vis_embed=None):
+    """Prefill via forward; attention KV clipped to the window for decode."""
+    b, s = tokens.shape
+    logits, fwd_cache, _ = forward(params, cfg, tokens, qcfg, cache={})
+    pat, n_periods, tail = _pattern_counts(cfg)
+    g = cfg.griffin
+    max_len = max_len or s
+    cache = init_cache(cfg, b, max_len)
+    kv_len = min(max_len, g.window)
+    for j, kind in enumerate(pat):
+        if kind == "rec":
+            cache["periods"][f"conv{j}"] = fwd_cache["periods"][f"conv{j}"]
+            cache["periods"][f"lru{j}"] = fwd_cache["periods"][f"lru{j}"]
+        else:
+            # keep the last `window` positions, written at slot = pos % window
+            k_full = fwd_cache["periods"][f"k{j}"]
+            v_full = fwd_cache["periods"][f"v{j}"]
+            take = min(s, kv_len)
+            src = jnp.arange(s - take, s)
+            dst = src % kv_len
+            cache["periods"][f"k{j}"] = cache["periods"][f"k{j}"].at[:, :, dst].set(k_full[:, :, src])
+            cache["periods"][f"v{j}"] = cache["periods"][f"v{j}"].at[:, :, dst].set(v_full[:, :, src])
+    for i in range(tail):
+        cache["tail"][i] = fwd_cache["tail"][i]
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, cache, tokens, qcfg):
+    pat, n_periods, tail = _pattern_counts(cfg)
+    g = cfg.griffin
+    pos = cache["pos"]
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(jnp.sqrt(cfg.d_model), h.dtype)
+    positions = jnp.asarray(pos).reshape(1)
+    kv_len = jax.tree.leaves({k: v for k, v in cache["periods"].items() if k.startswith("k")})
+    kv_len = kv_len[0].shape[2] if kv_len else g.window
+
+    def body(h, xs):
+        pp, pc = xs
+        new_states = {}
+        for j, kind in enumerate(pat):
+            if kind == "rec":
+                h, (conv, lru) = _rec_apply(pp[f"t{j}"], h, cfg, qcfg,
+                                            conv_state=pc[f"conv{j}"],
+                                            lru_state=pc[f"lru{j}"], decode=True)
+                new_states[f"conv{j}"], new_states[f"lru{j}"] = conv, lru
+            else:
+                # ring-buffer write at pos % kv_len; all slots <= pos valid
+                slot = pos % kv_len
+                kvc = {"k": pc[f"k{j}"], "v": pc[f"v{j}"]}
+                x = C.rmsnorm(pp[f"t{j}"]["norm"], h, cfg.norm_eps)
+                out, nc = A.gqa_apply(pp[f"t{j}"]["attn"], x, cfg, qcfg,
+                                      positions=positions, causal=False,
+                                      window=None, cache=kvc, pos=slot,
+                                      ring_positions=(pos, kv_len))
+                h = h + out
+                new_states[f"k{j}"], new_states[f"v{j}"] = nc["k"], nc["v"]
+            h = _mlp_apply(pp[f"m{j}"], h, cfg, qcfg)
+        return h, new_states
+
+    h, new_period_states = jax.lax.scan(body, h, (params["periods"], cache["periods"]))
+
+    new_tail = []
+    for i in range(tail):
+        h, (conv, lru) = _rec_apply(params["tail"][i]["t"], h, cfg, qcfg,
+                                    conv_state=cache["tail"][i]["conv"],
+                                    lru_state=cache["tail"][i]["lru"], decode=True)
+        h = _mlp_apply(params["tail"][i]["m"], h, cfg, qcfg)
+        new_tail.append({"conv": conv, "lru": lru})
+
+    h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _unembed(params, cfg, h)[:, 0]
+    return logits, {"periods": new_period_states, "tail": new_tail, "pos": pos + 1}

@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD — state-space duality), chunked training + O(1) decode.
+
+Per layer: in_proj -> [z | xBC | dt]; causal conv(4) + SiLU on xBC;
+SSD scan over heads (scalar decay per head, state (P x N));
+y = SSD(x,B,C) + D*x;  out = out_proj(rmsnorm(y * silu(z))).
+
+BBFP applicability (DESIGN.md §5): projections and the intra-chunk GEMMs
+(C B^T and the score@x contraction) are block GEMMs -> quantised; the
+inter-chunk state recurrence stays fp32 (no block-GEMM structure).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.partitioning import constrain
+from repro.quant import linear as Q
+
+
+def _dims(cfg: C.ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def layer_init(key, cfg: C.ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": C.rmsnorm_init(d, cfg.param_dtype),
+        "in_proj": C.dense_init(ks[0], d, 2 * d_inner + 2 * s.n_groups * s.d_state + h,
+                                False, cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.1
+                   ).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(cfg.param_dtype),
+        "D": jnp.ones((h,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((h,), cfg.param_dtype),
+        "gate_norm": C.rmsnorm_init(d_inner, cfg.param_dtype),
+        "out_proj": C.dense_init(ks[2], d_inner, d, False, cfg.param_dtype),
+    }
+
+
+def init(cfg: C.ArchConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": {"w": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02
+                        ).astype(cfg.param_dtype)},
+        "layers": C.stacked_init(lambda k: layer_init(k, cfg), k2, cfg.n_layers),
+        "final_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "lm_head": C.dense_init(k3, cfg.d_model, cfg.vocab, False, cfg.param_dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, h, _ = _dims(cfg)
+    gN = s.n_groups * s.d_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * gN]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gN:]
+    return z, xBC, dt
+
+
+def _conv1d(xBC, w, b, state=None):
+    """Causal depthwise conv along seq. xBC: (B,S,C); w: (W,C).
+    state: (B,W-1,C) previous inputs (decode)."""
+    wdt = xBC.dtype
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], width - 1, xBC.shape[-1]), wdt)
+        xp = jnp.concatenate([pad, xBC], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(wdt), xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i].astype(wdt) for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(out + b.astype(wdt)), new_state
+
+
+def _ssd_chunked(x, Bm, Cm, dt, A, chunk, qcfg, h_init=None):
+    """SSD scan. x:(B,S,H,P), Bm/Cm:(B,S,N) (ngroups=1), dt:(B,S,H), A:(H,)>0.
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    b, s_len, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = s_len // chunk
+    assert s_len % chunk == 0, (s_len, chunk)
+    xr = x.reshape(b, nc, chunk, h, p)
+    Br = Bm.reshape(b, nc, chunk, n)
+    Cr = Cm.reshape(b, nc, chunk, n)
+    dtr = dt.reshape(b, nc, chunk, h)
+    # per-step log decay (negative): l_t = -dt_t * A
+    ldec = -dtr * A[None, None, None, :]                     # (B,nc,Q,H)
+    cum = jnp.cumsum(ldec, axis=2)                            # inclusive
+    h0 = h_init if h_init is not None else jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(hprev, idx):
+        xb = xr[:, idx]
+        Bb, Cb, dtb = Br[:, idx], Cr[:, idx], dtr[:, idx]
+        cumb = cum[:, idx]                                    # (B,Q,H)
+        # intra-chunk: scores[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s<=t
+        cbq = Q.qact(Cb.astype(jnp.float32), qcfg, axis=-1)
+        bbq = Q.qact(Bb.astype(jnp.float32), qcfg, axis=-1)
+        dots = jnp.einsum("btn,bsn->bts", cbq, bbq)           # (B,Q,Q)
+        ldiff = cumb[:, :, None, :] - cumb[:, None, :, :]     # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask BEFORE exp: above-diagonal ldiff is positive and can overflow,
+        # and grad(where(exp(inf))) = NaN
+        ldiff = jnp.where(causal[None, :, :, None], ldiff, -1e30)
+        gamma = jnp.exp(ldiff)
+        w_ts = dots[..., None] * gamma * dtb[:, None, :, :]   # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w_ts, xb.astype(jnp.float32))
+        # inter-chunk: y_t += C_t . (exp(cum_t) * h_prev)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", cbq, hprev, jnp.exp(cumb))
+        # state update: h = exp(cum_end) h_prev + sum_s exp(cum_end - cum_s) dt_s B_s x_s^T
+        dec_end = jnp.exp(cumb[:, -1])                        # (B,H)
+        carry_w = jnp.exp(cumb[:, -1:, :] - cumb) * dtb       # (B,Q,H)
+        h_new = (hprev * dec_end[:, :, None, None]
+                 + jnp.einsum("bsh,bsn,bshp->bhpn", carry_w, bbq, xb.astype(jnp.float32)))
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_fin, ys = jax.lax.scan(body, h0, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, h, p)
+    return y, h_fin
+
+
+def _layer_apply(lp, h_res, cfg, qcfg, conv_state=None, ssm_state=None):
+    """Full-sequence layer. Returns (h, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    h_res = constrain(h_res, "batch", "seq", None)
+    x_in = C.rmsnorm(lp["norm"], h_res, cfg.norm_eps)
+    zxbcdt = Q.qlinear(lp["in_proj"], x_in, qcfg)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC, new_conv = _conv1d(xBC, lp["conv_w"], lp["conv_b"], conv_state)
+    xs = xBC[..., :d_inner].reshape(*xBC.shape[:2], nheads, s.head_dim)
+    Bm = xBC[..., d_inner:d_inner + s.d_state]
+    Cm = xBC[..., d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, h_fin = _ssd_chunked(xs, Bm, Cm, dt, A, min(s.chunk, xs.shape[1]), qcfg,
+                            h_init=ssm_state)
+    y = y + xs * lp["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = C.rmsnorm(lp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = Q.qlinear(lp["out_proj"], y, qcfg)
+    return h_res + out, (new_conv, h_fin)
+
+
+def forward(params, cfg: C.ArchConfig, tokens, qcfg, remat=False, cache=None):
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)
+
+    def body(carry, lp):
+        h = carry
+        h, states = _layer_apply(lp, h, cfg, qcfg)
+        return h, states if cache is not None else None
+
+    scan_body = jax.checkpoint(body) if remat else body
+    h, states = jax.lax.scan(scan_body, h, params["layers"])
+    h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = Q.qlinear(params["lm_head"], h, Q.FP)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": states[0], "state": states[1],
+                     "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, new_cache, jnp.asarray(0.0, jnp.float32)
+
+
+def loss_fn(params, cfg, batch, qcfg, remat=True):
+    logits, _, _ = forward(params, cfg, batch["tokens"], qcfg, remat=remat)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def init_cache(cfg: C.ArchConfig, b: int, max_len: int):
+    s = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, b, s.conv_width - 1, conv_dim), jnp.float32),
+        "state": jnp.zeros((L, b, h, s.head_dim, s.d_state), jnp.float32),
+        "pos": jnp.asarray(0, jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, qcfg, max_len=None, vis_embed=None):
+    logits, cache, _ = forward(params, cfg, tokens, qcfg,
+                               cache=init_cache(cfg, tokens.shape[0], 0))
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, cache, tokens, qcfg):
+    """One step: state update h = a h + dt B x^T per head. tokens (B,1)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)  # (B,1,d)
+
+    def body(h, xs):
+        lp, conv_st, ssm_st = xs
+        x_in = C.rmsnorm(lp["norm"], h, cfg.norm_eps)
+        zxbcdt = Q.qlinear(lp["in_proj"], x_in, qcfg)
+        z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+        xBC, new_conv = _conv1d(xBC, lp["conv_w"], lp["conv_b"], conv_st)
+        xs_ = xBC[..., :d_inner].reshape(-1, nheads, s.head_dim)      # (B,H,P)
+        Bm = xBC[:, 0, d_inner:d_inner + s.d_state]                   # (B,N)
+        Cm = xBC[:, 0, d_inner + s.d_state:]
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+        A = jnp.exp(lp["A_log"].astype(jnp.float32))
+        a = jnp.exp(-dt * A)                                          # (B,H)
+        h_new = (ssm_st * a[:, :, None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32),
+                              xs_.astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h_new)
+        y = y + xs_.astype(jnp.float32) * lp["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(-1, 1, d_inner).astype(h.dtype)
+        y = C.rmsnorm(lp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+        out = Q.qlinear(lp["out_proj"], y, qcfg)
+        return h + out, (new_conv, h_new)
+
+    h, states = jax.lax.scan(body, h, (params["layers"], cache["conv"], cache["state"]))
+    h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = Q.qlinear(params["lm_head"], h, Q.FP)[:, 0]
+    return logits, {"conv": states[0], "state": states[1], "pos": cache["pos"] + 1}

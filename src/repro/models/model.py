@@ -1,0 +1,51 @@
+"""Family dispatch: one uniform API over all architectures.
+
+  init(cfg, key)                          -> params
+  loss_fn(params, cfg, batch, qcfg)       -> (loss, metrics)
+  forward(params, cfg, tokens, qcfg, ...) -> (logits, cache|None, aux)
+  init_cache(cfg, batch, max_len)         -> cache
+  prefill(params, cfg, tokens, qcfg, ...) -> (last logits, cache)
+  decode_step(params, cfg, cache, tok, qcfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.models import common as C
+from repro.models import griffin as G
+from repro.models import mamba2 as M2
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+_FAMILIES = {
+    "decoder": T,
+    "mamba2": M2,
+    "griffin": G,
+    "whisper": W,
+}
+
+
+def family_module(cfg: C.ArchConfig):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name}") from None
+
+
+def init(cfg, key):
+    return family_module(cfg).init(cfg, key)
+
+
+def loss_fn(params, cfg, batch, qcfg, remat=True):
+    return family_module(cfg).loss_fn(params, cfg, batch, qcfg, remat=remat)
+
+
+def init_cache(cfg, b, max_len):
+    return family_module(cfg).init_cache(cfg, b, max_len)
+
+
+def prefill(params, cfg, tokens, qcfg, max_len=None, **extras):
+    return family_module(cfg).prefill(params, cfg, tokens, qcfg,
+                                      max_len=max_len, **extras)
+
+
+def decode_step(params, cfg, cache, tokens, qcfg):
+    return family_module(cfg).decode_step(params, cfg, cache, tokens, qcfg)

@@ -1,0 +1,81 @@
+"""Logical-axis activation sharding constraints.
+
+Models call ``constrain(x, "batch", None, None)`` with *logical* axis names;
+the launcher binds logical axes to mesh axes for the current step kind
+(train / serve / long-context). Without a bound context, constrain is a
+no-op — models stay mesh-agnostic and run everywhere.
+
+Why this exists: with FSDP-sharded weights (d over "data") and batch-sharded
+inputs, GSPMD's cost model sometimes prefers resharding the *activations*
+onto the weight layout (replicating the batch!) over all-gathering weights.
+Anchoring the residual stream to P(batch-axes, ...) at layer boundaries pins
+the intended ZeRO-3 strategy (verified: 5x per-chip FLOP reduction on the
+internlm2 train cell).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "rules": {}}
+
+# default logical-axis bindings per step kind
+TRAIN_RULES = {"batch": ("pod", "data"), "heads": "model", "ff": "model",
+               "seq": None, "vocab": "model", "embed": None}
+SERVE_RULES = {"batch": ("pod", "data"), "heads": "model", "ff": "model",
+               "seq": None, "vocab": "model", "embed": None}
+LONG_RULES = {"batch": None, "heads": "model", "ff": "model",
+              "seq": "data", "vocab": "model", "embed": None}
+
+
+@contextmanager
+def activation_sharding(mesh, rules: dict):
+    """Bind mesh + logical rules for the duration of a trace."""
+    old = dict(_CTX)
+    _CTX["mesh"], _CTX["rules"] = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def resolve(mesh, rules, *logical) -> P:
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+            continue
+        ax = rules.get(name)
+        if ax is None:
+            parts.append(None)
+            continue
+        if isinstance(ax, tuple):
+            ax = tuple(a for a in ax if a in mesh.axis_names)
+            parts.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+        else:
+            parts.append(ax if ax in mesh.axis_names else None)
+    return P(*parts)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axis names (no-op w/o context).
+    A logical dim is applied only when the dim size divides the axis size."""
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None:
+        return x
+    spec = resolve(mesh, rules, *logical)
+    # divisibility guard: drop axes that don't divide
+    fixed = []
+    for dim, part in enumerate(spec):
+        if part is None:
+            fixed.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(part if x.shape[dim] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

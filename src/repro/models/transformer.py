@@ -1,0 +1,269 @@
+"""Decoder-family models: dense GQA, MoE, MLA, VLM-stub — one implementation.
+
+Layers are scan-stacked (params carry a leading n_layers dim) so the HLO stays
+small for 80-layer configs; per-layer heterogeneity (local/global windows,
+per-layer rope theta) rides in as scanned arrays, not separate code paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import ffn as F
+from repro.models.partitioning import constrain
+from repro.quant import linear as Q
+
+BIG_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: C.ArchConfig, dense_ff: int | None = None) -> dict:
+    ks = jax.random.split(key, 4)
+    attn = A.mla_init(ks[0], cfg) if cfg.mla else A.gqa_init(ks[0], cfg)
+    if cfg.moe and dense_ff is None:
+        ff = F.moe_init(ks[1], cfg)
+    else:
+        ff = F.mlp_init(ks[1], cfg, dense_ff)
+    p = {
+        "attn_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": attn,
+        "ffn_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ffn": ff,
+    }
+    if cfg.post_norm:
+        p["attn_post_norm"] = C.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+        p["ffn_post_norm"] = C.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    return p
+
+
+def init(cfg: C.ArchConfig, key) -> dict:
+    k_embed, k_layers, k_dense, k_head = jax.random.split(key, 4)
+    n_dense = cfg.moe.first_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    params = {
+        "embed": {"w": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02
+                        ).astype(cfg.param_dtype)},
+        "layers": C.stacked_init(lambda k: _layer_init(k, cfg), k_layers, n_scan),
+        "final_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if n_dense:
+        dks = jax.random.split(k_dense, n_dense)
+        params["dense_layers"] = [
+            _layer_init(dks[i], cfg, dense_ff=cfg.moe.d_ff_dense) for i in range(n_dense)]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = C.dense_init(k_head, cfg.d_model, cfg.vocab,
+                                         False, cfg.param_dtype)
+    return params
+
+
+def layer_windows(cfg: C.ArchConfig) -> jnp.ndarray:
+    """Per-scanned-layer attention window (BIG_WINDOW = global)."""
+    n_dense = cfg.moe.first_dense if cfg.moe else 0
+    ws = [BIG_WINDOW if cfg.layer_is_global(i + n_dense) else cfg.sliding_window
+          for i in range(cfg.n_layers - n_dense)]
+    return jnp.asarray(ws, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _layer_apply(lp, h, cfg, qcfg, *, positions, window, cache=None, pos=None,
+                 dense_ff=False):
+    h = constrain(h, "batch", "seq", None)   # pin ZeRO-3 batch sharding
+    attn_in = C.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+    if cfg.mla:
+        a_out, new_cache = A.mla_apply(lp["attn"], attn_in, cfg, qcfg,
+                                       positions=positions, cache=cache, pos=pos)
+    else:
+        a_out, new_cache = A.gqa_apply(lp["attn"], attn_in, cfg, qcfg,
+                                       positions=positions, causal=True,
+                                       window=window, cache=cache, pos=pos)
+    if cfg.post_norm:
+        a_out = C.rmsnorm(lp["attn_post_norm"], a_out, cfg.norm_eps)
+    h = h + a_out
+    ffn_in = C.rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+    aux = jnp.asarray(0.0, jnp.float32)
+    if cfg.moe and not dense_ff:
+        f_out = F.moe_apply(lp["ffn"], ffn_in, cfg, qcfg, dropless=pos is not None)
+        aux = F.moe_aux_loss(lp["ffn"], ffn_in, cfg)
+    else:
+        f_out = F.mlp_apply(lp["ffn"], ffn_in, cfg, qcfg)
+    if cfg.post_norm:
+        f_out = C.rmsnorm(lp["ffn_post_norm"], f_out, cfg.norm_eps)
+    out = constrain(h + f_out, "batch", "seq", None)
+    return out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens, vis_embed=None):
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(jnp.sqrt(cfg.d_model), h.dtype)
+    if vis_embed is not None:
+        h = jnp.concatenate([vis_embed.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _unembed(params, cfg, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["w"].T.astype(h.dtype)
+    return Q.qlinear(params["lm_head"], h, Q.FP)  # lm_head kept fp (std PTQ)
+
+
+def forward(params, cfg: C.ArchConfig, tokens, qcfg: Q.QuantConfig,
+            vis_embed=None, remat: bool = False, cache=None):
+    """tokens: (B,S) -> logits (B, S(+vis), V). If cache is given (prefill),
+    per-layer caches are filled and returned."""
+    h = _embed(params, cfg, tokens, vis_embed)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    windows = layer_windows(cfg)
+
+    n_dense = cfg.moe.first_dense if cfg.moe else 0
+    dense_caches = []
+    aux_total = jnp.asarray(0.0, jnp.float32)
+    for i in range(n_dense):
+        lc = None if cache is None else jax.tree.map(lambda x: x[i], cache["dense"])
+        h, nc, _ = _layer_apply(params["dense_layers"][i], h, cfg, qcfg,
+                                positions=positions, window=None, cache=lc,
+                                dense_ff=True)
+        dense_caches.append(nc)
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, window = xs
+        w = jnp.where(window >= BIG_WINDOW, s + 1, window)
+        h, nc, a = _layer_apply(lp, h, cfg, qcfg, positions=positions, window=w,
+                                cache=None if cache is None else _cache_proto(cfg, b, s),
+                                pos=None)
+        return (h, aux + a), nc
+
+    scan_body = jax.checkpoint(body) if remat else body
+    (h, aux_total), layer_caches = jax.lax.scan(
+        scan_body, (h, aux_total), (params["layers"], windows))
+    h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _unembed(params, cfg, h)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": layer_caches, "pos": jnp.asarray(s, jnp.int32)}
+        if n_dense:
+            new_cache["dense"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dense_caches)
+    return logits, new_cache, aux_total
+
+
+def loss_fn(params, cfg: C.ArchConfig, batch: dict, qcfg: Q.QuantConfig,
+            remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    logits, _, aux = forward(params, cfg, tokens, qcfg,
+                             vis_embed=batch.get("vis_embed"), remat=remat)
+    if cfg.vis_len and batch.get("vis_embed") is not None:
+        logits = logits[:, batch["vis_embed"].shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+    if cfg.moe:
+        n_moe = cfg.n_layers - cfg.moe.first_dense
+        loss = loss + 0.01 * aux / jnp.maximum(n_moe, 1)
+        metrics["aux_loss"] = aux / jnp.maximum(n_moe, 1)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _cache_proto(cfg: C.ArchConfig, b: int, t: int):
+    """Zero per-layer cache with capacity t (dtype bf16)."""
+    if cfg.mla:
+        m = cfg.mla
+        return {"ckv": jnp.zeros((b, t, m.kv_lora_rank), jnp.bfloat16),
+                "krope": jnp.zeros((b, t, m.qk_rope_dim), jnp.bfloat16)}
+    return {"k": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+            "v": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
+
+
+def init_cache(cfg: C.ArchConfig, b: int, max_len: int):
+    n_dense = cfg.moe.first_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    stack = lambda proto, n: jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), proto)
+    cache = {"layers": stack(_cache_proto(cfg, b, max_len), n_scan),
+             "pos": jnp.asarray(0, jnp.int32)}
+    if n_dense:
+        cache["dense"] = stack(_cache_proto(cfg, b, max_len), n_dense)
+    return cache
+
+
+def prefill(params, cfg: C.ArchConfig, tokens, qcfg: Q.QuantConfig,
+            max_len: int | None = None, vis_embed=None):
+    """Run the prompt, return (last-position logits, filled cache).
+
+    NOTE: prefill writes k/v for the prompt length s; the cache is then
+    right-padded to max_len for decoding."""
+    b, s = tokens.shape
+    logits, cache, _ = forward(params, cfg, tokens, qcfg, vis_embed=vis_embed,
+                               cache=init_cache(cfg, b, s))
+    if max_len and max_len > s + (vis_embed.shape[1] if vis_embed is not None else 0):
+        total = s + (vis_embed.shape[1] if vis_embed is not None else 0)
+        pad = max_len - total
+        def grow(x):
+            if x.ndim >= 3 and x.shape[2] == total:  # (L,B,T,...)
+                widths = [(0, 0)] * x.ndim
+                widths[2] = (0, pad)
+                return jnp.pad(x, widths)
+            return x
+        cache = {k: (jax.tree.map(grow, v) if k != "pos" else v) for k, v in cache.items()}
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+    """One token step. tokens: (B,1). Returns (logits (B,V), new cache)."""
+    pos = cache["pos"]
+    h = _embed(params, cfg, tokens)
+    b = h.shape[0]
+    positions = pos[None] if pos.ndim == 0 else pos
+    positions = jnp.asarray(positions).reshape(1)
+    windows = layer_windows(cfg)
+    t = jax.tree.leaves(cache["layers"])[0].shape[2]
+
+    n_dense = cfg.moe.first_dense if cfg.moe else 0
+    new_dense = []
+    for i in range(n_dense):
+        lc = jax.tree.map(lambda x: x[i], cache["dense"])
+        h, nc, _ = _layer_apply(params["dense_layers"][i], h, cfg, qcfg,
+                                positions=positions, window=None, cache=lc,
+                                pos=pos, dense_ff=True)
+        new_dense.append(nc)
+
+    def body(h, xs):
+        lp, lc, window = xs
+        w = jnp.where(window >= BIG_WINDOW, t + 1, window)
+        h, nc, _ = _layer_apply(lp, h, cfg, qcfg, positions=positions, window=w,
+                                cache=lc, pos=pos)
+        return h, nc
+
+    h, new_layer_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"], windows))
+    h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _unembed(params, cfg, h)[:, 0]
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layer_caches
+    new_cache["pos"] = pos + 1
+    if n_dense:
+        new_cache["dense"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_dense)
+    return logits, new_cache

@@ -1,0 +1,173 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend STUBBED —
+``frames`` inputs are precomputed frame embeddings (B, n_frames, d)).
+
+Encoder: bidirectional self-attention. Decoder: causal self-attention +
+cross-attention over encoder output, learned positional embeddings (no rope,
+as in the original). Small (4+4 layers), so layers are unrolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import ffn as F
+from repro.models.partitioning import constrain
+from repro.quant import linear as Q
+
+MAX_DEC_POS = 1 << 20   # learned dec positions are bucketed mod this table
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"attn_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": A.gqa_init(k1, cfg),
+            "ffn_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "ffn": F.mlp_init(k2, cfg)}
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"self_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "self_attn": A.gqa_init(k1, cfg),
+            "cross_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "cross_attn": A.gqa_init(k2, cfg),
+            "ffn_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "ffn": F.mlp_init(k3, cfg)}
+
+
+def init(cfg: C.ArchConfig, key) -> dict:
+    e = cfg.encoder
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], e.n_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    k_dpos = jax.random.split(ks[5], 1)[0]
+    return {
+        "embed": {"w": (jax.random.normal(ks[2], (cfg.vocab, cfg.d_model)) * 0.02
+                        ).astype(cfg.param_dtype)},
+        "enc_pos": {"w": (jax.random.normal(ks[3], (e.n_frames, cfg.d_model)) * 0.01
+                          ).astype(cfg.param_dtype)},
+        "dec_pos": {"w": (jax.random.normal(k_dpos, (getattr(e, "max_dec_pos", 32768),
+                                                     cfg.d_model)) * 0.01
+                          ).astype(cfg.param_dtype)},
+        "enc_layers": [_enc_layer_init(k, cfg) for k in enc_keys],
+        "enc_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "dec_layers": [_dec_layer_init(k, cfg) for k in dec_keys],
+        "dec_norm": C.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "lm_head": C.dense_init(ks[4], cfg.d_model, cfg.vocab, False, cfg.param_dtype),
+    }
+
+
+def encode(params, cfg, frames, qcfg):
+    """frames: (B, F, d) stub embeddings -> encoder states (B, F, d)."""
+    f = frames.shape[1]
+    h = frames.astype(cfg.compute_dtype) + params["enc_pos"]["w"][:f].astype(cfg.compute_dtype)
+    positions = jnp.arange(f)
+    for lp in params["enc_layers"]:
+        x = C.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        out, _ = A.gqa_apply(lp["attn"], x, cfg, qcfg, positions=None,
+                             causal=False, window=None)
+        h = h + out
+        h = h + F.mlp_apply(lp["ffn"], C.rmsnorm(lp["ffn_norm"], h, cfg.norm_eps), cfg, qcfg)
+    return C.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _dec_layer(lp, h, cfg, qcfg, positions, enc_h, enc_pos, cache=None, pos=None):
+    h = constrain(h, "batch", "seq", None)
+    x = C.rmsnorm(lp["self_norm"], h, cfg.norm_eps)
+    out, nc = A.gqa_apply(lp["self_attn"], x, cfg, qcfg, positions=None,
+                          causal=True, window=None, cache=cache, pos=pos)
+    h = h + out
+    x = C.rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+    # cross-attn: kv from encoder states (projected fresh; cheap at 1500 frames)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    b, f, _ = enc_h.shape
+    ck = Q.qlinear(lp["cross_attn"]["wk"], enc_h, qcfg).reshape(b, f, kh, hd)
+    cv = Q.qlinear(lp["cross_attn"]["wv"], enc_h, qcfg).reshape(b, f, kh, hd)
+    out, _ = A.gqa_apply(lp["cross_attn"], x, cfg, qcfg, positions=None,
+                         causal=False, window=None,
+                         kv_override=(ck, cv, enc_pos))
+    h = h + out
+    h = h + F.mlp_apply(lp["ffn"], C.rmsnorm(lp["ffn_norm"], h, cfg.norm_eps), cfg, qcfg)
+    return h, nc
+
+
+def forward(params, cfg: C.ArchConfig, tokens, qcfg, frames=None, remat=False,
+            cache=None):
+    """Teacher-forced decoder over `tokens` with encoder over `frames`."""
+    b, s = tokens.shape
+    enc_h = encode(params, cfg, frames, qcfg)
+    enc_pos = jnp.arange(enc_h.shape[1])
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)
+    h = h + params["dec_pos"]["w"][:s].astype(h.dtype)   # learned positions
+    positions = jnp.arange(s)
+    caches = []
+    for i, lp in enumerate(params["dec_layers"]):
+        lc = None
+        if cache is not None:
+            lc = {"k": jnp.zeros((b, s, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                  "v": jnp.zeros((b, s, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
+        h, nc = _dec_layer(lp, h, cfg, qcfg, positions, enc_h, enc_pos,
+                           cache=lc)
+        caches.append(nc)
+    h = C.rmsnorm(params["dec_norm"], h, cfg.norm_eps)
+    logits = Q.qlinear(params["lm_head"], h, Q.FP)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *caches),
+                     "enc_h": enc_h, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, new_cache, jnp.asarray(0.0, jnp.float32)
+
+
+def loss_fn(params, cfg, batch, qcfg, remat=True):
+    logits, _, _ = forward(params, cfg, batch["tokens"], qcfg,
+                           frames=batch["frames"], remat=remat)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def init_cache(cfg: C.ArchConfig, b: int, max_len: int):
+    L = cfg.n_layers
+    return {
+        "layers": {"k": jnp.zeros((L, b, max_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                   "v": jnp.zeros((L, b, max_len, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)},
+        "enc_h": jnp.zeros((b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16),
+        "pos": jnp.asarray(0, jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, qcfg, max_len=None, frames=None, vis_embed=None):
+    b, s = tokens.shape
+    logits, cache, _ = forward(params, cfg, tokens, qcfg, frames=frames, cache={})
+    max_len = max_len or s
+    full = init_cache(cfg, b, max_len)
+    full["layers"] = jax.tree.map(
+        lambda dstv, srcv: jax.lax.dynamic_update_slice_in_dim(dstv, srcv, 0, axis=2),
+        full["layers"], cache["layers"])
+    full["enc_h"] = cache["enc_h"].astype(jnp.bfloat16)
+    full["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, -1], full
+
+
+def decode_step(params, cfg, cache, tokens, qcfg):
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    enc_h = cache["enc_h"].astype(cfg.compute_dtype)
+    enc_pos = jnp.arange(enc_h.shape[1])
+    h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)
+    h = h + jax.lax.dynamic_slice_in_dim(params["dec_pos"]["w"], pos, 1, 0
+                                         ).astype(h.dtype)[None]
+    new_layers = []
+    for i, lp in enumerate(params["dec_layers"]):
+        lc = jax.tree.map(lambda x: x[i], cache["layers"])
+        h, nc = _dec_layer(lp, h, cfg, qcfg, None, enc_h, enc_pos, cache=lc, pos=pos)
+        new_layers.append(nc)
+    h = C.rmsnorm(params["dec_norm"], h, cfg.norm_eps)
+    logits = Q.qlinear(params["lm_head"], h, Q.FP)[:, 0]
+    new_cache = dict(cache)
+    new_cache["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

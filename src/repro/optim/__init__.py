@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, cosine_lr, clip_by_global_norm,
+)
+from repro.optim.compression import (  # noqa: F401
+    compression_init, compress_gradients,
+)

@@ -1,0 +1,22 @@
+"""Perf-iteration feature flags (§Perf methodology).
+
+Each beyond-baseline optimisation can be disabled to re-measure the
+paper-faithful baseline under the same cost model:
+
+    REPRO_DISABLE_OPT=causal_skip,seqkv_cache python -m repro.launch.dryrun ...
+
+Flags:
+  causal_skip  — static KV-chunk skipping in chunked attention (§Perf C/H1)
+  seqkv_cache  — sequence-parallel KV cache sharding when KV heads don't
+                 divide the model axis (§Perf A/H1)
+"""
+from __future__ import annotations
+
+import os
+
+_disabled = set(
+    f.strip() for f in os.environ.get("REPRO_DISABLE_OPT", "").split(",") if f.strip())
+
+
+def enabled(flag: str) -> bool:
+    return flag not in _disabled

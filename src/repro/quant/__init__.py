@@ -1,0 +1,8 @@
+"""Quantisation plumbing: QuantConfig + quantised linear/nonlinear ops.
+
+This is how the paper's technique enters every model: all weight/activation
+GEMMs go through ``qdot`` (BBFP/BFP/INT fake-quant with STE, or the Pallas
+integer kernel on the serving path), and softmax/SiLU/GELU go through the
+segmented-LUT nonlinear unit.
+"""
+from repro.quant.linear import QuantConfig, qdot, qlinear, qact  # noqa: F401

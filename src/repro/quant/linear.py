@@ -1,0 +1,186 @@
+"""Quantised linear ops used by every architecture.
+
+Two execution paths, numerically identical (tested):
+  * fake-quant path (default): quantise-dequantise both operands along the
+    contraction dim, then a normal (bf16/fp32) dot.  Differentiable via STE,
+    works everywhere, and is what the dry-run lowers (the quant/dequant ops
+    appear in HLO, which is the faithful baseline cost).
+  * kernel path: the Pallas bbfp_matmul (int8 MXU per K-block).  Serving
+    only, CPU-validated in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """What gets quantised and how. Formats are parse_format strings."""
+    linear: str = "none"       # weight+activation format for GEMMs
+    nonlinear: str = "none"    # format for softmax/SiLU/GELU (LUT unit)
+    kv_cache: str = "none"     # BBFP KV-cache storage format (serving);
+    #                            values land on the format's grid at cache
+    #                            write (int8 mantissas + per-32-block scales
+    #                            once packed storage is used on TPU)
+    use_kernel: bool = False   # route GEMMs through the Pallas kernel
+    quantize_weights: bool = True
+    quantize_acts: bool = True
+
+    @property
+    def linear_fmt(self) -> B.QuantFormat:
+        return B.parse_format(self.linear)
+
+    @property
+    def nonlinear_fmt(self) -> B.QuantFormat:
+        return B.parse_format(self.nonlinear)
+
+    @property
+    def kv_fmt(self) -> B.QuantFormat:
+        return B.parse_format(self.kv_cache)
+
+    @property
+    def enabled(self) -> bool:
+        return self.linear != "none" or self.nonlinear != "none"
+
+
+FP = QuantConfig()
+# the paper's headline configuration: BBFP(4,2) linears + BBFP(10,5) nonlinear
+PAPER = QuantConfig(linear="BBFP(4,2)", nonlinear="BBFP(10,5)")
+# beyond-paper serving config: + BBFP(6,3) KV cache (8.16 bits/elt stored)
+PAPER_KVQ = QuantConfig(linear="BBFP(4,2)", nonlinear="BBFP(10,5)",
+                        kv_cache="BBFP(6,3)")
+
+
+def qkv_cache(x: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    """Quantise K/V onto the BBFP grid at cache-write (blocks along head_dim
+    — the contraction dim of the scores dot, so the cached values are
+    exactly what a packed int8+scales cache would dequantise to)."""
+    if qcfg.kv_cache == "none":
+        return x
+    return B.fake_quant(x, qcfg.kv_fmt, axis=-1)
+
+
+def outlier_fake_quant(x: jax.Array, axis: int = -1, block: int = 32) -> jax.Array:
+    """Outlier-aware INT4 baseline (Olive/Oltron-style victim pair,
+    simplified): the largest-|x| element of each block keeps 8-bit
+    precision, the bulk is absmax-INT4. Used by the Fig. 8 comparison."""
+    x_ = jnp.moveaxis(x, axis, -1)
+    xb, pad = B._to_blocks(x_, block)
+    amax_all = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    is_out = jnp.abs(xb) >= amax_all
+    bulk = jnp.where(is_out, 0.0, xb)
+    amax_bulk = jnp.max(jnp.abs(bulk), axis=-1, keepdims=True)
+    scale4 = jnp.where(amax_bulk == 0, 1.0, amax_bulk / 7.0)
+    q_bulk = jnp.clip(jnp.round(bulk / scale4), -7, 7) * scale4
+    scale8 = jnp.where(amax_all == 0, 1.0, amax_all / 127.0)
+    q_out = jnp.clip(jnp.round(xb / scale8), -127, 127) * scale8
+    y = B._from_blocks(jnp.where(is_out, q_out, q_bulk), pad)
+    y = jnp.moveaxis(y, -1, axis).astype(x.dtype)
+    zero = x - jax.lax.stop_gradient(x)
+    return zero + jax.lax.stop_gradient(y)
+
+
+def qact(x: jax.Array, qcfg: QuantConfig, axis: int = -1) -> jax.Array:
+    """Quantise an activation tensor along `axis` (contraction dim)."""
+    if qcfg.linear == "none" or not qcfg.quantize_acts:
+        return x
+    if qcfg.linear == "outlier4":
+        return outlier_fake_quant(x, axis)
+    return B.fake_quant(x, qcfg.linear_fmt, axis=axis)
+
+
+def qweight(w: jax.Array, qcfg: QuantConfig, axis: int = 0) -> jax.Array:
+    if qcfg.linear == "none" or not qcfg.quantize_weights:
+        return w
+    if qcfg.linear == "outlier4":
+        return outlier_fake_quant(w, axis)
+    return B.fake_quant(w, qcfg.linear_fmt, axis=axis)
+
+
+def qdot(x: jax.Array, w: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    """y[..., N] = Q(x)[..., K] @ Q(w)[K, N].  Blocks run along K for both
+    operands (the PE array consumes K-blocks of 32)."""
+    if qcfg.linear == "none":
+        return x @ w
+    if qcfg.use_kernel:
+        from repro.kernels import ops as kops
+        return kops.bbfp_matmul(x, w, qcfg.linear).astype(x.dtype)
+    xq = qact(x, qcfg, axis=-1)
+    wq = qweight(w, qcfg, axis=0)
+    return xq @ wq
+
+
+def qlinear(params: dict, x: jax.Array, qcfg: QuantConfig,
+            x_prequantized: bool = False) -> jax.Array:
+    """params = {"w": (K, N)[, "b": (N,)]}  OR packed serving form
+    {"q": int8 (K, N), "scale": (K/32, N)} (see quant.packed).
+
+    x_prequantized: caller already ran qact on x (§Perf: layers quantise a
+    shared input ONCE for wq/wk/wv and gate/up instead of per-projection).
+    """
+    if "q" in params and "scale" in params:
+        # pre-quantised offline: dequant is one fused multiply; only the
+        # activation side is quantised per step.
+        w = B.unpack_weight({"q": params["q"], "scale": params["scale"]},
+                            out_dtype=x.dtype)
+        xq = x if (qcfg.linear == "none" or x_prequantized) else qact(x, qcfg, axis=-1)
+        y = xq @ w
+    elif x_prequantized and qcfg.linear not in ("none",):
+        wq = qweight(params["w"].astype(x.dtype), qcfg, axis=0)
+        y = x @ wq
+    else:
+        y = qdot(x, params["w"].astype(x.dtype), qcfg)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def qact_shared(x: jax.Array, qcfg: QuantConfig):
+    """Quantise an activation that feeds SEVERAL projections once.
+    Returns (xq, prequantized_flag). Controlled by the dedup_actquant flag
+    so the paper-faithful per-projection baseline stays measurable."""
+    from repro.perf_flags import enabled
+    if qcfg.linear in ("none", "outlier4") or not qcfg.quantize_acts \
+            or not enabled("dedup_actquant"):
+        return x, False
+    return qact(x, qcfg, axis=-1), True
+
+
+def qsoftmax(x: jax.Array, qcfg: QuantConfig, axis: int = -1,
+             where: jax.Array | None = None) -> jax.Array:
+    if qcfg.nonlinear == "none":
+        if where is not None:
+            x = jnp.where(where, x, -1e30)
+        return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+    return NL.softmax_lut(x.astype(jnp.float32), axis=axis,
+                          fmt=qcfg.nonlinear_fmt, where=where).astype(x.dtype)
+
+
+def qsilu(x: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    if qcfg.nonlinear == "none":
+        return jax.nn.silu(x)
+    return NL.silu_lut(x.astype(jnp.float32), fmt=qcfg.nonlinear_fmt).astype(x.dtype)
+
+
+def qgelu(x: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    if qcfg.nonlinear == "none":
+        return jax.nn.gelu(x)
+    return NL.gelu_bbfp(x.astype(jnp.float32), fmt=qcfg.nonlinear_fmt).astype(x.dtype)
+
+
+def qexp_for_online_softmax(x: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    """exp(x) for x<=0, used inside chunked/online softmax where the full row
+    never materialises: the LUT unit still supplies exp, the running
+    rescale stays fp32 (exact powers of e cancel in the final division).
+    Inputs are clamped to the unit's bounded domain so masked sentinels
+    can't poison the block exponents (see nonlinear.EXP_LUT_RANGE)."""
+    if qcfg.nonlinear == "none":
+        return jnp.exp(x)
+    xc = jnp.maximum(x.astype(jnp.float32), NL.EXP_LUT_RANGE)
+    return NL.lut_apply(xc, NL.get_lut("exp", qcfg.nonlinear_fmt)).astype(x.dtype)

@@ -1,0 +1,4 @@
+from repro.runtime.resilient import (  # noqa: F401
+    FailureInjector, StragglerMonitor, resilient_train_loop,
+)
+from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: F401

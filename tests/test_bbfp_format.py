@@ -1,0 +1,168 @@
+"""BBFP/BFP format invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bbfp as B
+from repro.core import error as E
+
+FMTS = [B.BFP4, B.BFP6, B.BFP8, B.BBFP31, B.BBFP42, B.BBFP43, B.BBFP63, B.BBFP105]
+
+
+def blocks(x, fmt):
+    xb, _ = B._to_blocks(jnp.asarray(x, jnp.float32), fmt.block)
+    return xb
+
+
+# ---------- Table I exact values ----------
+
+@pytest.mark.parametrize("fmt,expected", [
+    (B.BFP8, 9.15625), (B.BFP6, 7.15625),
+    (B.QuantFormat("bbfp", 8, 4), 10.15625), (B.BBFP63, 8.15625),
+])
+def test_equivalent_bit_width_table1(fmt, expected):
+    assert abs(B.equivalent_bit_width(fmt, 32) - expected) < 1e-9
+
+
+def test_memory_efficiency_ordering():
+    # Table I: BFP6 (2.24x) > BFP8 (1.75x); BBFP slightly below same-m BFP
+    assert B.memory_efficiency(B.BFP6) > B.memory_efficiency(B.BFP8)
+    assert B.memory_efficiency(B.BBFP63) < B.memory_efficiency(B.BFP6)
+    assert B.memory_efficiency(B.QuantFormat("bbfp", 8, 4)) < B.memory_efficiency(B.BFP8)
+
+
+# ---------- quantiser invariants ----------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from(FMTS))
+def test_roundtrip_error_bound(seed, fmt):
+    """Elementwise error <= step/2, except the top sliver of the dynamic
+    range (mantissa saturated at 2^m-1, inherent to (B)BFP) where it is
+    <= one full step."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4, 64)) * jnp.exp2(
+        jax.random.randint(jax.random.fold_in(key, 1), (4, 64), -8, 8).astype(jnp.float32))
+    y = B.fake_quant(x, fmt)
+    qd = B.quantize_blocked(blocks(x, fmt), fmt)
+    xb = blocks(x, fmt)
+    e_s = B.shared_exponent(xb, fmt)
+    e = B._exponent(xb)
+    if fmt.kind == "bbfp":
+        flag = (e > e_s[..., None]).astype(jnp.int32)
+    else:
+        flag = jnp.zeros_like(e)
+    step = jnp.exp2((e_s[..., None] - fmt.mantissa + 1 + flag * fmt.shift).astype(jnp.float32))
+    err = jnp.abs(blocks(x, fmt) - blocks(y, fmt))
+    saturated = qd["mantissa"] >= 2**fmt.mantissa - 1
+    bound = jnp.where(saturated, step, step * 0.5)
+    assert bool(jnp.all(err <= bound * (1 + 1e-6) + 1e-12)), float(jnp.max(err / step))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_flag_semantics(seed):
+    """flag=1 exactly for elements above the shared exponent (Eq. 4)."""
+    fmt = B.BBFP42
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 64)) * 10
+    qd, _ = B.quantize(x, fmt)
+    xb = blocks(x, fmt)
+    e = B._exponent(xb)
+    e_s = qd["exp"]
+    np.testing.assert_array_equal(np.asarray(qd["flag"]),
+                                  np.asarray(e > e_s[..., None]).astype(np.int32))
+
+
+def test_shared_exponent_eq9():
+    """E_shared = max(E) - (m - o)."""
+    x = jnp.asarray([[1.0, 2.0, 4.0, 1000.0] + [0.01] * 28])
+    for fmt in [B.BBFP42, B.BBFP63]:
+        e_s = B.shared_exponent(blocks(x, fmt), fmt)
+        assert int(e_s[0, 0]) == 9 - fmt.shift  # floor(log2 1000)=9
+
+
+def test_outlier_precision_equals_bfp():
+    """BBFP gives outliers exactly plain-BFP precision (same step)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 32))
+    x = x.at[:, 0].set(100.0)          # one outlier per block
+    for m, o in [(4, 2), (6, 3)]:
+        bb = B.QuantFormat("bbfp", m, o)
+        bf = B.QuantFormat("bfp", m)
+        ybb = B.fake_quant(x, bb)
+        ybf = B.fake_quant(x, bf)
+        np.testing.assert_allclose(np.asarray(ybb[:, 0]), np.asarray(ybf[:, 0]),
+                                   rtol=0, atol=0)
+
+
+def test_bulk_precision_gain():
+    """non-outlier values gain (m-o) bits -> ~4x lower MSE for shift=2."""
+    key = jax.random.PRNGKey(1)
+    x = E.llm_activation_sample(key, (512, 512))
+    mse_bb = float(E.empirical_mse(x, B.BBFP42))
+    mse_bf = float(E.empirical_mse(x, B.QuantFormat("bfp", 4)))
+    assert mse_bb < mse_bf / 2.5, (mse_bb, mse_bf)
+
+
+def test_eq8_matches_empirical():
+    """Eq. 8 closed form tracks empirical MSE within 2x for all formats."""
+    x = E.llm_activation_sample(jax.random.PRNGKey(2), (512, 512))
+    for fmt in [B.BFP4, B.BFP6, B.BBFP31, B.BBFP42, B.BBFP63]:
+        th = float(E.theoretical_variance(x, fmt))
+        em = float(E.empirical_mse(x, fmt))
+        assert 0.5 < th / em < 2.0, (fmt.name, th, em)
+
+
+def test_fig3_shared_exponent_ordering():
+    """max-3 >> max-1 > max-(m-o); max worst moderate (Fig. 3)."""
+    x = E.llm_activation_sample(jax.random.PRNGKey(3), (512, 512))
+    mses = {off: float(E.empirical_mse(
+        x, B.QuantFormat("bbfp", 4, 2, exponent_offset=off)))
+        for off in (-1, 0, 1, 2)}
+    assert mses[0] < mses[1] < mses[-1]
+    assert mses[0] < mses[2]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from(FMTS))
+def test_int_repr_consistency(seed, fmt):
+    """dequant(int_repr) == fake_quant exactly (the kernel arithmetic)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 3
+    q, scale = B.to_int_repr(x, fmt)
+    y1 = q.astype(jnp.float32) * scale[..., None]
+    y2 = blocks(B.fake_quant(x, fmt), fmt)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=0)
+
+
+def test_folded_max_int8_safety():
+    assert B.folded_max(B.BBFP42) == 60      # int8-safe
+    assert B.folded_max(B.BBFP31) == 28
+    assert B.folded_max(B.BBFP63) == 504     # needs int16
+
+
+def test_zeros_and_signs():
+    x = jnp.asarray([[0.0] * 32, [-1.5] * 32])
+    for fmt in FMTS:
+        y = B.fake_quant(x, fmt)
+        assert float(jnp.max(jnp.abs(y[0]))) == 0.0
+        assert bool(jnp.all(y[1] <= 0))
+
+
+def test_parse_format():
+    assert B.parse_format("BBFP(4,2)") == B.BBFP42
+    assert B.parse_format("bbfp6_3").mantissa == 6
+    assert B.parse_format("BFP6") == B.BFP6
+    assert B.parse_format("int8").kind == "int"
+    assert B.parse_format("none").kind == "none"
+
+
+def test_matmul_ref_exactness():
+    """bbfp_matmul_ref == dequantised operands matmul (fp32-exact ranges)."""
+    a = jax.random.normal(jax.random.PRNGKey(4), (16, 96))
+    b = jax.random.normal(jax.random.PRNGKey(5), (96, 8))
+    for fmt in [B.BBFP42, B.BFP6]:
+        got = B.bbfp_matmul_ref(a, b, fmt)
+        want = B.fake_quant(a, fmt, axis=-1) @ B.fake_quant(b.T, fmt, axis=-1).T
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-5)

@@ -1,0 +1,116 @@
+"""Roofline HLO analyzer: known-flops cases + collective wire-cost math."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis as H
+
+
+def test_scan_matmul_flops():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    cost = H.analyze(c.as_text())
+    expected = 2 * 128 * 256 * 256 * 10
+    assert 0.95 < cost.flops / expected < 1.1, cost.flops
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, None, length=4)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = H.analyze(jax.jit(f).lower(x, w).compile().as_text())
+    expected = 2 * 64 * 64 * 64 * 12
+    assert 0.9 < cost.flops / expected < 1.2, cost.flops
+
+
+def test_grad_flops_triple_forward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+    g = jax.grad(loss)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    cost = H.analyze(jax.jit(g).lower(w, x).compile().as_text())
+    fwd = 2 * 128 * 256 * 256
+    # grad = fwd + 2 matmuls in bwd ~= 3x fwd (one of the bwd dots is wrt w)
+    assert 1.8 < cost.flops / fwd < 3.5, cost.flops / fwd
+
+
+_COLLECTIVE_HLO = """HloModule test
+
+ENTRY %main.1 (p0.1: f32[1024]) -> f32[1024] {
+  %p0.1 = f32[1024]{0} parameter(0)
+  %all-reduce.1 = f32[1024]{0} all-reduce(%p0.1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.1 = f32[1024]{0} all-gather(%p0.1), replica_groups={{0,1}}, dimensions={0}
+  ROOT %add.9 = f32[1024]{0} add(%all-reduce.1, %all-gather.1)
+}
+"""
+
+
+def test_collective_wire_bytes():
+    cost = H.analyze(_COLLECTIVE_HLO, total_devices=4)
+    ar = 2 * 4096 * 3 / 4          # all-reduce: 2*s*(n-1)/n, n=4
+    ag = 4096 * 1 / 2              # all-gather: s*(n-1)/n, n=2
+    assert abs(cost.coll_bytes - (ar + ag)) < 1e-6, cost.coll_by_kind
+
+
+_WHILE_HLO = """HloModule t
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64]{0} get-tuple-element(%p), index=1
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64]{0}) tuple(%ip, %ar)
+}
+
+%cond.1 (p.2: (s32[], f32[64])) -> pred[] {
+  %p.2 = (s32[], f32[64]{0}) parameter(0)
+  %i.2 = s32[] get-tuple-element(%p.2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i.2, %n), direction=LT
+}
+
+ENTRY %main.2 (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64]{0}) tuple(%zero, %a)
+  %w = (s32[], f32[64]{0}) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_scales_collectives():
+    cost = H.analyze(_WHILE_HLO, total_devices=2)
+    per_trip = 2 * 256 * 1 / 2     # all-reduce of 256 bytes over 2 devices
+    assert abs(cost.coll_bytes - 7 * per_trip) < 1e-6
+
+
+def test_tuple_index_comment_regression():
+    """instruction results with /*index=N*/ comments must still parse."""
+    hlo = """HloModule r
+
+ENTRY %main.3 (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %t = (f32[8]{0}, f32[8]{0}, f32[8]{0}, f32[8]{0}, f32[8]{0}, /*index=5*/f32[8]{0}) tuple(%a, %a, %a, %a, %a, %a)
+  ROOT %o = f32[8]{0} get-tuple-element(%t), index=0
+}
+"""
+    comps = H.parse_computations(hlo)
+    lines = comps["main.3"]
+    assert any(H._INSTR_RE.match(l) and H._INSTR_RE.match(l).group(3) == "tuple"
+               for l in lines)

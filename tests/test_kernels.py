@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+MATMUL_SHAPES = [(128, 128, 128), (256, 384, 128), (128, 256, 256),
+                 (130, 100, 140), (64, 32, 16)]
+FMTS = ["BBFP(4,2)", "BBFP(3,1)", "BBFP(6,3)", "BFP4", "BFP6", "INT8"]
+
+
+@pytest.mark.parametrize("shape", MATMUL_SHAPES)
+@pytest.mark.parametrize("fmt", FMTS)
+def test_bbfp_matmul_vs_ref(shape, fmt):
+    m, k, n = shape
+    a = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32) * 2
+    b = jax.random.normal(jax.random.PRNGKey(2), (k, n), jnp.float32)
+    got = ops.bbfp_matmul(a, b, fmt)
+    want = ref.bbfp_matmul_ref(a, b, fmt)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale,
+                               atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bbfp_matmul_dtypes(dtype):
+    a = (jax.random.normal(jax.random.PRNGKey(1), (128, 128)) * 2).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(2), (128, 128)).astype(dtype)
+    got = ops.bbfp_matmul(a, b, "BBFP(4,2)")
+    want = ref.bbfp_matmul_ref(a, b, "BBFP(4,2)")
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale,
+                               atol=2e-6)
+
+
+def test_bbfp_matmul_batched_lead_dims():
+    a = jax.random.normal(jax.random.PRNGKey(3), (4, 33, 96))
+    b = jax.random.normal(jax.random.PRNGKey(4), (96, 40))
+    got = ops.bbfp_matmul(a, b, "BBFP(4,2)")
+    assert got.shape == (4, 33, 40)
+    want = ref.bbfp_matmul_ref(a.reshape(-1, 96), b, "BBFP(4,2)").reshape(4, 33, 40)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+LUT_SHAPES = [(8, 512), (16, 33, 700), (5000,), (3, 3, 3)]
+LUT_FNS = ["exp", "one_plus_exp_neg", "sigmoid", "gelu_inner"]
+
+
+@pytest.mark.parametrize("shape", LUT_SHAPES)
+@pytest.mark.parametrize("fn", LUT_FNS)
+def test_lut_kernel_vs_ref(shape, fn):
+    x = jax.random.normal(jax.random.PRNGKey(5), shape) * 3
+    got = ops.lut_apply(x, fn)
+    want = ref.lut_apply_ref(x, fn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("fmt", ["BBFP(10,5)", "BFP10"])
+def test_lut_kernel_formats(fmt):
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 512)) * 5
+    got = ops.lut_apply(x, "exp", fmt)
+    want = ref.lut_apply_ref(x, "exp", fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_lut_inside_jit():
+    """regression: LUT table construction under an ambient jit trace."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 512))
+
+    @jax.jit
+    def f(x):
+        return ops.lut_apply(x, "sigmoid")
+
+    np.testing.assert_allclose(np.asarray(f(x)),
+                               np.asarray(ref.lut_apply_ref(x, "sigmoid")),
+                               rtol=0, atol=0)
+
+
+def test_kernel_accuracy_vs_true_values():
+    """the quantised matmul approximates the fp matmul within format error."""
+    a = jax.random.normal(jax.random.PRNGKey(8), (256, 256))
+    b = jax.random.normal(jax.random.PRNGKey(9), (256, 128))
+    true = a @ b
+    for fmt, tol in [("BBFP(6,3)", 0.02), ("BBFP(4,2)", 0.08), ("BFP4", 0.25)]:
+        got = ops.bbfp_matmul(a, b, fmt)
+        rel = float(jnp.linalg.norm(got - true) / jnp.linalg.norm(true))
+        assert rel < tol, (fmt, rel)

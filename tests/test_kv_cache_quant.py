@@ -1,0 +1,64 @@
+"""BBFP KV-cache quantisation (beyond-paper serving feature)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.quant import linear as Q
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ["llama7b", "gemma3_4b"])
+def test_kvq_decode_close_to_bf16_cache(arch):
+    cfg = configs.smoke_config(arch)
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab)
+    qfp = Q.QuantConfig()                          # fp everything
+    qkv = Q.QuantConfig(kv_cache="BBFP(6,3)")      # only the cache quantised
+
+    def run(qcfg):
+        _, cache = M.prefill(params, cfg, toks[:, :16], qcfg, max_len=32)
+        last = None
+        for i in range(16, 24):
+            last, cache = M.decode_step(params, cfg, cache, toks[:, i:i + 1], qcfg)
+        return last
+
+    ref = run(qfp)
+    got = run(qkv)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    scale = max(float(jnp.max(jnp.abs(ref))), 1.0)
+    assert err < 0.05 * scale, (arch, err, scale)   # BBFP(6,3) ~ near-lossless
+    # and a crude format must actually change things (sanity that it's wired)
+    coarse = run(Q.QuantConfig(kv_cache="BFP4"))
+    assert float(jnp.max(jnp.abs(coarse - ref))) > err
+
+
+def test_kvq_mla_latent_not_quantised():
+    """MLA keeps its compressed latent hi-prec (it feeds both k and v via
+    up-projections; measured error amplification ~4x vs GQA caches)."""
+    cfg = configs.smoke_config("deepseek_v2_lite_16b")
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    _, c1 = M.prefill(params, cfg, toks, Q.QuantConfig(), max_len=20)
+    _, c2 = M.prefill(params, cfg, toks, Q.QuantConfig(kv_cache="BBFP(6,3)"),
+                      max_len=20)
+    same = jax.tree.map(lambda a, b: bool(jnp.all(a == b)),
+                        c1["layers"], c2["layers"])
+    assert all(jax.tree.leaves(same))
+
+
+def test_kvq_greedy_tokens_usually_match():
+    from repro.launch.serve import generate
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prompts = jax.random.randint(KEY, (4, 12), 0, cfg.vocab)
+    t_fp = generate(cfg, params, prompts, Q.QuantConfig(), gen_len=8)
+    t_kv = generate(cfg, params, prompts, Q.QuantConfig(kv_cache="BBFP(6,3)"),
+                    gen_len=8)
+    # a random-init smoke model has near-tied logits, so some greedy flips
+    # are expected; trained models agree far more (the logit-error test
+    # above is the accuracy statement)
+    agree = float(jnp.mean((t_fp == t_kv).astype(jnp.float32)))
+    assert agree >= 0.6, agree

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (required deliverable (f)); plus decode
+consistency vs teacher forcing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.quant import linear as Q
+
+B_, S_ = 2, 16
+KEY = jax.random.PRNGKey(0)
+
+
+def batch_for(cfg, b=B_, s=S_):
+    out = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab),
+           "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+    if cfg.vis_len:
+        out["vis_embed"] = jax.random.normal(KEY, (b, cfg.vis_len, cfg.d_model)) * 0.1
+    if cfg.family == "whisper":
+        out["frames"] = jax.random.normal(KEY, (b, cfg.encoder.n_frames, cfg.d_model)) * 0.1
+    return out
+
+
+def extras_for(cfg, batch):
+    return {k: v for k, v in batch.items() if k in ("vis_embed", "frames")}
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("quant", ["fp", "paper"])
+def test_smoke_forward_loss(arch, quant):
+    cfg = configs.smoke_config(arch)
+    params = M.init(cfg, KEY)
+    batch = batch_for(cfg)
+    qcfg = Q.PAPER if quant == "paper" else Q.FP
+    loss, metrics = M.loss_fn(params, cfg, batch, qcfg)
+    assert jnp.isfinite(loss), (arch, quant)
+    assert float(loss) > 0
+    mod = M.family_module(cfg)
+    kwargs = extras_for(cfg, batch)
+    if cfg.family == "whisper":
+        logits, _, _ = mod.forward(params, cfg, batch["tokens"], qcfg, **kwargs)
+        assert logits.shape == (B_, S_, cfg.vocab)
+    elif cfg.vis_len:
+        logits, _, _ = mod.forward(params, cfg, batch["tokens"], qcfg, **kwargs)
+        assert logits.shape == (B_, S_ + cfg.vis_len, cfg.vocab)
+    else:
+        logits, _, _ = mod.forward(params, cfg, batch["tokens"], qcfg)
+        assert logits.shape == (B_, S_, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_train_step(arch):
+    """one real optimiser step; params change; loss finite."""
+    from repro.launch import steps as ST
+    from repro.optim import adamw as O
+    cfg = configs.smoke_config(arch)
+    state = ST.make_init_state(cfg, O.AdamWConfig(lr=1e-3), KEY)
+    step = ST.make_train_step(cfg, O.AdamWConfig(lr=1e-3), Q.FP, remat=False)
+    before = jax.tree.leaves(state["params"])[0].copy()
+    state, metrics = jax.jit(step)(state, batch_for(cfg))
+    assert jnp.isfinite(metrics["loss"])
+    after = jax.tree.leaves(state["params"])[0]
+    assert float(jnp.max(jnp.abs(after - before))) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    cfg = configs.smoke_config(arch)
+    if cfg.moe:  # kill capacity-drop noise for the equivalence check
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = M.init(cfg, KEY)
+    batch = batch_for(cfg)
+    tokens = batch["tokens"]
+    kwargs = extras_for(cfg, batch)
+    mod = M.family_module(cfg)
+    full_logits, _, _ = mod.forward(params, cfg, tokens, Q.FP, **kwargs)
+    _, cache = M.prefill(params, cfg, tokens[:, :S_ - 1], Q.FP,
+                         max_len=S_ + 4 + cfg.vis_len, **kwargs)
+    logits_d, cache = M.decode_step(params, cfg, cache, tokens[:, S_ - 1:S_], Q.FP)
+    ref = full_logits[:, -1]
+    err = float(jnp.max(jnp.abs(logits_d - ref)))
+    scale = max(float(jnp.max(jnp.abs(ref))), 1.0)
+    assert err < 3e-2 * scale, (arch, err, scale)
+
+
+def test_vlm_loss_ignores_vis_positions():
+    cfg = configs.smoke_config("internvl2_76b")
+    params = M.init(cfg, KEY)
+    batch = batch_for(cfg)
+    loss, _ = M.loss_fn(params, cfg, batch, Q.FP)
+    assert jnp.isfinite(loss)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = configs.full_config("gemma3-4b")
+    flags = [cfg.layer_is_global(i) for i in range(cfg.n_layers)]
+    assert sum(flags) == 5  # layers 5,11,17,23,29 (34 layers, every 6th)
+    assert flags[5] and not flags[4]
+
+
+@pytest.mark.parametrize("s,hd_v", [(4096, 32), (4352, 32), (4096, 16), (300, 24)])
+def test_chunked_attention_matches_full(s, hd_v):
+    """online-softmax chunked path == full path (fp, no quant), including
+    non-divisible seq lengths (vlm) and v_dim != q_dim (MLA)."""
+    from repro.models import attention as A
+    b, kh, g, hd = 1, 2, 2, 32
+    q = jax.random.normal(KEY, (b, s, kh, g, hd), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kh, hd), jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kh, hd_v), jnp.float32)
+    pos = jnp.arange(s)
+    scale = 1.0 / jnp.sqrt(hd)
+    full = A._full_attention(q, k, v, pos, pos, True, None, scale, Q.FP)
+    chunk = A._chunked_attention(q, k, v, pos, pos, True, None, scale, Q.FP)
+    assert float(jnp.max(jnp.abs(full - chunk))) < 2e-5
+
+
+def test_mla_cache_is_compressed():
+    """MLA decode cache stores (lora + rope) per position, not heads*dim."""
+    cfg = configs.smoke_config("deepseek_v2_lite_16b")
+    cache = M.init_cache(cfg, 2, 32)
+    leaves = {p: l for p, l in jax.tree_util.tree_flatten_with_path(cache["layers"])[0]}
+    sizes = {str(k): v.shape for k, v in leaves.items()}
+    assert any(v[-1] == cfg.mla.kv_lora_rank for v in sizes.values())
+    assert all(v[-1] != cfg.n_heads * cfg.head_dim for v in sizes.values())

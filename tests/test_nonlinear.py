@@ -1,0 +1,74 @@
+"""Segmented-LUT nonlinear unit (paper §IV.B, Table IV mechanisms)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+
+
+def test_softmax_bbfp_close_to_fp():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 256)) * 3
+    ref = jax.nn.softmax(x, -1)
+    got = NL.softmax_lut(x, fmt=B.BBFP105)
+    assert float(jnp.max(jnp.sum(jnp.abs(got - ref), -1))) < 0.08
+
+
+def test_softmax_rows_sum_to_one_approx():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 512)) * 2
+    got = NL.softmax_lut(x, fmt=B.BBFP105)
+    np.testing.assert_allclose(np.asarray(jnp.sum(got, -1)), 1.0, atol=0.02)
+
+
+def test_softmax_bbfp_beats_bfp_same_width():
+    """Table IV direction: BBFP(10,5) LUT < BFP10 LUT error."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 2048)) * 2
+    ref = jax.nn.softmax(x, -1)
+    e_bb = float(jnp.mean(jnp.sum(jnp.abs(NL.softmax_lut(x, fmt=B.BBFP105) - ref), -1)))
+    e_bf = float(jnp.mean(jnp.sum(jnp.abs(NL.softmax_lut(x, fmt=B.BFP10) - ref), -1)))
+    assert e_bb < e_bf, (e_bb, e_bf)
+
+
+def test_silu_gelu_accuracy():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 512)) * 4
+    s = NL.silu_bbfp(x)
+    g = NL.gelu_bbfp(x)
+    rs = float(jnp.linalg.norm(s - jax.nn.silu(x)) / jnp.linalg.norm(jax.nn.silu(x)))
+    rg = float(jnp.linalg.norm(g - jax.nn.gelu(x)) / jnp.linalg.norm(jax.nn.gelu(x)))
+    assert rs < 0.02 and rg < 0.05, (rs, rg)
+
+
+def test_silu_outlier_robustness():
+    """SiLU with outlier-heavy blocks: BBFP(10,5) degrades less than BFP10."""
+    from repro.core import error as E
+    x = E.llm_activation_sample(jax.random.PRNGKey(4), (256, 512),
+                                outlier_frac=0.01, outlier_scale=30.0)
+    ref = jax.nn.silu(x)
+    eb = float(jnp.linalg.norm(NL.silu_lut(x, fmt=B.BBFP105) - ref))
+    ef = float(jnp.linalg.norm(NL.silu_lut(x, fmt=B.BFP10) - ref))
+    assert eb < ef, (eb, ef)
+
+
+def test_lut_masked_softmax():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
+    mask = jnp.arange(64)[None, :] < 40
+    got = NL.softmax_lut(x, fmt=B.BBFP105, where=mask)
+    assert float(jnp.max(jnp.abs(got[:, 40:]))) == 0.0
+    np.testing.assert_allclose(np.asarray(jnp.sum(got, -1)), 1.0, atol=0.02)
+
+
+def test_lut_table_sizes():
+    """7-bit address, table bank small enough for VMEM (paper: sub-tables
+    selected by shared exponent)."""
+    spec = NL.get_lut("exp", B.BBFP105)
+    assert spec.table.shape[-1] == 2 ** NL.ADDRESS_BITS
+    assert spec.table.nbytes <= 128 * 1024
+    assert spec.n_subtables >= 8  # several non-trivial segments materialised
+
+
+def test_exp_lut_monotone_on_negative_axis():
+    # x descends (more negative) -> exp(x) must not increase (allow tiny
+    # segment-boundary wiggles from bucket centring)
+    x = -jnp.linspace(0.01, 10.0, 500)[None, :]
+    y = NL.lut_apply(x, NL.get_lut("exp", B.BBFP105))[0]
+    assert bool(jnp.all(jnp.diff(y) <= 1e-3))

@@ -1,0 +1,86 @@
+"""Sharding-rule unit tests (no devices needed: duck-typed mesh stub)."""
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as S
+
+
+class StubMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class StubPodMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+M = StubMesh()
+
+
+def test_attention_proj_train():
+    assert S.param_spec("layers/attn/wq/w", (24, 2048, 2048), M, "train") \
+        == P(None, "data", "model")
+    assert S.param_spec("layers/attn/wo/w", (24, 2048, 2048), M, "train") \
+        == P(None, "model", "data")
+
+
+def test_mlp_train_and_serve():
+    assert S.param_spec("layers/ffn/w_gate/w", (24, 2048, 8192), M, "train") \
+        == P(None, "data", "model")
+    assert S.param_spec("layers/ffn/w_gate/w", (24, 2048, 8192), M, "serve") \
+        == P(None, None, "model")
+    assert S.param_spec("layers/ffn/w_down/w", (24, 8192, 2048), M, "train") \
+        == P(None, "model", "data")
+
+
+def test_moe_expert_parallel():
+    # (L, E, d, f): experts over model, d over data (train)
+    assert S.param_spec("layers/ffn/w_gate", (48, 128, 2048, 768), M, "train") \
+        == P(None, "model", "data", None)
+    assert S.param_spec("layers/ffn/w_down", (48, 128, 768, 2048), M, "train") \
+        == P(None, "model", None, "data")
+    # serve: EP only
+    assert S.param_spec("layers/ffn/w_gate", (48, 128, 2048, 768), M, "serve") \
+        == P(None, "model", None, None)
+
+
+def test_embeddings():
+    assert S.param_spec("embed/w", (128256, 8192), M, "train") == P("model", "data")
+    assert S.param_spec("lm_head/w", (8192, 128256), M, "train") == P("data", "model")
+
+
+def test_indivisible_dims_fall_back_to_replicated():
+    # 10 heads * 256 = 2560 / 16 = 160 OK; but a 6-head 384-dim whisper
+    # projection (384x384): 384 % 16 == 0 -> sharded; 100x100 -> replicated
+    assert S.param_spec("enc_layers/attn/wq/w", (100, 100), M, "train") == P(None, None)
+
+
+def test_norm_scales_fsdp_fallback():
+    # norm scales hit the fallback rule: large dim FSDP-sharded in train,
+    # replicated in serve
+    assert S.param_spec("layers/attn_norm/scale", (24, 2048), M, "train") \
+        == P(None, "data")
+    assert S.param_spec("layers/attn_norm/scale", (24, 2048), M, "serve") \
+        == P(None, None)
+
+
+def test_batch_spec():
+    assert S.batch_spec((256, 4096), M) == P("data")
+    assert S.batch_spec((256, 4096), StubPodMesh()) == P(("pod", "data"))
+    assert S.batch_spec((1, 4096), M) == P()   # indivisible -> replicate
+
+
+def test_cache_spec_batch_and_heads():
+    # (L, B, T, KH, hd): B over data; KH=8 indivisible by 16 -> the cache is
+    # SEQUENCE-parallel over model (avoids the per-layer cache reshard)
+    spec = S.cache_spec("layers/k", (24, 128, 32768, 8, 128), M)
+    assert spec[1] == "data" and spec[2] == "model"
+    # divisible KV heads keep head sharding
+    spec = S.cache_spec("layers/k", (24, 128, 32768, 16, 128), M)
+    assert spec[1] == "data" and spec[3] == "model"
+
+
+def test_cache_spec_long_context_seq_sharding():
+    # batch=1: T spans both axes (2D sequence-parallel cache)
+    spec = S.cache_spec("layers/k", (34, 1, 524288, 4, 256), M)
+    assert spec[1] is None and spec[2] == ("data", "model")

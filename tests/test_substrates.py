@@ -1,0 +1,173 @@
+"""Data pipeline, optimizer, gradient compression, checkpointing, runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import SyntheticLMDataset
+from repro.optim import adamw as O
+from repro.optim import compression as GC
+from repro.runtime import FailureInjector, StragglerMonitor, resilient_train_loop
+
+
+# ---------------- data ----------------
+
+def test_data_deterministic_resume():
+    ds = SyntheticLMDataset(vocab=128, seq_len=32, seed=7)
+    a = ds.batch(5, 8)
+    b = ds.batch(5, 8)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(6, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_shifted():
+    ds = SyntheticLMDataset(vocab=128, seq_len=16, seed=0)
+    b = ds.batch(0, 4)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+
+
+def test_data_host_sharding_partitions():
+    ds = SyntheticLMDataset(vocab=128, seq_len=8, seed=0)
+    full = [ds.batch(3, 8, process_index=i, process_count=4)["tokens"]
+            for i in range(4)]
+    assert all(f.shape == (2, 8) for f in full)
+    # processes generate distinct slices (different rng streams)
+    assert not np.array_equal(full[0], full[1])
+
+
+def test_data_learnable_structure():
+    """bigram structure: successor entropy << unigram entropy."""
+    ds = SyntheticLMDataset(vocab=64, seq_len=256, seed=1)
+    toks = ds.batch(0, 16)["tokens"]
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+    frac_top4 = np.mean([
+        np.mean([v in set(np.bincount(vs, minlength=64).argsort()[-4:]) for v in vs])
+        for vs in pairs.values() if len(vs) > 10])
+    assert frac_top4 > 0.6  # most transitions covered by 4 successors
+
+
+# ---------------- optimizer ----------------
+
+def test_adamw_converges_quadratic():
+    cfg = O.AdamWConfig(lr=0.1, weight_decay=0.0, total_steps=100, warmup_steps=1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = O.adamw_init(params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = O.adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_grad_clip():
+    g, norm = O.clip_by_global_norm({"a": jnp.ones(100) * 10}, 1.0)
+    assert abs(float(jnp.sqrt(jnp.sum(g["a"] ** 2))) - 1.0) < 1e-5
+    assert float(norm) > 99
+
+
+def test_compression_error_feedback_unbiased():
+    """EF-compressed grads converge a least-squares problem ~ as well."""
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (64, 16))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (64,))
+    def grad(w):
+        return {"w": A.T @ (A @ w["w"] - b) / 64}
+    def solve(compress):
+        w = {"w": jnp.zeros(16)}
+        err = GC.compression_init(w)
+        for _ in range(300):
+            g = grad(w)
+            if compress:
+                g, err = GC.compress_gradients(g, err)
+            w = jax.tree.map(lambda p, gg: p - 0.1 * gg, w, g)
+        return float(jnp.mean((A @ w["w"] - b) ** 2))
+    plain, comp = solve(False), solve(True)
+    assert comp < plain * 1.1 + 1e-3, (plain, comp)
+
+
+# ---------------- checkpoint ----------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
+            "step": jnp.asarray(7)}
+    save_checkpoint(str(tmp_path), 42, tree)
+    assert latest_step(str(tmp_path)) == 42
+    step, restored = restore_checkpoint(str(tmp_path), tree)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(4)})
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_async_checkpointer_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, {"x": jnp.full(4, s)})
+    ck.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+    _, t = restore_checkpoint(str(tmp_path), {"x": jnp.zeros(4)})
+    assert float(t["x"][0]) == 4
+
+
+def test_checkpoint_elastic_restore_different_sharding(tmp_path):
+    """mesh-agnostic restore: re-lay arrays with a different sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 0, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    _, restored = restore_checkpoint(str(tmp_path), tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+# ---------------- runtime ----------------
+
+def _toy_setup(tmp_path):
+    def step_fn(state, batch):
+        new = {"w": state["w"] - 0.1 * batch["g"]}
+        return new, {"loss": jnp.sum(new["w"] ** 2)}
+    def batch_fn(step):
+        return {"g": jnp.full((4,), float(step % 3 - 1))}
+    return step_fn, batch_fn
+
+
+def test_resilient_loop_recovers_from_failures(tmp_path):
+    step_fn, batch_fn = _toy_setup(tmp_path)
+    init = {"w": jnp.ones(4)}
+    # failure-free reference
+    ref, _ = resilient_train_loop(
+        init_state=init, step_fn=step_fn, batch_fn=batch_fn, n_steps=20,
+        ckpt_dir=str(tmp_path / "ref"), ckpt_every=5)
+    # with two injected failures
+    got, hist = resilient_train_loop(
+        init_state=init, step_fn=step_fn, batch_fn=batch_fn, n_steps=20,
+        ckpt_dir=str(tmp_path / "chaos"), ckpt_every=5,
+        injector=FailureInjector((7, 13)))
+    assert hist["restarts"] == 2
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(ref["w"]),
+                               rtol=1e-6)
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(warmup=3, k_sigma=3.0)
+    import random
+    random.seed(0)
+    for i in range(20):
+        mon.observe(i, 0.1 + random.random() * 0.005)
+    flagged = mon.observe(20, 1.5)
+    assert flagged and mon.flagged
