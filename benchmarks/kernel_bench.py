@@ -1,6 +1,12 @@
 """Kernel micro-benchmarks: Pallas bbfp_matmul (interpret mode on CPU) and
 the jnp reference path, plus the roofline-relevant arithmetic intensity of
-the BBFP GEMM (int8 path eligibility per format)."""
+the BBFP GEMM (int8 path eligibility per format).
+
+Standalone CLI for the CI bench-smoke job (tiny shapes, JSON artifact so the
+perf trajectory accumulates one BENCH_*.json per commit):
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench --tiny --json BENCH_kernel.json
+"""
 import jax
 import jax.numpy as jnp
 
@@ -9,9 +15,10 @@ from repro.core import bbfp as B
 from repro.kernels import ops, ref
 
 
-def run():
-    a = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
-    b = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
+def run(tiny: bool = False):
+    m, k, n = (64, 128, 64) if tiny else (256, 512, 256)
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
     out = []
     for fmt in ["BBFP(4,2)", "BBFP(6,3)", "BFP4", "INT8"]:
         us_ref = time_us(jax.jit(lambda a, b, f=fmt: ref.bbfp_matmul_ref(a, b, f)), a, b)
@@ -22,7 +29,39 @@ def run():
     us_k = time_us(lambda: ops.bbfp_matmul(a, b, "BBFP(4,2)"))
     out.append(row("kernel/matmul_pallas_interpret_BBFP(4,2)", us_k,
                    "correctness path; TPU perf via BlockSpec tiling"))
-    x = jax.random.normal(jax.random.PRNGKey(2), (64, 4096))
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 512) if tiny else (64, 4096))
     us_l = time_us(lambda: ops.lut_apply(x, "exp"))
     out.append(row("kernel/lut_exp_pallas_interpret", us_l, ""))
     return out
+
+
+def main(argv=None):
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shapes (seconds instead of minutes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a BENCH_*.json artifact")
+    args = ap.parse_args(argv)
+    rows = run(tiny=args.tiny)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r, flush=True)
+    if args.json:
+        recs = []
+        for r in rows:
+            # format names carry commas ("BBFP(4,2)") — split from the right
+            name, us, derived = r.rsplit(",", 2)
+            recs.append({"name": name, "us_per_call": float(us), "derived": derived})
+        payload = {"commit": os.environ.get("GITHUB_SHA", ""),
+                   "tiny": args.tiny, "rows": recs}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,22 +8,26 @@ SINGLE_POD = (16, 16)           # 256 chips (TPU v5e pod slice)
 MULTI_POD = (2, 16, 16)         # 2 pods = 512 chips
 
 
-def _auto(axes):
-    return (jax.sharding.AxisType.Auto,) * len(axes)
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.3x; older jax only has the
+    # default (auto) behaviour, which is what we want anyway
+    if hasattr(jax.sharding, "AxisType"):
+        kinds = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=kinds)
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host actually has — used by tests/examples (1..N CPU
     devices). data axis = all devices, model = 1."""
     n = len(jax.devices())
-    axes = ("data", "model")
-    return jax.make_mesh((n, 1), axes, axis_types=_auto(axes))
+    return _make_mesh((n, 1), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -21,11 +21,22 @@ from repro.quant import linear as Q
 
 
 def generate(cfg, params, prompts, qcfg, gen_len: int, extras=None):
-    """Greedy batched generation. prompts: (B, P) int32."""
+    """Greedy batched generation. prompts: (B, P) int32.
+
+    Decoder-family caches carry a per-slot position vector cache["pos"]
+    (B,), so the single jitted decode below would serve rows at different
+    lengths too — ragged admission/retirement lives in
+    repro.runtime.batcher.ContinuousBatcher; this helper is the dense
+    same-length case (and the batcher's sequential reference)."""
     extras = extras or {}
     b, p_len = prompts.shape
     max_len = p_len + gen_len + (cfg.vis_len or 0)
     logits, cache = M.prefill(params, cfg, prompts, qcfg, max_len=max_len, **extras)
+    pos = jnp.asarray(cache["pos"])
+    if pos.ndim:
+        # dense same-length batch: collapse the per-slot pos vector to a
+        # scalar so decode keeps the contiguous cache-write fast path
+        cache = {**cache, "pos": pos[0]}
     decode = jax.jit(lambda pr, c, t: M.decode_step(pr, cfg, c, t, qcfg))
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [tok]

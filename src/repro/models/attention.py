@@ -65,10 +65,11 @@ def mla_init(key, cfg: C.ArchConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 def _mask(q_pos, k_pos, causal: bool, window) -> jax.Array:
-    """(..., Sq, Sk) bool validity mask. window: 0/None = unbounded."""
-    m = jnp.ones(q_pos.shape + k_pos.shape, bool)
-    qp = q_pos[:, None]
-    kp = k_pos[None, :]
+    """(..., Sq, Sk) bool validity mask. q_pos/k_pos may carry a leading
+    batch dim (per-slot ragged positions). window: 0/None = unbounded."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
     if causal:
         m &= kp <= qp
     if window is not None:
@@ -76,10 +77,15 @@ def _mask(q_pos, k_pos, causal: bool, window) -> jax.Array:
     return m
 
 
+def _score_mask(m: jax.Array) -> jax.Array:
+    """Broadcast a (...,Sq,Sk) validity mask to score rank (B,KH,G,Sq,Sk)."""
+    return m[:, None, None] if m.ndim == 3 else m[None, None, None]
+
+
 def _full_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
     """q: (B,Sq,KH,G,hd); k,v: (B,Sk,KH,hd)."""
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * scale
-    mask = _mask(q_pos, k_pos, causal, window)
+    mask = _score_mask(_mask(q_pos, k_pos, causal, window))
     probs = Q.qsoftmax(scores.astype(jnp.float32), qcfg, axis=-1, where=mask)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
     return out
@@ -102,7 +108,11 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
         widths[axis] = (0, pad)
         x = jnp.pad(x, widths)
         if pos is not None:
-            pos = jnp.concatenate([pos, jnp.full((pad,), 1 << 30, pos.dtype)])
+            # pad positions (time is the LAST pos axis; a leading batch dim is
+            # allowed) with 2^30 so the causal mask kills the pad keys
+            pw = [(0, 0)] * pos.ndim
+            pw[-1] = (0, pad)
+            pos = jnp.pad(pos, pw, constant_values=1 << 30)
         return x, pos
 
     q, q_pos = pad_seq(q, qc, 1, q_pos if q_pos.ndim else None)
@@ -111,11 +121,12 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
     sq, sk = q.shape[1], k.shape[1]
     hd_v = v.shape[-1]
     n_qc, n_kc = sq // qc, sk // kc
-    # static positions let us bound the causal/window KV range per q-chunk
-    static_pos = sq == sk and q_pos is not None
+    # static positions let us bound the causal/window KV range per q-chunk;
+    # only sound for shared (1-D, arange-like) positions, not ragged batches
+    static_pos = sq == sk and q_pos is not None and q_pos.ndim == 1
 
     def q_chunk_body(qi):
-        qs = q_pos[qi * qc:(qi + 1) * qc] if q_pos.ndim else q_pos
+        qs = q_pos[..., qi * qc:(qi + 1) * qc] if q_pos.ndim else q_pos
         q_blk = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
 
         # §Perf H1 (causal chunk skip): q-chunk qi can only see kv chunks
@@ -134,14 +145,15 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
             m_run, l_run, acc = carry
             k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
             v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
-            ks_ = jax.lax.dynamic_slice_in_dim(k_pos, ki * kc, kc, axis=0)
+            ks_ = jax.lax.dynamic_slice_in_dim(k_pos, ki * kc, kc,
+                                               axis=k_pos.ndim - 1)
             s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk).astype(jnp.float32) * scale
-            msk = _mask(qs, ks_, causal, window)
-            s = jnp.where(msk[None, None, None], s, -1e30)
+            msk = _score_mask(_mask(qs, ks_, causal, window))
+            s = jnp.where(msk, s, -1e30)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
             # LUT exp on the (<=0) shifted scores; rescale stays exact fp32
             p = Q.qexp_for_online_softmax(s - m_new[..., None], qcfg)
-            p = jnp.where(msk[None, None, None], p, 0.0)
+            p = jnp.where(msk, p, 0.0)
             corr = jnp.exp(m_run - m_new)
             l_new = l_run * corr + jnp.sum(p, axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
@@ -170,10 +182,12 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
     """x: (B,S,d). Returns (out, new_cache).
 
     cache: {"k": (B,T,KH,hd), "v": ...} pre-allocated; pos: current write
-    index (decode). kv_override: (k, v, k_positions) for cross-attention.
+    index (decode) — either a shared scalar or a per-slot (B,) vector for
+    ragged continuous batching (each batch row writes/masks at its own
+    position). kv_override: (k, v, k_positions) for cross-attention.
     ring_positions: (true_pos, capacity) when the cache is a ring buffer —
     `pos` is then the write SLOT and validity is true_pos-based (every live
-    slot holds one of the last `capacity` positions).
+    slot holds one of the last `capacity` positions); scalar-pos only.
     """
     b, s, d = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -204,8 +218,21 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         k_st = Q.qkv_cache(k, qcfg).astype(cache["k"].dtype)
         v_st = Q.qkv_cache(v, qcfg).astype(cache["v"].dtype)
         if pos is not None:   # decode: write this step's k/v at pos
-            k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_st, pos, axis=1)
-            v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_st, pos, axis=1)
+            if jnp.ndim(pos):   # ragged: each slot writes at its own offset
+                if ring_positions is not None:
+                    raise NotImplementedError(
+                        "ring-buffer caches (griffin) are scalar-pos only")
+                # batched scatter: B rows, not a full-cache rewrite.
+                # mode="drop" makes a write at pos >= T a no-op (NOTE: the
+                # scalar path below instead CLAMPS to row T-1 — callers must
+                # keep pos < T; the batcher rejects oversized requests).
+                bidx = jnp.arange(k_st.shape[0])
+                pv = jnp.asarray(pos)
+                k_all = cache["k"].at[bidx, pv].set(k_st[:, 0], mode="drop")
+                v_all = cache["v"].at[bidx, pv].set(v_st[:, 0], mode="drop")
+            else:
+                k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_st, pos, axis=1)
+                v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_st, pos, axis=1)
             new_cache = {"k": k_all, "v": v_all}
             k, v = k_all.astype(dt), v_all.astype(dt)
             k_pos = jnp.arange(cache["k"].shape[1])
@@ -221,15 +248,24 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     s_kv = k.shape[1]
     if pos is not None:
-        # decode: mask by pos (cache beyond pos is garbage)
+        # decode: mask by per-slot pos (cache rows beyond a slot's pos are
+        # garbage). valid is (T,) for scalar pos, (B,T) for ragged vectors.
         if ring_positions is not None:
             true_pos, _cap = ring_positions
             valid = k_pos <= true_pos          # slot j first written at step j
+            where = valid[None, None, None, None, :]
         else:
             eff_window = window if window is not None else s_kv + 1
-            valid = (k_pos <= pos) & (k_pos > pos - eff_window)
+            pv = jnp.asarray(pos)
+            if pv.ndim:
+                valid = (k_pos[None, :] <= pv[:, None]) & \
+                        (k_pos[None, :] > pv[:, None] - eff_window)
+                where = valid[:, None, None, None, :]
+            else:
+                valid = (k_pos <= pos) & (k_pos > pos - eff_window)
+                where = valid[None, None, None, None, :]
         scores = jnp.einsum("bqkgd,bskd->bkgqs", q_grp, k).astype(jnp.float32) * scale
-        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=valid[None, None, None, None, :])
+        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=where)
         out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(dt), v)
     elif s_kv <= FULL_ATTN_MAX:
         out = _full_attention(q_grp, k, v, positions if positions is not None else jnp.arange(s),
@@ -276,8 +312,14 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         # already 4.5x smaller than a GQA cache, so the win is small anyway.
         ckv_st = ckv.astype(cache["ckv"].dtype)
         kr_st = k_rope.astype(cache["krope"].dtype)
-        ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_st, pos, axis=1)
-        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_st, pos, axis=1)
+        pv = jnp.asarray(pos)
+        if pv.ndim:   # ragged: per-slot write offsets (B,), batched scatter
+            bidx = jnp.arange(ckv_st.shape[0])
+            ckv_all = cache["ckv"].at[bidx, pv].set(ckv_st[:, 0], mode="drop")
+            kr_all = cache["krope"].at[bidx, pv].set(kr_st[:, 0], mode="drop")
+        else:
+            ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_st, pos, axis=1)
+            kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_st, pos, axis=1)
         new_cache = {"ckv": ckv_all, "krope": kr_all}
         t = ckv_all.shape[1]
         # absorbed attention: q_nope -> lora space via w_uk
@@ -286,8 +328,11 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         s_nope = jnp.einsum("bqhl,btl->bhqt", q_lora, ckv_all.astype(dt))
         s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope, kr_all.astype(dt))
         scores = (s_nope + s_rope).astype(jnp.float32) * scale
-        valid = jnp.arange(t) <= pos
-        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=valid[None, None, None, :])
+        if pv.ndim:
+            where = (jnp.arange(t)[None, :] <= pv[:, None])[:, None, None, :]
+        else:
+            where = (jnp.arange(t) <= pos)[None, None, None, :]
+        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=where)
         ctx = jnp.einsum("bhqt,btl->bqhl", probs.astype(dt), ckv_all.astype(dt))
         w_uv = params["w_uv"]["w"].reshape(lora, h, vdim).astype(dt)
         out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)

@@ -260,6 +260,11 @@ def prefill(params, cfg, tokens, qcfg, max_len=None, vis_embed=None):
 
 
 def decode_step(params, cfg, cache, tokens, qcfg):
+    if jnp.ndim(cache["pos"]):
+        raise NotImplementedError(
+            "griffin decode is sequence-synchronous: conv/LRU states carry no "
+            "per-slot time index, so ragged per-slot positions (pos vector) "
+            "are unsupported — pad the batch to a common length instead")
     pat, n_periods, tail = _pattern_counts(cfg)
     g = cfg.griffin
     pos = cache["pos"]

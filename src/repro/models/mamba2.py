@@ -197,6 +197,11 @@ def prefill(params, cfg, tokens, qcfg, max_len=None, vis_embed=None):
 
 def decode_step(params, cfg, cache, tokens, qcfg):
     """One step: state update h = a h + dt B x^T per head. tokens (B,1)."""
+    if jnp.ndim(cache["pos"]):
+        raise NotImplementedError(
+            "mamba2 decode is sequence-synchronous: the SSM state has no "
+            "per-slot time index, so ragged per-slot positions (pos vector) "
+            "are unsupported — pad the batch to a common length instead")
     s = cfg.ssm
     d_inner, nheads, conv_dim = _dims(cfg)
     h = params["embed"]["w"][tokens].astype(cfg.compute_dtype)  # (B,1,d)

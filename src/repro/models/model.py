@@ -6,6 +6,11 @@
   init_cache(cfg, batch, max_len)         -> cache
   prefill(params, cfg, tokens, qcfg, ...) -> (last logits, cache)
   decode_step(params, cfg, cache, tok, qcfg) -> (logits, cache)
+
+Cache contract: for the decoder family, cache["pos"] is a PER-SLOT position
+vector (batch,) int32 — rows may decode at different sequence lengths in one
+jitted step (ragged continuous batching). The mamba2/griffin/whisper shims
+are sequence-synchronous (scalar pos) and explicitly reject ragged vectors.
 """
 from __future__ import annotations
 

@@ -158,7 +158,7 @@ def forward(params, cfg: C.ArchConfig, tokens, qcfg: Q.QuantConfig,
 
     new_cache = None
     if cache is not None:
-        new_cache = {"layers": layer_caches, "pos": jnp.asarray(s, jnp.int32)}
+        new_cache = {"layers": layer_caches, "pos": jnp.full((b,), s, jnp.int32)}
         if n_dense:
             new_cache["dense"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dense_caches)
     return logits, new_cache, aux_total
@@ -199,12 +199,16 @@ def _cache_proto(cfg: C.ArchConfig, b: int, t: int):
 
 
 def init_cache(cfg: C.ArchConfig, b: int, max_len: int):
+    """Decoder cache contract: cache["pos"] is a PER-SLOT position vector
+    (b,) int32 — batch rows may sit at different sequence lengths (ragged
+    continuous batching). Legacy scalar `pos` is still accepted by
+    decode_step and broadcast."""
     n_dense = cfg.moe.first_dense if cfg.moe else 0
     n_scan = cfg.n_layers - n_dense
     stack = lambda proto, n: jax.tree.map(
         lambda x: jnp.zeros((n,) + x.shape, x.dtype), proto)
     cache = {"layers": stack(_cache_proto(cfg, b, max_len), n_scan),
-             "pos": jnp.asarray(0, jnp.int32)}
+             "pos": jnp.zeros((b,), jnp.int32)}
     if n_dense:
         cache["dense"] = stack(_cache_proto(cfg, b, max_len), n_dense)
     return cache
@@ -233,12 +237,17 @@ def prefill(params, cfg: C.ArchConfig, tokens, qcfg: Q.QuantConfig,
 
 
 def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
-    """One token step. tokens: (B,1). Returns (logits (B,V), new cache)."""
-    pos = cache["pos"]
+    """One token step. tokens: (B,1). Returns (logits (B,V), new cache).
+
+    cache["pos"] is the per-slot position vector (B,) — slots may sit at
+    DIFFERENT sequence lengths (ragged continuous batching): each row RoPEs,
+    writes K/V, and masks attention at its own position, so one jitted call
+    serves the whole batch. A scalar pos keeps the dense fast path (shared
+    rope row, contiguous dynamic_update_slice instead of a scatter)."""
     h = _embed(params, cfg, tokens)
     b = h.shape[0]
-    positions = pos[None] if pos.ndim == 0 else pos
-    positions = jnp.asarray(positions).reshape(1)
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    positions = pos[:, None] if pos.ndim else pos.reshape(1)
     windows = layer_windows(cfg)
     t = jax.tree.leaves(cache["layers"])[0].shape[2]
 

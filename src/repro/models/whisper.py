@@ -153,6 +153,11 @@ def prefill(params, cfg, tokens, qcfg, max_len=None, frames=None, vis_embed=None
 
 
 def decode_step(params, cfg, cache, tokens, qcfg):
+    if jnp.ndim(cache["pos"]):
+        raise NotImplementedError(
+            "whisper decode uses a learned position-table lookup shared by "
+            "the batch; ragged per-slot positions (pos vector) are "
+            "unsupported — pad the batch to a common length instead")
     pos = cache["pos"]
     b = tokens.shape[0]
     enc_h = cache["enc_h"].astype(cfg.compute_dtype)

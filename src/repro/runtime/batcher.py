@@ -5,24 +5,32 @@ are admitted into free slots as others finish (EOS or max_new), so the
 decode batch stays full instead of draining to the slowest request —
 the thing that actually determines serving throughput at scale.
 
-Mechanics kept deliberately explicit (and tested):
-  * one shared KV cache of capacity (B, max_len) — a new request PREFILLS
-    into a staging cache of its own, and its K/V rows are spliced into the
-    shared cache at its slot (per-layer dynamic_update_slice);
-  * per-slot position counters double as attention masks (gqa decode
-    already masks by pos), so slots at different sequence lengths coexist
-    in one decode batch;
-  * the decode step is jitted ONCE; admissions only touch cache buffers.
+Ragged-position cache contract (tested in tests/test_ragged_decode.py):
+  * one shared KV cache of capacity (B, max_len) whose cache["pos"] is a
+    PER-SLOT position vector (B,) int32 — slots at arbitrary, distinct
+    sequence lengths decode together. Each row RoPEs its query, writes its
+    K/V, and masks attention at its own position;
+  * consequently step() issues exactly ONE jitted decode call per tick, no
+    matter how many distinct lengths are active (the old implementation
+    looped over position groups, degrading exactly when traffic is ragged);
+  * a new request PREFILLS into a staging cache of its own, and its K/V
+    rows are spliced into rows [0, p_len) of its slot in the shared cache
+    (per-layer dynamic_update_slice); its slot's pos entry is then set to
+    the prompt length. Requests that cannot fit (prompt + max_new >
+    max_len) are rejected at submit();
+  * idle and just-finished slots keep decoding garbage in the same call —
+    their pos is pinned back to 0 and their outputs discarded, so they cost
+    one masked row instead of a retrace.
 
 Works with every decoder-family arch and any QuantConfig (incl. the full
-BBAL serving stack). SSM/griffin caches key their state differently, so the
-batcher currently targets the transformer family (the assigned serving
+BBAL serving stack). SSM/griffin caches are sequence-synchronous (scalar
+pos, no per-slot time index) and explicitly reject ragged position vectors,
+so the batcher targets the transformer family (the assigned serving
 shapes' family).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -46,23 +54,38 @@ class ContinuousBatcher:
         assert cfg.family == "decoder", "batcher targets the decoder family"
         self.cfg, self.params, self.qcfg = cfg, params, qcfg
         self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
-        self.cache = M.init_cache(cfg, n_slots, max_len)
-        self.pos = [0] * n_slots                  # per-slot write position
+        self.cache = M.init_cache(cfg, n_slots, max_len)   # cache["pos"]: (B,)
         self.slot_req: list[Request | None] = [None] * n_slots
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self._decode = jax.jit(
             lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg))
+        self.decode_calls = 0          # jitted decode invocations (1 per tick)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+
+    @property
+    def pos(self) -> list[int]:
+        """Host copy of the per-slot KV position vector."""
+        return [int(p) for p in jax.device_get(self.cache["pos"])]
 
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request):
+        # a ragged decode write past max_len is silently dropped (scatter
+        # mode="drop"), so a request that cannot fit would diverge from
+        # sequential decoding with no error — reject it up front instead
+        need = req.prompt.shape[0] + req.max_new
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid} needs up to {need} KV rows (prompt "
+                f"{req.prompt.shape[0]} + max_new {req.max_new}) but the "
+                f"shared cache capacity is max_len={self.max_len}")
         self.queue.append(req)
 
     def _splice(self, slot: int, staged_cache, p_len: int):
-        """Copy a prefilled request's K/V rows into `slot` of the shared
-        cache (leading dims: layers..., batch, time, ...)."""
+        """Copy a prefilled request's K/V rows into rows [0, p_len) of
+        `slot` in the shared cache (leading dims: layers..., batch, time,
+        ...); the slot's pos entry is then set to p_len by _admit."""
         def one(dst, src):
             if dst.ndim < 3 or dst.shape[1] != self.n_slots:
                 return dst
@@ -72,63 +95,66 @@ class ContinuousBatcher:
             return jax.lax.dynamic_update_slice(
                 dst, upd.astype(dst.dtype),
                 (0, slot, 0) + (0,) * (dst.ndim - 3))
-        new_layers = jax.tree.map(one, self.cache["layers"], staged_cache["layers"])
-        self.cache = {**self.cache, "layers": new_layers}
+        new_cache = {**self.cache,
+                     "layers": jax.tree.map(one, self.cache["layers"],
+                                            staged_cache["layers"])}
+        if "dense" in self.cache:   # MoE archs with leading dense layers
+            new_cache["dense"] = jax.tree.map(one, self.cache["dense"],
+                                              staged_cache["dense"])
+        self.cache = new_cache
 
     def _admit(self):
         for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = req.prompt[None, :]
-            logits, staged = M.prefill(self.params, self.cfg, prompt,
-                                       self.qcfg, max_len=self.max_len)
-            self._splice(slot, staged, req.prompt.shape[0])
-            self.pos[slot] = req.prompt.shape[0]
-            tok = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(tok)
-            self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
-            self.slot_req[slot] = req
+            while self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                p_len = req.prompt.shape[0]
+                logits, staged = M.prefill(self.params, self.cfg,
+                                           req.prompt[None, :], self.qcfg,
+                                           max_len=self.max_len)
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+                if len(req.out_tokens) >= req.max_new or \
+                        (self.eos is not None and tok == self.eos):
+                    # budget met / EOS at prefill: retire without ever
+                    # occupying the slot; try the next queued request
+                    req.done = True
+                    self.finished.append(req)
+                    continue
+                self._splice(slot, staged, p_len)
+                self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+                self.cache = {**self.cache,
+                              "pos": self.cache["pos"].at[slot].set(p_len)}
+                self.slot_req[slot] = req
 
     # -- the decode tick ----------------------------------------------------
 
     def step(self):
-        """One batched decode tick: admit, decode all active slots, retire."""
+        """One batched decode tick: admit, ONE jitted decode over all slots
+        (each at its own position), retire finished requests."""
         self._admit()
         if all(r is None for r in self.slot_req):
             return False
-        # the shared cache's pos is per-batch scalar in this implementation;
-        # decode each *distinct* position group together (usually 1-2 groups)
-        groups: dict[int, list[int]] = {}
-        for s, r in enumerate(self.slot_req):
-            if r is not None:
-                groups.setdefault(self.pos[s], []).append(s)
-        for pos, slots in sorted(groups.items()):
-            cache = {**self.cache, "pos": jnp.asarray(pos, jnp.int32)}
-            logits, new_cache = self._decode(self.params, cache, self.cur_tok)
-            # keep only the written rows of the participating slots
-            def keep(dst, src):
-                if dst.ndim < 3 or dst.shape[1] != self.n_slots:
-                    return src
-                mask = jnp.zeros((self.n_slots,), bool).at[jnp.asarray(slots)].set(True)
-                return jnp.where(mask[None, :, None, None] if dst.ndim == 4
-                                 else mask[(None, slice(None)) + (None,) * (dst.ndim - 2)],
-                                 src, dst)
-            self.cache = {**self.cache,
-                          "layers": jax.tree.map(keep, self.cache["layers"],
-                                                 new_cache["layers"])}
-            for s in slots:
-                req = self.slot_req[s]
-                tok = int(jnp.argmax(logits[s]))
-                req.out_tokens.append(tok)
-                self.cur_tok = self.cur_tok.at[s, 0].set(tok)
-                self.pos[s] = pos + 1
-                if len(req.out_tokens) >= req.max_new or \
-                        (self.eos is not None and tok == self.eos):
-                    req.done = True
-                    self.finished.append(req)
-                    self.slot_req[s] = None
-                    self.pos[s] = 0
+        logits, new_cache = self._decode(self.params, self.cache, self.cur_tok)
+        self.decode_calls += 1
+        toks = jax.device_get(jnp.argmax(logits, axis=-1))      # (B,) host
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(toks[s])
+            req.out_tokens.append(tok)
+            if len(req.out_tokens) >= req.max_new or \
+                    (self.eos is not None and tok == self.eos):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None
+        # single vectorized state update: live slots take their new token and
+        # advanced position; idle/finished slots are pinned back to pos 0
+        live = jnp.asarray([r is not None for r in self.slot_req])
+        self.cur_tok = jnp.where(live[:, None],
+                                 jnp.asarray(toks, jnp.int32)[:, None],
+                                 self.cur_tok)
+        self.cache = {**new_cache,
+                      "pos": jnp.where(live, new_cache["pos"], 0)}
         return True
 
     def run(self, max_ticks: int = 1000):

@@ -1,0 +1,156 @@
+"""Ragged continuous batching: per-slot KV positions in the shared cache.
+
+Covers the acceptance criteria of the ragged-decode rework:
+  * ContinuousBatcher.step() issues exactly ONE jitted decode call per tick
+    while slots sit at >= 3 distinct positions;
+  * outputs are token-for-token identical to per-request sequential decode;
+  * legacy scalar-pos caches still decode (broadcast compat);
+  * sequence-synchronous families (mamba2/griffin) explicitly reject
+    ragged position vectors.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.quant import linear as Q
+from repro.runtime.batcher import ContinuousBatcher, Request
+
+KEY = jax.random.PRNGKey(7)
+
+
+def test_ragged_slots_single_decode_matches_sequential():
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    lens = [5, 9, 14]                      # three distinct prompt lengths
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, i), (n,), 0, cfg.vocab)
+               for i, n in enumerate(lens)]
+    gen = 6
+    refs = [generate(cfg, params, p[None, :], Q.FP, gen_len=gen)[0].tolist()
+            for p in prompts]
+
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=3, max_len=64)
+    calls = []
+    inner = bat._decode
+    bat._decode = lambda *a: (calls.append(1), inner(*a))[1]
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+
+    ticks = 0
+    while bat.queue or any(r is not None for r in bat.slot_req):
+        before = len(calls)
+        assert bat.step(), "live requests must decode"
+        ticks += 1
+        # exactly ONE jitted decode per tick, however ragged the batch is
+        assert len(calls) == before + 1
+        if ticks == 1:
+            live = [bat.pos[s] for s, r in enumerate(bat.slot_req)
+                    if r is not None]
+            assert len(live) == 3 and len(set(live)) == 3, live
+    assert bat.decode_calls == ticks == len(calls)
+
+    got = {r.rid: r.out_tokens[:gen] for r in bat.finished}
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, (i, got[i], ref)
+
+
+def test_ragged_refill_keeps_one_call_per_tick():
+    """more requests than slots: admissions refill freed slots mid-run,
+    still one decode per tick."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=48)
+    for i in range(5):
+        bat.submit(Request(rid=i, prompt=jnp.arange(4 + 3 * i, dtype=jnp.int32),
+                           max_new=3 + i % 2))
+    finished, ticks = bat.run()
+    assert len(finished) == 5
+    assert bat.decode_calls == ticks
+    assert all(len(r.out_tokens) == r.max_new for r in finished)
+
+
+def test_ragged_moe_dense_layers_match_sequential():
+    """MoE archs with leading dense layers keep a separate cache['dense'] —
+    _splice must copy it too (regression: it was silently skipped)."""
+    import dataclasses
+    cfg = configs.smoke_config("deepseek_v2_lite_16b")   # first_dense=1, MLA
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = M.init(cfg, KEY)
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, 10 + i), (6 + 3 * i,),
+                                  0, cfg.vocab) for i in range(2)]
+    gen = 4
+    refs = [generate(cfg, params, p[None, :], Q.FP, gen_len=gen)[0].tolist()
+            for p in prompts]
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=32)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    finished, _ = bat.run()
+    got = {r.rid: r.out_tokens[:gen] for r in finished}
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, (i, got[i], ref)
+
+
+def test_submit_rejects_request_exceeding_capacity():
+    """a decode write past max_len is a silent no-op, so an oversized
+    request must be rejected up front, not silently diverge."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=1, max_len=14)
+    with pytest.raises(ValueError, match="KV rows"):
+        bat.submit(Request(rid=0, prompt=jnp.arange(10, dtype=jnp.int32),
+                           max_new=8))
+    bat.submit(Request(rid=1, prompt=jnp.arange(10, dtype=jnp.int32),
+                       max_new=4))          # exactly fits
+    finished, _ = bat.run()
+    assert len(finished) == 1 and len(finished[0].out_tokens) == 4
+
+
+def test_scalar_pos_cache_keeps_dense_fast_path():
+    """a scalar cache['pos'] (dense same-length serving) decodes through the
+    contiguous-write fast path and matches the ragged vector path."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 6), 0, cfg.vocab)
+    _, cache = M.prefill(params, cfg, toks, Q.FP, max_len=16)
+    assert cache["pos"].shape == (2,)              # ragged-native contract
+    ref_logits, _ = M.decode_step(params, cfg, cache, toks[:, :1], Q.FP)
+    cache["pos"] = jnp.asarray(6, jnp.int32)       # collapse to dense scalar
+    logits, cache2 = M.decode_step(params, cfg, cache, toks[:, :1], Q.FP)
+    assert jnp.ndim(cache2["pos"]) == 0            # scalar stays scalar
+    assert int(cache2["pos"]) == 7
+    assert float(jnp.max(jnp.abs(logits - ref_logits))) < 1e-5
+
+
+def test_prefill_token_respects_budget_and_eos():
+    """max_new and eos apply to the prefill-produced token too: such
+    requests retire at admission without occupying a slot."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prompt = jnp.arange(6, dtype=jnp.int32)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=32)
+    bat.submit(Request(rid=0, prompt=prompt, max_new=1))
+    finished, _ = bat.run()
+    assert len(finished) == 1 and len(finished[0].out_tokens) == 1
+    assert bat.decode_calls == 0
+    # same prompt, eos set to the token prefill will greedily emit
+    eos = finished[0].out_tokens[0]
+    bat2 = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=32,
+                             eos_id=eos)
+    bat2.submit(Request(rid=1, prompt=prompt, max_new=8))
+    finished2, _ = bat2.run()
+    assert len(finished2) == 1 and finished2[0].out_tokens == [eos]
+    assert bat2.decode_calls == 0
+
+
+@pytest.mark.parametrize("arch", ["mamba2_2_7b", "recurrentgemma_2b"])
+def test_sequence_synchronous_families_reject_ragged(arch):
+    cfg = configs.smoke_config(arch)
+    params = M.init(cfg, KEY)
+    toks = jnp.zeros((2, 4), jnp.int32)
+    _, cache = M.prefill(params, cfg, toks, Q.FP, max_len=16)
+    cache["pos"] = jnp.asarray([4, 3], jnp.int32)  # ragged vector
+    with pytest.raises(NotImplementedError, match="sequence-synchronous"):
+        M.decode_step(params, cfg, cache, toks[:, :1], Q.FP)

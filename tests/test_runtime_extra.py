@@ -34,6 +34,7 @@ def test_griffin_ring_buffer_wraparound():
     assert err < 3e-2 * scale, (err, scale)
 
 
+@pytest.mark.slow   # subprocess re-launch; minutes of XLA re-compilation
 def test_elastic_restart_across_device_counts(tmp_path):
     """checkpoint written under 1 device restores under 4 fake devices with
     a sharded layout (the elastic-scaling path); loss continues identically."""

@@ -13,6 +13,8 @@ from repro.optim import adamw as O
 from repro.optim import compression as GC
 from repro.runtime import FailureInjector, StragglerMonitor, resilient_train_loop
 
+pytestmark = pytest.mark.slow   # full suite on main; excluded from PR CI
+
 
 # ---------------- data ----------------
 

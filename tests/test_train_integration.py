@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow   # full suite on main; excluded from PR CI
+
 from repro import configs
 from repro.data import SyntheticLMDataset
 from repro.launch import steps as ST
