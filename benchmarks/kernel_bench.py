@@ -1,12 +1,17 @@
 """Kernel micro-benchmarks: Pallas bbfp_matmul (interpret mode on CPU) and
 the jnp reference path, plus the roofline-relevant arithmetic intensity of
-the BBFP GEMM (int8 path eligibility per format).
+the BBFP GEMM (int8 path eligibility per format) — and the SERVING path:
+decode-tick latency and KV-bytes-per-slot of the continuous batcher under
+both KV layouts (dense slab vs paged block allocator), so the perf
+trajectory tracks the numbers that actually move serving throughput.
 
 Standalone CLI for the CI bench-smoke job (tiny shapes, JSON artifact so the
 perf trajectory accumulates one BENCH_*.json per commit):
 
   PYTHONPATH=src python -m benchmarks.kernel_bench --tiny --json BENCH_kernel.json
 """
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -32,6 +37,48 @@ def run(tiny: bool = False):
     x = jax.random.normal(jax.random.PRNGKey(2), (8, 512) if tiny else (64, 4096))
     us_l = time_us(lambda: ops.lut_apply(x, "exp"))
     out.append(row("kernel/lut_exp_pallas_interpret", us_l, ""))
+    out.extend(serving_rows(tiny=tiny))
+    return out
+
+
+def serving_rows(tiny: bool = False):
+    """Serving-path metrics: steady-state decode-tick latency and KV bytes
+    per slot for the continuous batcher, dense slab vs paged allocator.
+    (Bytes rows reuse the value column; `derived` labels the unit.)"""
+    from repro import configs
+    from repro.models import model as M
+    from repro.quant import linear as Q
+    from repro.runtime.batcher import ContinuousBatcher, Request
+
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, jax.random.PRNGKey(3))
+    n_slots, max_len, gen = (2, 64, 14) if tiny else (4, 128, 24)
+    timed_ticks = 4 if tiny else 8
+    out = []
+    for layout in ("dense", "paged"):
+        bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=n_slots,
+                                max_len=max_len, kv_layout=layout)
+        for i in range(n_slots):
+            p_len = 5 + 7 * i                   # ragged mix
+            prompt = jax.random.randint(jax.random.fold_in(
+                jax.random.PRNGKey(4), i), (p_len,), 0, cfg.vocab)
+            bat.submit(Request(rid=i, prompt=prompt, max_new=gen))
+        bat.step()                              # admit + compile the decode
+        stats = bat.kv_stats()                  # measured at full load
+        t0 = time.perf_counter()
+        n = 0
+        while n < timed_ticks and bat.step():
+            n += 1
+        us_tick = (time.perf_counter() - t0) / max(n, 1) * 1e6
+        out.append(row(f"serve/decode_tick_{layout}", us_tick,
+                       f"slots={n_slots} max_len={max_len} one-jit-per-tick"))
+        out.append(row(f"serve/kv_bytes_per_slot_{layout}",
+                       stats["kv_bytes_per_slot"], "unit=bytes (store/slots)"))
+        if layout == "paged":
+            out.append(row("serve/kv_bytes_in_use_paged",
+                           stats["kv_bytes_in_use"],
+                           f"unit=bytes pages={stats['pages_in_use']}"
+                           f"/{stats['pages_total']}"))
     return out
 
 

@@ -128,12 +128,23 @@ def parse_format(spec: str) -> QuantFormat:
 
 def _exponent(x: jax.Array) -> jax.Array:
     """floor(log2 |x|) as int32; zeros map to _EXP_MIN (so they never drive
-    the block max). Clipped into the 5-bit shared-exponent range."""
+    the block max). Clipped into the 5-bit shared-exponent range.
+
+    Edge-case contract (shared with the Pallas kernel's raw-bias bit trick,
+    ``kernels.bbfp_matmul._exponent_tile``; parity-tested):
+      * zeros (±0)            -> _EXP_MIN  (never drive the block max)
+      * subnormals            -> _EXP_MIN  (true exponent <= -127, clipped)
+      * |x| >= 2^15           -> _EXP_MAX  (5-bit shared-exponent saturation)
+      * inf / nan             -> _EXP_MAX  (the bit trick reads the all-ones
+        exponent field as 128 and clips; frexp instead returns e=0, so the
+        non-finite case must be pinned explicitly here)
+    """
     ax = jnp.abs(x).astype(jnp.float32)
     # frexp: x = f * 2^e with f in [0.5, 1)  =>  floor(log2|x|) = e - 1
     _, e = jnp.frexp(ax)
     e = (e - 1).astype(jnp.int32)
     e = jnp.where(ax == 0, _EXP_MIN, e)
+    e = jnp.where(jnp.isfinite(ax), e, _EXP_MAX)
     return jnp.clip(e, _EXP_MIN, _EXP_MAX)
 
 
@@ -277,6 +288,9 @@ def folded_max(fmt: QuantFormat) -> int:
     """Max |q_int| after flag folding — decides int8 vs wider accumulation."""
     if fmt.kind == "bbfp":
         return (2**fmt.mantissa - 1) << fmt.shift
+    if fmt.kind == "int":
+        # symmetric int: mantissa clips at 2^(m-1)-1 (INT8 -> 127, int8-safe)
+        return 2 ** (fmt.mantissa - 1) - 1
     return 2**fmt.mantissa - 1
 
 
@@ -304,9 +318,12 @@ def pack_weight(w: jax.Array, fmt: QuantFormat, cast_dtype=jnp.bfloat16):
     else:
         fold = qd["mantissa"]
     q2 = qd["sign"] * fold                          # (..., N, nb, 32)
-    nb = k // DEFAULT_BLOCK
     q = jnp.swapaxes(q2.reshape(*lead, n, k), -2, -1)
-    scale2 = jnp.exp2((qd["exp"] - fmt.mantissa + 1).astype(jnp.float32))
+    if fmt.kind == "int":
+        # int kind stores the float absmax scale directly in the 'exp' slot
+        scale2 = qd["exp"].astype(jnp.float32)
+    else:
+        scale2 = jnp.exp2((qd["exp"] - fmt.mantissa + 1).astype(jnp.float32))
     scale = jnp.swapaxes(scale2, -2, -1)            # (..., nb, N)
     dtype = jnp.int8 if folded_max(fmt) <= 127 else jnp.int16
     return {"q": q.astype(dtype), "scale": scale}

@@ -32,7 +32,14 @@ KBLOCK = B.DEFAULT_BLOCK  # 32
 
 
 def _exponent_tile(x):
-    """floor(log2|x|) for fp32 x via bit tricks (no frexp in Mosaic)."""
+    """floor(log2|x|) for fp32 x via bit tricks (no frexp in Mosaic).
+
+    Matches ``core.bbfp._exponent`` exactly on every edge class (tested in
+    tests/test_bbfp_format.py): ±0 and subnormals clip to _EXP_MIN (the
+    raw biased field reads 0 -> -127), |x| >= 2^15 saturates the 5-bit
+    shared exponent at _EXP_MAX, and inf/nan (biased field 255 -> +128)
+    clip to _EXP_MAX — so the kernel and the oracle pick identical shared
+    exponents instead of silently diverging on extreme inputs."""
     bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
     e = ((bits >> 23) & 0xFF) - 127
     e = jnp.where(x == 0.0, B._EXP_MIN, e)

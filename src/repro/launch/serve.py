@@ -3,6 +3,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --quant "BBFP(4,2)"
+
+Continuous-batching mode (ragged prompts through the paged-KV scheduler;
+--page-size/--n-pages set the page geometry and pool budget, --kv-layout
+dense falls back to the slab cache):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
+      --continuous --batch 8 --slots 4 --max-len 128 --page-size 32
 """
 from __future__ import annotations
 
@@ -57,6 +64,18 @@ def main(argv=None):
     p.add_argument("--quant", default="BBFP(4,2)")
     p.add_argument("--nonlinear", default="BBFP(10,5)")
     p.add_argument("--seed", type=int, default=0)
+    # continuous-batching / paged-KV serving mode
+    p.add_argument("--continuous", action="store_true",
+                   help="serve ragged requests through ContinuousBatcher")
+    p.add_argument("--slots", type=int, default=4,
+                   help="decode slots in the continuous batcher")
+    p.add_argument("--max-len", type=int, default=128,
+                   help="per-request KV capacity (prompt + max_new - 1)")
+    p.add_argument("--kv-layout", choices=["paged", "dense"], default="paged")
+    p.add_argument("--page-size", type=int, default=32,
+                   help="KV rows per page (32 = BBFP quantisation block)")
+    p.add_argument("--n-pages", type=int, default=None,
+                   help="page pool budget (default: slots * max_len/page)")
     args = p.parse_args(argv)
 
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
@@ -73,6 +92,32 @@ def main(argv=None):
             key, (args.batch, cfg.encoder.n_frames, cfg.d_model)) * 0.1
 
     mesh = make_host_mesh()
+    if args.continuous:
+        from repro.runtime.batcher import ContinuousBatcher, Request
+        assert cfg.family == "decoder", "continuous mode targets decoders"
+        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=args.slots,
+                                max_len=args.max_len,
+                                kv_layout=args.kv_layout,
+                                page_size=args.page_size,
+                                n_pages=args.n_pages)
+        for i in range(args.batch):   # ragged mix around --prompt-len
+            p_len = max(1, args.prompt_len - 4 + (3 * i) % 9)
+            prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                        (p_len,), 0, cfg.vocab)
+            bat.submit(Request(rid=i, prompt=prompt, max_new=args.gen))
+        with PT.activation_sharding(mesh, PT.SERVE_RULES):
+            t0 = time.perf_counter()
+            finished, ticks = bat.run()
+            dt = time.perf_counter() - t0
+        n_new = sum(len(r.out_tokens) for r in finished)
+        stats = bat.kv_stats()
+        print(f"arch={cfg.name} quant={qcfg.linear}/{qcfg.nonlinear} "
+              f"layout={stats['kv_layout']}")
+        print(f"served {len(finished)} requests / {n_new} tokens in "
+              f"{dt:.2f}s over {ticks} ticks ({bat.decode_calls} decode "
+              f"calls, {bat.prefill_traces} prefill traces)")
+        print("kv:", {k: v for k, v in stats.items() if k != "kv_layout"})
+        return finished
     with PT.activation_sharding(mesh, PT.SERVE_RULES):
         t0 = time.perf_counter()
         tokens = generate(cfg, params, prompts, qcfg, args.gen, extras)

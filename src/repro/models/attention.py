@@ -82,6 +82,26 @@ def _score_mask(m: jax.Array) -> jax.Array:
     return m[:, None, None] if m.ndim == 3 else m[None, None, None]
 
 
+def _paged_append(pool, block_table, pos, row):
+    """Scatter each slot's new row (B, ...) into a page pool (n_pages,
+    page, ...) at (block_table[b, pos//page], pos % page). Sentinel table
+    entries (= n_pages) land out of bounds and are DROPPED — idle slots
+    never corrupt another slot's page. pos must be a per-slot (B,) vector."""
+    pv = jnp.asarray(pos)
+    assert pv.ndim == 1, "paged caches require per-slot pos (B,)"
+    page = pool.shape[1]
+    pg = jnp.take_along_axis(block_table, (pv // page)[:, None], axis=1)[:, 0]
+    return pool.at[pg, pv % page].set(row, mode="drop")
+
+
+def _paged_view(pool, block_table):
+    """Gather each slot's pages into a contiguous (B, max_pages*page, ...)
+    view. Sentinel entries CLAMP to the last page; the caller's per-slot
+    position mask discards those rows."""
+    b = block_table.shape[0]
+    return pool[block_table].reshape(b, -1, *pool.shape[2:])
+
+
 def _full_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
     """q: (B,Sq,KH,G,hd); k,v: (B,Sk,KH,hd)."""
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * scale
@@ -178,7 +198,7 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
 
 def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
               positions, causal=True, window=None, cache=None, pos=None,
-              kv_override=None, ring_positions=None):
+              kv_override=None, ring_positions=None, block_table=None):
     """x: (B,S,d). Returns (out, new_cache).
 
     cache: {"k": (B,T,KH,hd), "v": ...} pre-allocated; pos: current write
@@ -188,6 +208,11 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
     ring_positions: (true_pos, capacity) when the cache is a ring buffer —
     `pos` is then the write SLOT and validity is true_pos-based (every live
     slot holds one of the last `capacity` positions); scalar-pos only.
+    block_table: (B, max_pages) int32 when the cache is PAGED — k/v are then
+    physical page pools (n_pages, page, KH, hd): each slot scatters its new
+    row at (block_table[b, pos//page], pos%page) (sentinel entries land out
+    of bounds and are dropped) and attention gathers the slot's pages back
+    into a contiguous (B, max_pages*page) view masked at the slot's pos.
     """
     b, s, d = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -218,7 +243,16 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         k_st = Q.qkv_cache(k, qcfg).astype(cache["k"].dtype)
         v_st = Q.qkv_cache(v, qcfg).astype(cache["v"].dtype)
         if pos is not None:   # decode: write this step's k/v at pos
-            if jnp.ndim(pos):   # ragged: each slot writes at its own offset
+            if block_table is not None:
+                # paged cache: k/v are page pools (n_pages, page, KH, hd)
+                pv = jnp.asarray(pos)
+                k_pool = _paged_append(cache["k"], block_table, pv, k_st[:, 0])
+                v_pool = _paged_append(cache["v"], block_table, pv, v_st[:, 0])
+                new_cache = {"k": k_pool, "v": v_pool}
+                k = _paged_view(k_pool, block_table).astype(dt)
+                v = _paged_view(v_pool, block_table).astype(dt)
+                k_pos = jnp.arange(k.shape[1])
+            elif jnp.ndim(pos):   # ragged: each slot writes at its own offset
                 if ring_positions is not None:
                     raise NotImplementedError(
                         "ring-buffer caches (griffin) are scalar-pos only")
@@ -233,9 +267,10 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
             else:
                 k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_st, pos, axis=1)
                 v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_st, pos, axis=1)
-            new_cache = {"k": k_all, "v": v_all}
-            k, v = k_all.astype(dt), v_all.astype(dt)
-            k_pos = jnp.arange(cache["k"].shape[1])
+            if block_table is None:
+                new_cache = {"k": k_all, "v": v_all}
+                k, v = k_all.astype(dt), v_all.astype(dt)
+                k_pos = jnp.arange(cache["k"].shape[1])
         else:                 # prefill: cache <- computed k/v
             new_cache = {"k": k_st, "v": v_st}
             k_pos = jnp.arange(s)
@@ -282,9 +317,12 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
 # ---------------------------------------------------------------------------
 
 def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
-              positions, cache=None, pos=None):
+              positions, cache=None, pos=None, block_table=None):
     """Prefill/train: materialise k,v from the compressed cache.
-    Decode: absorbed form — scores directly against the (B,T,lora) cache."""
+    Decode: absorbed form — scores directly against the (B,T,lora) cache.
+    block_table: (B, max_pages) when the compressed cache is PAGED —
+    ckv/krope are then page pools (n_pages, page, ...), written by scatter
+    at (page, offset) and read back through a per-slot page gather."""
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads
@@ -313,14 +351,23 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         ckv_st = ckv.astype(cache["ckv"].dtype)
         kr_st = k_rope.astype(cache["krope"].dtype)
         pv = jnp.asarray(pos)
-        if pv.ndim:   # ragged: per-slot write offsets (B,), batched scatter
+        if block_table is not None:
+            # paged compressed cache: scatter at (page, offset), gather the
+            # slot's pages back into a contiguous (B, max_pages*page) view
+            ckv_pool = _paged_append(cache["ckv"], block_table, pv, ckv_st[:, 0])
+            kr_pool = _paged_append(cache["krope"], block_table, pv, kr_st[:, 0])
+            new_cache = {"ckv": ckv_pool, "krope": kr_pool}
+            ckv_all = _paged_view(ckv_pool, block_table)
+            kr_all = _paged_view(kr_pool, block_table)
+        elif pv.ndim:   # ragged: per-slot write offsets (B,), batched scatter
             bidx = jnp.arange(ckv_st.shape[0])
             ckv_all = cache["ckv"].at[bidx, pv].set(ckv_st[:, 0], mode="drop")
             kr_all = cache["krope"].at[bidx, pv].set(kr_st[:, 0], mode="drop")
+            new_cache = {"ckv": ckv_all, "krope": kr_all}
         else:
             ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_st, pos, axis=1)
             kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_st, pos, axis=1)
-        new_cache = {"ckv": ckv_all, "krope": kr_all}
+            new_cache = {"ckv": ckv_all, "krope": kr_all}
         t = ckv_all.shape[1]
         # absorbed attention: q_nope -> lora space via w_uk
         w_uk = params["w_uk"]["w"].reshape(lora, h, nope).astype(dt)

@@ -11,6 +11,11 @@ Cache contract: for the decoder family, cache["pos"] is a PER-SLOT position
 vector (batch,) int32 — rows may decode at different sequence lengths in one
 jitted step (ragged continuous batching). The mamba2/griffin/whisper shims
 are sequence-synchronous (scalar pos) and explicitly reject ragged vectors.
+
+A decoder cache carrying "block_table" (n_slots, max_pages) int32 is PAGED
+(runtime/paged_kv.py): per-layer stores are page pools (n_pages, page, ...)
+shared by all slots and decode_step scatters/gathers through the table;
+init_paged_cache builds one. Other families reject the paged layout.
 """
 from __future__ import annotations
 
@@ -45,6 +50,13 @@ def loss_fn(params, cfg, batch, qcfg, remat=True):
 
 def init_cache(cfg, b, max_len):
     return family_module(cfg).init_cache(cfg, b, max_len)
+
+
+def init_paged_cache(cfg, n_slots, max_len, *, n_pages, page=None):
+    """Paged decoder cache (page pools + block table); see runtime/paged_kv."""
+    from repro.runtime import paged_kv as PK
+    kw = {} if page is None else {"page": page}
+    return PK.init_paged_cache(cfg, n_slots, max_len, n_pages=n_pages, **kw)
 
 
 def prefill(params, cfg, tokens, qcfg, max_len=None, **extras):

@@ -77,16 +77,18 @@ def layer_windows(cfg: C.ArchConfig) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _layer_apply(lp, h, cfg, qcfg, *, positions, window, cache=None, pos=None,
-                 dense_ff=False):
+                 dense_ff=False, block_table=None):
     h = constrain(h, "batch", "seq", None)   # pin ZeRO-3 batch sharding
     attn_in = C.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
     if cfg.mla:
         a_out, new_cache = A.mla_apply(lp["attn"], attn_in, cfg, qcfg,
-                                       positions=positions, cache=cache, pos=pos)
+                                       positions=positions, cache=cache, pos=pos,
+                                       block_table=block_table)
     else:
         a_out, new_cache = A.gqa_apply(lp["attn"], attn_in, cfg, qcfg,
                                        positions=positions, causal=True,
-                                       window=window, cache=cache, pos=pos)
+                                       window=window, cache=cache, pos=pos,
+                                       block_table=block_table)
     if cfg.post_norm:
         a_out = C.rmsnorm(lp["attn_post_norm"], a_out, cfg.norm_eps)
     h = h + a_out
@@ -189,13 +191,18 @@ def loss_fn(params, cfg: C.ArchConfig, batch: dict, qcfg: Q.QuantConfig,
 # ---------------------------------------------------------------------------
 
 def _cache_proto(cfg: C.ArchConfig, b: int, t: int):
-    """Zero per-layer cache with capacity t (dtype bf16)."""
+    """Zero per-layer cache with capacity t (dtype bf16). The leading two
+    dims are (batch, time) for the dense layout and (n_pages, page) for the
+    paged layout (runtime/paged_kv.py) — same proto either way."""
     if cfg.mla:
         m = cfg.mla
         return {"ckv": jnp.zeros((b, t, m.kv_lora_rank), jnp.bfloat16),
                 "krope": jnp.zeros((b, t, m.qk_rope_dim), jnp.bfloat16)}
     return {"k": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
             "v": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
+
+
+cache_proto = _cache_proto   # public alias (paged_kv builds page pools from it)
 
 
 def init_cache(cfg: C.ArchConfig, b: int, max_len: int):
@@ -243,13 +250,25 @@ def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
     DIFFERENT sequence lengths (ragged continuous batching): each row RoPEs,
     writes K/V, and masks attention at its own position, so one jitted call
     serves the whole batch. A scalar pos keeps the dense fast path (shared
-    rope row, contiguous dynamic_update_slice instead of a scatter)."""
+    rope row, contiguous dynamic_update_slice instead of a scatter).
+
+    A cache carrying "block_table" (B, max_pages) is PAGED (see
+    runtime/paged_kv.py): per-layer stores are page pools (L, n_pages,
+    page, ...) shared by all slots, and attention scatters/gathers through
+    the block table instead of indexing a per-slot slab."""
     h = _embed(params, cfg, tokens)
     b = h.shape[0]
     pos = jnp.asarray(cache["pos"], jnp.int32)
     positions = pos[:, None] if pos.ndim else pos.reshape(1)
     windows = layer_windows(cfg)
-    t = jax.tree.leaves(cache["layers"])[0].shape[2]
+    block_table = cache.get("block_table")
+    if block_table is not None:
+        if not pos.ndim:
+            raise NotImplementedError("paged caches require per-slot pos (B,)")
+        page = jax.tree.leaves(cache["layers"])[0].shape[2]
+        t = block_table.shape[1] * page        # gathered per-slot KV extent
+    else:
+        t = jax.tree.leaves(cache["layers"])[0].shape[2]
 
     n_dense = cfg.moe.first_dense if cfg.moe else 0
     new_dense = []
@@ -257,14 +276,14 @@ def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
         lc = jax.tree.map(lambda x: x[i], cache["dense"])
         h, nc, _ = _layer_apply(params["dense_layers"][i], h, cfg, qcfg,
                                 positions=positions, window=None, cache=lc,
-                                pos=pos, dense_ff=True)
+                                pos=pos, dense_ff=True, block_table=block_table)
         new_dense.append(nc)
 
     def body(h, xs):
         lp, lc, window = xs
         w = jnp.where(window >= BIG_WINDOW, t + 1, window)
         h, nc, _ = _layer_apply(lp, h, cfg, qcfg, positions=positions, window=w,
-                                cache=lc, pos=pos)
+                                cache=lc, pos=pos, block_table=block_table)
         return h, nc
 
     h, new_layer_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"], windows))

@@ -2,3 +2,6 @@ from repro.runtime.resilient import (  # noqa: F401
     FailureInjector, StragglerMonitor, resilient_train_loop,
 )
 from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: F401
+from repro.runtime.paged_kv import (  # noqa: F401
+    PAGE_SIZE, PagedKVAllocator, init_paged_cache, pages_for,
+)

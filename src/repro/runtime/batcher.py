@@ -6,21 +6,37 @@ decode batch stays full instead of draining to the slowest request —
 the thing that actually determines serving throughput at scale.
 
 Ragged-position cache contract (tested in tests/test_ragged_decode.py):
-  * one shared KV cache of capacity (B, max_len) whose cache["pos"] is a
-    PER-SLOT position vector (B,) int32 — slots at arbitrary, distinct
-    sequence lengths decode together. Each row RoPEs its query, writes its
-    K/V, and masks attention at its own position;
+  * one shared KV cache whose cache["pos"] is a PER-SLOT position vector
+    (B,) int32 — slots at arbitrary, distinct sequence lengths decode
+    together. Each row RoPEs its query, writes its K/V, and masks attention
+    at its own position;
   * consequently step() issues exactly ONE jitted decode call per tick, no
     matter how many distinct lengths are active (the old implementation
     looped over position groups, degrading exactly when traffic is ragged);
-  * a new request PREFILLS into a staging cache of its own, and its K/V
-    rows are spliced into rows [0, p_len) of its slot in the shared cache
-    (per-layer dynamic_update_slice); its slot's pos entry is then set to
-    the prompt length. Requests that cannot fit (prompt + max_new >
-    max_len) are rejected at submit();
+  * requests that cannot fit (prompt + max_new - 1 > max_len; the LAST
+    generated token is never written back) are rejected at submit();
   * idle and just-finished slots keep decoding garbage in the same call —
     their pos is pinned back to 0 and their outputs discarded, so they cost
     one masked row instead of a retrace.
+
+KV layouts (tested in tests/test_paged_kv.py):
+  * "paged" (default) — the cache is a pool of 32-row pages shared by all
+    slots (runtime/paged_kv.py): pages are allocated on ADMISSION (prompt
+    pages, plus a worst-case reservation so decode appends can never fail),
+    APPENDED one at a time as a slot's decode crosses a page boundary, and
+    FREED on retirement. KV memory tracks the pool's actual load instead of
+    n_slots * max_len, and a page is always aligned to the BBFP 32-element
+    quantisation block;
+  * "dense" — the original (B, max_len) slab per layer; kept as the
+    reference layout and for the bench comparison.
+
+Bucketed chunked prefill: a new request prefills into a staging cache whose
+length is the prompt rounded up to a power-of-two BUCKET (min
+`min_prefill_bucket`), so total prefill compilations are O(log max_len)
+instead of O(#distinct prompt lengths) — `prefill_traces` counts them. The
+next token is read at row p_len-1 (causality makes the padded tail
+invisible), and the staged rows [0, p_len) splice page-by-page into the
+request's pages (paged) or its slot's slab rows (dense).
 
 Works with every decoder-family arch and any QuantConfig (incl. the full
 BBAL serving stack). SSM/griffin caches are sequence-synchronous (scalar
@@ -37,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.models import model as M
 from repro.quant import linear as Q
+from repro.runtime import paged_kv as PK
 
 
 @dataclasses.dataclass
@@ -50,16 +67,40 @@ class Request:
 
 class ContinuousBatcher:
     def __init__(self, cfg, params, qcfg: Q.QuantConfig, *,
-                 n_slots: int = 4, max_len: int = 128, eos_id: int | None = None):
+                 n_slots: int = 4, max_len: int = 128, eos_id: int | None = None,
+                 kv_layout: str = "paged", page_size: int = PK.PAGE_SIZE,
+                 n_pages: int | None = None, min_prefill_bucket: int = 16):
         assert cfg.family == "decoder", "batcher targets the decoder family"
+        assert kv_layout in ("paged", "dense"), kv_layout
         self.cfg, self.params, self.qcfg = cfg, params, qcfg
         self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
-        self.cache = M.init_cache(cfg, n_slots, max_len)   # cache["pos"]: (B,)
+        self.paged = kv_layout == "paged"
+        self.page_size = page_size
+        self.min_bucket = max(1, min_prefill_bucket)
+        if self.paged:
+            self.max_pages = PK.pages_for(max_len, page_size)
+            # default budget = dense-equivalent capacity (no overcommit);
+            # pass a smaller n_pages to overcommit the pool
+            self.n_pages = n_pages if n_pages is not None \
+                else n_slots * self.max_pages
+            self.alloc = PK.PagedKVAllocator(self.n_pages, page_size, n_slots)
+            self.cache = PK.init_paged_cache(cfg, n_slots, max_len,
+                                             n_pages=self.n_pages, page=page_size)
+        else:
+            self.alloc = None
+            self.cache = M.init_cache(cfg, n_slots, max_len)  # cache["pos"]: (B,)
         self.slot_req: list[Request | None] = [None] * n_slots
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        # the pre-call cache is never touched after a tick: donate it so XLA
+        # aliases the new pool onto the old instead of double-buffering the
+        # whole KV store every decode (no-op on CPU, real aliasing on TPU)
         self._decode = jax.jit(
-            lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg))
+            lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
+            donate_argnums=(1,))
         self.decode_calls = 0          # jitted decode invocations (1 per tick)
+        self._prefill_fns: dict[int, object] = {}   # bucket -> jitted prefill
+        self.prefill_traces = 0        # distinct prefill shapes compiled
+        self._host_pos = [0] * n_slots  # host mirror of live slots' pos
         self.queue: list[Request] = []
         self.finished: list[Request] = []
 
@@ -73,23 +114,63 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         # a ragged decode write past max_len is silently dropped (scatter
         # mode="drop"), so a request that cannot fit would diverge from
-        # sequential decoding with no error — reject it up front instead
-        need = req.prompt.shape[0] + req.max_new
+        # sequential decoding with no error — reject it up front instead.
+        # Capacity is prompt + max_new - 1: the first token comes from
+        # prefill and the LAST generated token is never written back, so a
+        # request that exactly fills max_len KV rows is admissible.
+        need = req.prompt.shape[0] + req.max_new - 1
         if need > self.max_len:
             raise ValueError(
                 f"request {req.rid} needs up to {need} KV rows (prompt "
-                f"{req.prompt.shape[0]} + max_new {req.max_new}) but the "
+                f"{req.prompt.shape[0]} + max_new {req.max_new} - 1) but the "
                 f"shared cache capacity is max_len={self.max_len}")
+        if self.paged and PK.pages_for(need, self.page_size) > self.n_pages:
+            # can_admit() would never hold, so the request (and everything
+            # FIFO-queued behind it) would spin unserved — reject up front
+            raise ValueError(
+                f"request {req.rid} needs {PK.pages_for(need, self.page_size)} "
+                f"pages (KV rows {need} / page {self.page_size}) but the page "
+                f"pool budget is n_pages={self.n_pages}")
         self.queue.append(req)
 
-    def _splice(self, slot: int, staged_cache, p_len: int):
+    def _bucket(self, p_len: int) -> int:
+        """Prompt staging length: next power of two >= p_len (floored at
+        min_bucket), so prefill shapes form an O(log max_len) ladder."""
+        return max(self.min_bucket, 1 << max(p_len - 1, 0).bit_length())
+
+    def _prefill(self, prompt: jnp.ndarray):
+        """Bucketed prefill: pad the prompt to its bucket, run one jitted
+        forward per BUCKET (not per length), read logits at row p_len-1
+        (the padded tail is causally invisible to real rows). Returns
+        (next-token logits (V,), staged cache of bucket rows)."""
+        p_len = prompt.shape[0]
+        bkt = self._bucket(p_len)
+        fn = self._prefill_fns.get(bkt)
+        if fn is None:
+            mod = M.family_module(self.cfg)
+            cfg, qcfg = self.cfg, self.qcfg
+
+            def run(params, toks):
+                logits, cache, _ = mod.forward(
+                    params, cfg, toks, qcfg,
+                    cache=mod.init_cache(cfg, 1, toks.shape[1]))
+                return logits, cache
+
+            fn = jax.jit(run)
+            self._prefill_fns[bkt] = fn
+            self.prefill_traces += 1
+        toks = jnp.pad(prompt.astype(jnp.int32), (0, bkt - p_len))[None, :]
+        logits, staged = fn(self.params, toks)
+        return logits[0, p_len - 1], staged
+
+    def _splice_dense(self, slot: int, staged_cache, p_len: int):
         """Copy a prefilled request's K/V rows into rows [0, p_len) of
-        `slot` in the shared cache (leading dims: layers..., batch, time,
-        ...); the slot's pos entry is then set to p_len by _admit."""
+        `slot` in the shared dense cache (leading dims: layers..., batch,
+        time, ...); the slot's pos entry is then set to p_len by _admit."""
         def one(dst, src):
             if dst.ndim < 3 or dst.shape[1] != self.n_slots:
                 return dst
-            # src: (L, 1|b, p_len, ...) -> write rows [0, p_len) of `slot`
+            # src: (L, 1|b, >=p_len, ...) -> write rows [0, p_len) of `slot`
             upd = jax.lax.dynamic_slice_in_dim(src, 0, 1, axis=1)
             upd = jax.lax.dynamic_slice_in_dim(upd, 0, min(p_len, dst.shape[2]), axis=2)
             return jax.lax.dynamic_update_slice(
@@ -106,24 +187,35 @@ class ContinuousBatcher:
     def _admit(self):
         for slot in range(self.n_slots):
             while self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
                 p_len = req.prompt.shape[0]
-                logits, staged = M.prefill(self.params, self.cfg,
-                                           req.prompt[None, :], self.qcfg,
-                                           max_len=self.max_len)
-                tok = int(jnp.argmax(logits[0]))
+                need_rows = max(p_len, p_len + req.max_new - 1)
+                if self.paged and not self.alloc.can_admit(need_rows):
+                    return   # FIFO: wait for a retirement to free pages
+                self.queue.pop(0)
+                logits, staged = self._prefill(req.prompt)
+                tok = int(jnp.argmax(logits))
                 req.out_tokens.append(tok)
                 if len(req.out_tokens) >= req.max_new or \
                         (self.eos is not None and tok == self.eos):
                     # budget met / EOS at prefill: retire without ever
-                    # occupying the slot; try the next queued request
+                    # occupying the slot (or any pages); try the next request
                     req.done = True
                     self.finished.append(req)
                     continue
-                self._splice(slot, staged, p_len)
+                if self.paged:
+                    pids = self.alloc.admit(slot, p_len, need_rows)
+                    bt = self.cache["block_table"].at[slot, :len(pids)].set(
+                        jnp.asarray(pids, jnp.int32))
+                    self.cache = PK.splice_pages(
+                        {**self.cache, "block_table": bt}, staged, pids,
+                        p_len, self.page_size)
+                else:
+                    self._splice_dense(slot, staged, p_len)
                 self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
                 self.cache = {**self.cache,
                               "pos": self.cache["pos"].at[slot].set(p_len)}
+                self._host_pos[slot] = p_len
                 self.slot_req[slot] = req
 
     # -- the decode tick ----------------------------------------------------
@@ -134,9 +226,26 @@ class ContinuousBatcher:
         self._admit()
         if all(r is None for r in self.slot_req):
             return False
+        if self.paged:
+            # append a page to any slot whose write this tick crosses a page
+            # boundary (infallible: covered by the admission reservation);
+            # one batched table write for all appends this tick
+            grown = []      # (slot, page_index, page_id)
+            for s, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                res = self.alloc.ensure_row(s, self._host_pos[s])
+                if res is not None:
+                    grown.append((s, *res))
+            if grown:
+                rows, cols, vals = (jnp.asarray(v, jnp.int32)
+                                    for v in zip(*grown))
+                bt = self.cache["block_table"].at[rows, cols].set(vals)
+                self.cache = {**self.cache, "block_table": bt}
         logits, new_cache = self._decode(self.params, self.cache, self.cur_tok)
         self.decode_calls += 1
         toks = jax.device_get(jnp.argmax(logits, axis=-1))      # (B,) host
+        retired = []
         for s, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -147,6 +256,7 @@ class ContinuousBatcher:
                 req.done = True
                 self.finished.append(req)
                 self.slot_req[s] = None
+                retired.append(s)
         # single vectorized state update: live slots take their new token and
         # advanced position; idle/finished slots are pinned back to pos 0
         live = jnp.asarray([r is not None for r in self.slot_req])
@@ -155,6 +265,16 @@ class ContinuousBatcher:
                                  self.cur_tok)
         self.cache = {**new_cache,
                       "pos": jnp.where(live, new_cache["pos"], 0)}
+        for s in range(self.n_slots):
+            self._host_pos[s] = self._host_pos[s] + 1 \
+                if self.slot_req[s] is not None else 0
+        if self.paged and retired:
+            # return the retired slots' pages and reset their table rows
+            for s in retired:
+                self.alloc.release(s)
+            bt = self.cache["block_table"].at[
+                jnp.asarray(retired, jnp.int32)].set(self.alloc.sentinel)
+            self.cache = {**self.cache, "block_table": bt}
         return True
 
     def run(self, max_ticks: int = 1000):
@@ -164,3 +284,18 @@ class ContinuousBatcher:
             self.step()
             ticks += 1
         return self.finished, ticks
+
+    # -- introspection ------------------------------------------------------
+
+    def kv_stats(self) -> dict:
+        """Serving-path memory counters for the bench trajectory."""
+        total = PK.kv_bytes(self.cache)
+        stats = {"kv_layout": "paged" if self.paged else "dense",
+                 "kv_store_bytes": total,
+                 "kv_bytes_per_slot": total // self.n_slots}
+        if self.paged:
+            per_page = total // max(self.n_pages, 1)
+            stats.update(pages_total=self.n_pages,
+                         pages_in_use=self.alloc.used_count,
+                         kv_bytes_in_use=per_page * self.alloc.used_count)
+        return stats

@@ -1,0 +1,185 @@
+"""Paged KV-block allocator for the continuous batcher (vLLM-style pages).
+
+The dense layout charges every slot for the longest request the pool might
+ever see: one (B, max_len) slab per layer. Paged layout replaces the slab
+with a pool of fixed-size PAGES shared by all slots:
+
+  * a page is PAGE_SIZE = 32 KV rows — exactly ``bbfp.DEFAULT_BLOCK``, so a
+    page is always aligned to the BBFP 32-element quantisation blocks of the
+    source paper (arXiv:2504.15721): a packed int8+scales KV cache quantises
+    whole pages without straddling block boundaries;
+  * each layer's physical store is (n_pages, page, heads, head_dim) — ONE
+    pool, indexed the same way in every layer, so the logical->physical map
+    (the block table) is shared across layers and stays (n_slots, max_pages)
+    int32;
+  * unallocated block-table entries hold the SENTINEL ``n_pages`` — one past
+    the last physical page — so in-jit scatter writes from idle slots land
+    out of bounds and are dropped (``mode="drop"``), and gather reads clamp
+    to the last page, whose rows the per-slot position mask discards.
+
+Batcher contract (mirrors runtime/batcher.py):
+  * ADMIT  — pages for the prompt are allocated up front and the prefilled
+    rows are spliced page-by-page into them; admission only proceeds when
+    the pool can cover the request's WORST-CASE page count on top of the
+    outstanding reservations of live slots, so a decode-time append can
+    never fail (no mid-flight eviction needed);
+  * DECODE — stays ONE jitted call per tick: before the call the batcher
+    appends a page to any slot whose next write crosses a page boundary
+    (host-side, guaranteed by the reservation accounting); inside the jit
+    each slot scatters its new K/V row at (block_table[slot, pos//page],
+    pos % page) and attention gathers its pages back into a contiguous
+    (B, max_pages*page) view masked at the slot's own position;
+  * RETIRE — the slot's pages return to the free list and its block-table
+    row is reset to the sentinel.
+
+The allocator itself is host-side Python (a free list + per-slot page
+lists); only the block table lives on device. ``init_paged_cache`` builds
+the cache pytree {"layers", "block_table", "pos"[, "dense"]} that
+``transformer.decode_step`` recognises by the presence of "block_table".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bbfp
+
+PAGE_SIZE = bbfp.DEFAULT_BLOCK   # 32 KV rows — quantisation-block aligned
+
+
+def pages_for(rows: int, page: int = PAGE_SIZE) -> int:
+    """Number of pages needed to hold `rows` KV rows."""
+    return -(-rows // page)
+
+
+class PagedKVAllocator:
+    """Host-side block-table allocator over a pool of `n_pages` pages.
+
+    Reservation accounting: every live slot reserves its worst-case page
+    count at admission (`reserve[slot]`); `committed` is the number of free
+    pages already promised to live slots' future appends. `can_admit` only
+    accepts a request when the pool covers its worst case on top of that,
+    which makes `append` infallible for admitted requests.
+    """
+
+    def __init__(self, n_pages: int, page: int = PAGE_SIZE, n_slots: int = 4):
+        assert n_pages >= 1 and page >= 1 and n_slots >= 1
+        self.n_pages, self.page, self.n_slots = n_pages, page, n_slots
+        self.free: list[int] = list(range(n_pages - 1, -1, -1))  # pop() -> 0 first
+        self.pages: list[list[int]] = [[] for _ in range(n_slots)]
+        self.reserve: list[int] = [0] * n_slots
+
+    @property
+    def sentinel(self) -> int:
+        """Out-of-bounds page id: scatter-dropped on write, masked on read."""
+        return self.n_pages
+
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_pages - len(self.free)
+
+    @property
+    def committed(self) -> int:
+        """Free pages already promised to live slots' future appends."""
+        return sum(max(r - len(p), 0) for r, p in zip(self.reserve, self.pages))
+
+    def can_admit(self, total_rows: int) -> bool:
+        return self.free_count - self.committed >= pages_for(total_rows, self.page)
+
+    def admit(self, slot: int, prompt_rows: int, total_rows: int) -> list[int]:
+        """Reserve `total_rows` worst-case and allocate the prompt's pages."""
+        assert not self.pages[slot], f"slot {slot} already holds pages"
+        assert self.can_admit(total_rows), "admit() without can_admit()"
+        self.reserve[slot] = pages_for(total_rows, self.page)
+        for _ in range(pages_for(prompt_rows, self.page)):
+            self.pages[slot].append(self.free.pop())
+        return list(self.pages[slot])
+
+    def ensure_row(self, slot: int, row: int) -> tuple[int, int] | None:
+        """Make the page holding `row` exist; returns (slot_page_index,
+        page_id) when a page was appended, None when it already existed."""
+        idx = row // self.page
+        if idx < len(self.pages[slot]):
+            return None
+        assert idx == len(self.pages[slot]), (slot, row, self.pages[slot])
+        assert idx < self.reserve[slot], f"append past slot {slot} reservation"
+        pid = self.free.pop()      # infallible: covered by `committed`
+        self.pages[slot].append(pid)
+        return idx, pid
+
+    def release(self, slot: int) -> list[int]:
+        """Free a retired slot's pages; returns them (for block-table reset)."""
+        freed, self.pages[slot] = self.pages[slot], []
+        self.free.extend(reversed(freed))
+        self.reserve[slot] = 0
+        return freed
+
+
+def init_block_table(n_slots: int, max_pages: int, sentinel: int) -> jnp.ndarray:
+    return jnp.full((n_slots, max_pages), sentinel, jnp.int32)
+
+
+def init_paged_cache(cfg, n_slots: int, max_len: int, *,
+                     n_pages: int, page: int = PAGE_SIZE):
+    """Paged decoder cache: per-layer stores of shape (L, n_pages, page, ...)
+    plus the shared block table. Presence of "block_table" is what switches
+    decode_step/attention onto the paged gather/scatter path."""
+    from repro.models import model as M          # avoid import cycle
+    mod = M.family_module(cfg)
+    if not hasattr(mod, "cache_proto"):
+        raise NotImplementedError(
+            f"paged KV targets the transformer family, not {cfg.family!r}")
+    max_pages = pages_for(max_len, page)
+    n_dense = cfg.moe.first_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    proto = mod.cache_proto(cfg, n_pages, page)  # (n_pages, page, ...)
+    stack = lambda n: jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), proto)
+    cache = {"layers": stack(n_scan),
+             "block_table": init_block_table(n_slots, max_pages, n_pages),
+             "pos": jnp.zeros((n_slots,), jnp.int32)}
+    if n_dense:
+        cache["dense"] = stack(n_dense)
+    return cache
+
+
+def splice_pages(cache, staged, page_ids: list[int], p_len: int, page: int):
+    """Copy a prefilled request's rows [0, p_len) from its dense staging
+    cache into the physical pages `page_ids` (host-driven, page-granular:
+    chunk i of the prompt lands in page_ids[i]). ONE batched scatter per KV
+    leaf — not one full-pool copy per page. Returns the updated cache.
+
+    Rows past p_len in the last page are zero-filled; they sit beyond every
+    reader's position mask and decode overwrites them as the slot grows."""
+    pids = jnp.asarray(page_ids, jnp.int32)
+    total = len(page_ids) * page
+
+    def one(dst, src):
+        # dst: (L, n_pages, page, ...); src: (L, 1|b, >=p_len, ...)
+        rows = src[:, :1, :min(p_len, total)]
+        if rows.shape[2] < total:
+            widths = [(0, 0)] * rows.ndim
+            widths[2] = (0, total - rows.shape[2])
+            rows = jnp.pad(rows, widths)
+        rows = rows.reshape(src.shape[0], len(page_ids), page, *src.shape[3:])
+        return dst.at[:, pids].set(rows.astype(dst.dtype))
+
+    new_cache = {**cache,
+                 "layers": jax.tree.map(one, cache["layers"], staged["layers"])}
+    if "dense" in cache:
+        new_cache["dense"] = jax.tree.map(one, cache["dense"], staged["dense"])
+    return new_cache
+
+
+def kv_bytes(cache) -> int:
+    """Total bytes held by the KV stores of a cache pytree (dense or paged)."""
+    leaves = jax.tree.leaves(cache["layers"])
+    total = sum(x.size * x.dtype.itemsize for x in leaves)
+    if "dense" in cache:
+        total += sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(cache["dense"]))
+    return total

@@ -168,6 +168,64 @@ def test_folded_max_int8_safety():
     assert B.folded_max(B.BBFP42) == 60      # int8-safe
     assert B.folded_max(B.BBFP31) == 28
     assert B.folded_max(B.BBFP63) == 504     # needs int16
+    assert B.folded_max(B.INT8) == 127       # symmetric clip: int8-safe
+    assert B.folded_max(B.BBFP105) == 32736  # still int16-safe
+
+
+# ---------- oracle vs Pallas-kernel exponent parity ----------
+
+def test_exponent_parity_oracle_vs_kernel_tile():
+    """core.bbfp._exponent (frexp) and kernels.bbfp_matmul._exponent_tile
+    (raw-bias bit trick) must clip identically on every edge class: zeros,
+    subnormals, powers of two and their neighbours, 5-bit saturation at
+    |x| >= 2^15, and inf/nan — otherwise the kernel silently picks a
+    different shared exponent than the oracle it is validated against."""
+    from repro.kernels.bbfp_matmul import _exponent_tile
+    f32 = np.float32
+    vals = [0.0, -0.0,
+            1e-45, 5e-42, 1e-39,                 # subnormals -> _EXP_MIN
+            np.finfo(f32).tiny,                  # 2^-126    -> clipped
+            2.0**-17, 2.0**-16, 2.0**-15,        # around the exp floor
+            0.5, 1.0, 1.5, 2.0, 3.0,
+            float(np.nextafter(f32(2.0), f32(0))),   # just under a pow2
+            2.0**14, float(np.nextafter(f32(2.0**15), f32(0))),
+            2.0**15, 2.0**15 * 1.5, 2.0**16,     # 5-bit saturation
+            3.4e38, float(np.inf), float(-np.inf), float(np.nan)]
+    x = jnp.asarray(vals + [-v for v in vals], jnp.float32)
+    e_oracle = np.asarray(B._exponent(x))
+    e_kernel = np.asarray(_exponent_tile(x))
+    np.testing.assert_array_equal(e_oracle, e_kernel)
+    # pinned values on the named classes
+    assert e_oracle[0] == B._EXP_MIN             # zero
+    assert e_oracle[2] == B._EXP_MIN             # subnormal
+    assert e_oracle[vals.index(2.0**15)] == B._EXP_MAX
+    assert e_oracle[vals.index(float(np.inf))] == B._EXP_MAX
+    assert e_oracle[vals.index(float(np.nan))] == B._EXP_MAX
+
+
+# ---------- packed-weight round-trip (serving storage) ----------
+
+def test_pack_unpack_roundtrip_all_formats():
+    """pack_weight's docstring claim, verified bitwise for every registered
+    format: unpack(pack(w)) == fake_quant(w.astype(bf16), axis=-2) EXACTLY,
+    including the int baseline (float absmax scale, not a power of two) and
+    an int16 folded-mantissa format like BBFP(6,3)."""
+    w = jax.random.normal(jax.random.PRNGKey(6), (64, 16)) * 4
+    w = w.at[3, :].set(50.0)                     # outliers drive the flags
+    for fmt in B.FORMATS.values():
+        if fmt.kind == "none":
+            continue
+        packed = B.pack_weight(w, fmt)
+        want_dtype = jnp.int8 if B.folded_max(fmt) <= 127 else jnp.int16
+        assert packed["q"].dtype == want_dtype, fmt.name
+        assert packed["q"].shape == w.shape
+        assert packed["scale"].shape == (64 // 32, 16)
+        got = B.unpack_weight(packed)
+        want = B.fake_quant(w.astype(jnp.bfloat16), fmt, axis=-2)
+        assert got.dtype == want.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32),
+                                      err_msg=fmt.name)
 
 
 def test_zeros_and_signs():

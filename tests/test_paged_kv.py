@@ -1,0 +1,190 @@
+"""Paged KV-block allocator + bucketed prefill (runtime/paged_kv.py).
+
+Acceptance criteria of the paged-KV rework:
+  * paged-vs-dense-vs-sequential decode parity: token-for-token identical
+    outputs for a ragged mix of prompt lengths (including a prompt that
+    spans multiple pages and decode steps that cross page boundaries);
+  * step() stays ONE jitted decode per tick in both layouts;
+  * prefill compilations are bounded by the number of power-of-two BUCKETS,
+    not the number of distinct prompt lengths;
+  * the allocator's reservation accounting: admission waits (FIFO) when the
+    page pool cannot cover a request's worst case, decode-time appends never
+    fail, retirement returns pages to the pool.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.quant import linear as Q
+from repro.runtime import paged_kv as PK
+from repro.runtime.batcher import ContinuousBatcher, Request
+
+KEY = jax.random.PRNGKey(11)
+
+
+# ---------------------------------------------------------------------------
+# allocator unit tests (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_allocator_admit_append_release():
+    al = PK.PagedKVAllocator(n_pages=6, page=4, n_slots=2)
+    assert al.sentinel == 6
+    # admit: prompt 5 rows -> 2 pages now, worst case 11 rows -> 3 reserved
+    pids = al.admit(0, prompt_rows=5, total_rows=11)
+    assert len(pids) == 2 and al.used_count == 2
+    assert al.committed == 1          # one more page promised to slot 0
+    # rows 5..7 live in the existing page; row 8 appends the reserved one
+    assert al.ensure_row(0, 5) is None
+    assert al.ensure_row(0, 7) is None
+    idx, pid = al.ensure_row(0, 8)
+    assert idx == 2 and pid not in pids
+    assert al.committed == 0 and al.used_count == 3
+    freed = al.release(0)
+    assert sorted(freed) == sorted(pids + [pid])
+    assert al.used_count == 0 and al.free_count == 6
+
+
+def test_allocator_can_admit_respects_reservations():
+    al = PK.PagedKVAllocator(n_pages=4, page=4, n_slots=2)
+    al.admit(0, prompt_rows=4, total_rows=16)   # 1 page now, 4 reserved
+    # 3 free pages but all are committed to slot 0's future appends
+    assert al.free_count == 3 and al.committed == 3
+    assert not al.can_admit(4)                  # even one page is too many
+    al.release(0)
+    assert al.can_admit(16)
+
+
+def test_pages_for():
+    assert PK.pages_for(1, 32) == 1
+    assert PK.pages_for(32, 32) == 1
+    assert PK.pages_for(33, 32) == 2
+    assert PK.pages_for(64, 32) == 2
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: paged vs dense vs sequential
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_dense_and_sequential():
+    """Ragged mix (one prompt spanning 2 pages, decode crossing a page
+    boundary): identical tokens in all three regimes, ONE decode per tick."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    lens = [5, 9, 30]                  # 30 spans pages 0-1; +6 crosses row 32
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, i), (n,), 0, cfg.vocab)
+               for i, n in enumerate(lens)]
+    gen = 6
+    refs = [generate(cfg, params, p[None, :], Q.FP, gen_len=gen)[0].tolist()
+            for p in prompts]
+
+    outs = {}
+    for layout in ("dense", "paged"):
+        bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=3, max_len=64,
+                                kv_layout=layout)
+        calls = []
+        inner = bat._decode
+        bat._decode = lambda *a: (calls.append(1), inner(*a))[1]
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=gen))
+        ticks = 0
+        while bat.queue or any(r is not None for r in bat.slot_req):
+            before = len(calls)
+            assert bat.step(), "live requests must decode"
+            ticks += 1
+            # exactly ONE jitted decode per tick, however ragged the batch
+            assert len(calls) == before + 1
+        assert bat.decode_calls == ticks == len(calls)
+        outs[layout] = {r.rid: r.out_tokens[:gen] for r in bat.finished}
+        if layout == "paged":
+            # retirement returned every page to the pool
+            assert bat.alloc.used_count == 0
+            assert bool(jnp.all(bat.cache["block_table"] == bat.alloc.sentinel))
+    for i, ref in enumerate(refs):
+        assert outs["dense"][i] == ref, (i, outs["dense"][i], ref)
+        assert outs["paged"][i] == ref, (i, outs["paged"][i], ref)
+
+
+def test_prefill_traces_bounded_by_buckets():
+    """8 distinct prompt lengths but only 3 power-of-two buckets -> exactly
+    3 prefill compilations (max_new=1 retires at admission: prefill-only)."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=32,
+                            min_prefill_bucket=4)
+    lens = [3, 4, 5, 6, 7, 9, 11, 13]          # buckets {4, 8, 16}
+    assert len(set(lens)) == 8
+    for i, n in enumerate(lens):
+        bat.submit(Request(rid=i, prompt=jnp.arange(n, dtype=jnp.int32),
+                           max_new=1))
+    finished, _ = bat.run()
+    assert len(finished) == 8
+    assert {bat._bucket(n) for n in lens} == {4, 8, 16}
+    assert bat.prefill_traces == 3             # buckets, not distinct lengths
+    assert bat.decode_calls == 0               # all retired at prefill
+
+
+def test_page_exhaustion_queues_fifo():
+    """pool of ONE page: requests serialize through it and all finish."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=32,
+                            n_pages=1)
+    for i in range(3):
+        bat.submit(Request(rid=i, prompt=jnp.arange(6, dtype=jnp.int32) + i,
+                           max_new=4))
+    seen_in_use = []
+    ticks = 0
+    while bat.queue or any(r is not None for r in bat.slot_req):
+        assert bat.step() or not bat.queue
+        seen_in_use.append(bat.alloc.used_count)
+        ticks += 1
+        assert ticks < 100
+    assert len(bat.finished) == 3
+    assert all(len(r.out_tokens) == 4 for r in bat.finished)
+    assert max(seen_in_use) <= 1               # never over the budget
+
+
+def test_submit_rejects_request_larger_than_page_pool():
+    """a request whose worst-case page count exceeds the whole pool could
+    never be admitted — it must be rejected at submit(), not spin forever
+    at the head of the FIFO queue."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=64,
+                            n_pages=1)
+    with pytest.raises(ValueError, match="page pool budget"):
+        bat.submit(Request(rid=0, prompt=jnp.arange(40, dtype=jnp.int32),
+                           max_new=4))          # 43 rows -> 2 pages > pool 1
+    # a one-page request still fits the same pool
+    bat.submit(Request(rid=1, prompt=jnp.arange(8, dtype=jnp.int32),
+                       max_new=4))
+    finished, _ = bat.run()
+    assert len(finished) == 1 and len(finished[0].out_tokens) == 4
+
+
+def test_paged_cache_memory_tracks_load():
+    """the paged store admits a smaller pool than dense n_slots*max_len and
+    kv_stats reports bytes-in-use proportional to allocated pages."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    dense = ContinuousBatcher(cfg, params, Q.FP, n_slots=4, max_len=128,
+                              kv_layout="dense")
+    paged = ContinuousBatcher(cfg, params, Q.FP, n_slots=4, max_len=128,
+                              n_pages=4)      # 1/4 of the dense capacity
+    assert paged.kv_stats()["kv_store_bytes"] == \
+        dense.kv_stats()["kv_store_bytes"] // 4
+    paged.submit(Request(rid=0, prompt=jnp.arange(40, dtype=jnp.int32),
+                         max_new=4))
+    paged._admit()
+    st = paged.kv_stats()
+    assert st["pages_in_use"] == 2             # 40 rows -> 2 pages of 32
+    assert st["kv_bytes_in_use"] == 2 * st["kv_store_bytes"] // 4
+
+
+def test_init_paged_cache_rejects_non_transformer():
+    cfg = configs.smoke_config("mamba2_2_7b")
+    with pytest.raises(NotImplementedError, match="transformer"):
+        PK.init_paged_cache(cfg, 2, 32, n_pages=2)

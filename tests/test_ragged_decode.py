@@ -73,7 +73,8 @@ def test_ragged_refill_keeps_one_call_per_tick():
 
 def test_ragged_moe_dense_layers_match_sequential():
     """MoE archs with leading dense layers keep a separate cache['dense'] —
-    _splice must copy it too (regression: it was silently skipped)."""
+    the prefill splice (paged splice_pages / dense _splice_dense) must copy
+    it too (regression: it was silently skipped)."""
     import dataclasses
     cfg = configs.smoke_config("deepseek_v2_lite_16b")   # first_dense=1, MLA
     cfg = dataclasses.replace(
@@ -106,6 +107,28 @@ def test_submit_rejects_request_exceeding_capacity():
                        max_new=4))          # exactly fits
     finished, _ = bat.run()
     assert len(finished) == 1 and len(finished[0].out_tokens) == 4
+
+
+def test_submit_boundary_exact_fit_is_admitted():
+    """Off-by-one regression: the first token comes from prefill and the
+    LAST generated token is never written back, so a request needs only
+    prompt + max_new - 1 KV rows. A request that exactly fills max_len must
+    be admitted (the old guard spuriously rejected it) and still match
+    sequential decoding; one more token must be rejected."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prompt = jax.random.randint(KEY, (10,), 0, cfg.vocab)
+    gen = 5                                      # 10 + 5 - 1 == max_len
+    ref = generate(cfg, params, prompt[None, :], Q.FP, gen_len=gen)[0].tolist()
+    for layout in ("dense", "paged"):
+        bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=1, max_len=14,
+                                kv_layout=layout)
+        bat.submit(Request(rid=0, prompt=prompt, max_new=gen))  # exact fit
+        with pytest.raises(ValueError, match="KV rows"):
+            bat.submit(Request(rid=1, prompt=prompt, max_new=gen + 1))
+        finished, _ = bat.run()
+        assert len(finished) == 1
+        assert finished[0].out_tokens == ref, layout
 
 
 def test_scalar_pos_cache_keeps_dense_fast_path():

@@ -1,5 +1,6 @@
 """Extra runnability coverage: griffin ring-buffer wrap-around, elastic
 restart onto a different device mesh (subprocess), multi-step generation."""
+import os
 import subprocess
 import sys
 
@@ -34,10 +35,17 @@ def test_griffin_ring_buffer_wraparound():
     assert err < 3e-2 * scale, (err, scale)
 
 
-@pytest.mark.slow   # subprocess re-launch; minutes of XLA re-compilation
+@pytest.mark.slow   # subprocess re-launch; XLA re-initialises from scratch
 def test_elastic_restart_across_device_counts(tmp_path):
     """checkpoint written under 1 device restores under 4 fake devices with
-    a sharded layout (the elastic-scaling path); loss continues identically."""
+    a sharded layout (the elastic-scaling path); loss continues identically.
+
+    Two fixes over the original (which timed out in the dev container):
+    the subprocess inherits the parent environment (a hand-stripped env
+    hung jax's CPU client initialisation for minutes), and the mesh goes
+    through launch.mesh._make_mesh (jax.sharding.AxisType only exists on
+    newer jax). A hard 240s timeout converts any future hang into a crisp
+    failure instead of eating the suite's budget."""
     script = f"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -45,14 +53,14 @@ import jax, jax.numpy as jnp
 from repro import configs
 from repro.checkpoint import save_checkpoint, restore_checkpoint
 from repro.launch import sharding as S
+from repro.launch.mesh import _make_mesh
 from repro.models import model as M
 from repro.quant import linear as Q
 
 cfg = configs.get("llama7b").tiny_lm_config(vocab=64)
 params = M.init(cfg, jax.random.PRNGKey(0))
 save_checkpoint(r"{tmp_path}", 0, params)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = _make_mesh((2, 2), ("data", "model"))
 pshapes = jax.eval_shape(lambda: params)
 sh = S.param_shardings(pshapes, mesh, "serve")
 step, restored = restore_checkpoint(r"{tmp_path}", params, shardings=sh)
@@ -65,10 +73,16 @@ assert abs(float(l0) - float(l1)) < 5e-3, (float(l0), float(l1))
 assert len(jax.devices()) == 4
 print("ELASTIC_OK")
 """
-    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)        # the script sets its own device count
+    try:
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=240,
+                             env=env, cwd=os.path.dirname(
+                                 os.path.dirname(os.path.abspath(__file__))))
+    except subprocess.TimeoutExpired as e:
+        pytest.fail(f"elastic-restart subprocess exceeded the hard 240s "
+                    f"timeout\nstdout: {e.stdout}\nstderr: {e.stderr}")
     assert "ELASTIC_OK" in res.stdout, res.stdout + res.stderr
 
 

@@ -127,10 +127,11 @@ def test_async_checkpointer_gc(tmp_path):
 def test_checkpoint_elastic_restore_different_sharding(tmp_path):
     """mesh-agnostic restore: re-lay arrays with a different sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import _make_mesh   # AxisType-compat mesh ctor
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     save_checkpoint(str(tmp_path), 0, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh((1, 1), ("data", "model"))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     _, restored = restore_checkpoint(str(tmp_path), tree, shardings=sh)
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
