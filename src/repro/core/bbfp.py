@@ -340,6 +340,56 @@ def unpack_weight(packed: dict, out_dtype=jnp.bfloat16) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# packed KV storage (serving): int8 codes + int8 per-block shared exponents
+# ---------------------------------------------------------------------------
+
+def kv_packable(fmt: QuantFormat) -> bool:
+    """True when `fmt` fits the 8-bit KV page code: sign + flag + mantissa in
+    one int8. bbfp needs m+1 magnitude bits (mantissa | flag<<m <= 2^(m+1)-1),
+    bfp/int need m. BBFP(6,3) — the serving KV default — is exactly 8 bits."""
+    if fmt.kind == "bbfp":
+        return fmt.mantissa <= 6
+    if fmt.kind == "bfp":
+        return fmt.mantissa <= 7
+    return False          # int kind carries a float scale, not an exponent
+
+
+def pack_kv(x: jax.Array, fmt: QuantFormat):
+    """Encode x (blocks along the LAST axis) into the KV page storage form:
+
+       q   : int8, same shape as x — sign * (mantissa | flag << m), i.e. the
+             paper's 1+1+m bit element (Table I) in one byte;
+       exp : int8 (..., ceil(n/32)) — the 5-bit per-block shared exponent.
+
+    8 + 8/32 = 8.25 bits/elt as stored (vs Table I's ideal 8.16 for
+    BBFP(6,3): the exponent byte wastes 3 bits to stay addressable).
+    EXACT round-trip for values already on the fmt grid (e.g. a bf16 cache
+    written through ``quant.linear.qkv_cache``): requantisation preserves the
+    block max exponent, every flag, and every mantissa, so
+    unpack_kv(pack_kv(fake_quant(x))) == fake_quant(x) bitwise (tested)."""
+    assert kv_packable(fmt), f"{fmt.name} does not fit int8 KV codes"
+    qd, pad = quantize(x, fmt, axis=-1)
+    code = qd["sign"] * (qd["mantissa"] | (qd["flag"] << fmt.mantissa))
+    return {"q": _from_blocks(code, pad).astype(jnp.int8),
+            "exp": qd["exp"].astype(jnp.int8)}
+
+
+def unpack_kv(packed: dict, fmt: QuantFormat, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Decode pack_kv storage back to values (one shift/mask + one multiply
+    per element — fusable into the attention gather)."""
+    m = fmt.mantissa
+    shift = fmt.shift if fmt.kind == "bbfp" else 0
+    cb, pad = _to_blocks(packed["q"].astype(jnp.int32), fmt.block)
+    mag = jnp.abs(cb)
+    mant = mag & (2**m - 1)
+    flag = mag >> m
+    step_log2 = packed["exp"].astype(jnp.int32)[..., None] - m + 1 + flag * shift
+    v = jnp.where(cb < 0, -mant, mant).astype(jnp.float32) \
+        * jnp.exp2(step_log2.astype(jnp.float32))
+    return _from_blocks(v, pad).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # format metadata (Table I)
 # ---------------------------------------------------------------------------
 
@@ -370,6 +420,21 @@ def memory_efficiency(fmt: QuantFormat, block: int | None = None) -> float:
 # ---------------------------------------------------------------------------
 # reference BBFP matmul (oracle used by kernels/ref.py and tests)
 # ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("fmt",))
+def bbfp_matmul_packed_ref(a: jax.Array, q: jax.Array, scale: jax.Array,
+                           fmt: QuantFormat = BBFP42) -> jax.Array:
+    """C = Q(a) @ W_packed with the weight side already integer-decomposed
+    (pack_weight storage: q (K, N) int, scale (K/32, N)): only the activation
+    is quantised, then the same per-K-block integer dot + two-scale multiply
+    as ``bbfp_matmul_ref``. The jnp fallback of the packed Pallas kernel."""
+    qa, sa = to_int_repr(a, fmt)                  # (M, nb, B), (M, nb)
+    k, n = q.shape
+    nb = scale.shape[0]
+    qb = q.astype(jnp.float32).reshape(nb, k // nb, n)
+    blk = jnp.einsum("mkb,kbn->mnk", qa.astype(jnp.float32), qb)
+    return jnp.einsum("mnk,mk,kn->mn", blk, sa, scale)
+
 
 @partial(jax.jit, static_argnames=("a_fmt", "b_fmt"))
 def bbfp_matmul_ref(a: jax.Array, b: jax.Array,

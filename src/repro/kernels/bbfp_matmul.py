@@ -15,7 +15,25 @@ TPU adaptation of the paper's weight-stationary BBFP PE array (§IV.A):
     DESIGN.md); its spirit — never spill partial sums — is kept by
     accumulating across the K grid dimension in VMEM scratch.
 
-Validated against ``ref.bbfp_matmul_ref`` in interpret mode (CPU).
+Two kernel variants map the two halves of Table I's dataflow:
+
+  * ``bbfp_matmul``        — both operands arrive fp and are quantised in
+    VMEM.  This is the *training/prefill* shape of the PE array, where the
+    weight tile changes every step.
+  * ``bbfp_matmul_packed`` — the WEIGHT-STATIONARY serving path.  The paper's
+    PE array holds weights pre-aligned as mantissas + shared exponents
+    (Table I); here the weight operand arrives already integer-decomposed
+    (``bbfp.pack_weight``: q int8/int16 (K, N), power-of-two scale
+    (K/32, N)) and goes STRAIGHT to the int8xint8 -> int32 MXU dot — no
+    weight quantisation in the HLO, and HBM streams 9 bits/elt of weight
+    (int8 codes + one fp32 scale per 32; Table I's 5-bit-exponent ideal is
+    8.16) instead of 16 — a ~1.8x weight-read cut, real, not just storage.
+    Only the activation side is quantised in VMEM, exactly as the paper's
+    input-side BFP2BBFP converter feeds the array.
+
+Both validated against ``ref.bbfp_matmul_ref`` in interpret mode (CPU); the
+packed variant is additionally bit-exact vs the fp variant (same quantiser,
+same block order — tested in tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -148,3 +166,86 @@ def bbfp_matmul(a: jax.Array, b: jax.Array, fmt_name: str = "BBFP(4,2)",
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
         interpret=interpret,
     )(a, b)
+
+
+def _matmul_packed_kernel(a_ref, qw_ref, sw_ref, o_ref, acc_ref, *,
+                          m, o, kind, n_k, int8_path):
+    """Weight-stationary variant: the weight tile arrives pre-packed
+    (qw int8/int16 (TK, TN), sw fp32 (TK/KBLOCK, TN)) and feeds the MXU dot
+    directly; only the activation tile is quantised in VMEM. The per-block
+    accumulation (prod * sa * sw) mirrors ``_matmul_kernel`` op-for-op so the
+    two paths are bit-identical when the packed ints match the in-kernel
+    quantiser's (pack_weight uses the same arithmetic; tested)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    qa, sa = _quantize_kblocks(a, m, o, kind)       # (TM, TK), (TM, nb)
+    qw = qw_ref[...]                                # (TK, TN) int
+    sw = sw_ref[...]                                # (TK//KBLOCK, TN) fp32
+    tk = a.shape[-1]
+    nb = tk // KBLOCK
+    acc = acc_ref[...]
+    for blk in range(nb):
+        sl = slice(blk * KBLOCK, (blk + 1) * KBLOCK)
+        if int8_path:
+            # int8 x int8 -> int32 MXU dot (exact for |q| <= 127)
+            prod = jax.lax.dot_general(
+                qa[:, sl].astype(jnp.int8), qw[sl, :].astype(jnp.int8),
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+            prod = prod.astype(jnp.float32)
+        else:
+            prod = jax.lax.dot_general(
+                qa[:, sl].astype(jnp.float32), qw[sl, :].astype(jnp.float32),
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        acc = acc + prod * sa[:, blk][:, None] * sw[blk][None, :]
+    acc_ref[...] = acc
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "tm", "tn", "tk", "interpret"))
+def bbfp_matmul_packed(a: jax.Array, qw: jax.Array, sw: jax.Array,
+                       fmt_name: str = "BBFP(4,2)",
+                       tm: int = 128, tn: int = 128, tk: int = 128,
+                       interpret: bool | None = None) -> jax.Array:
+    """C = Q(a) @ W_packed with the weight already stored as aligned
+    mantissas + shared exponents (``bbfp.pack_weight``).
+
+    a: (M, K) fp; qw: (K, N) int8/int16 with the flag folded in;
+    sw: (K/KBLOCK, N) fp32 power-of-two per-block scales. M, N, K must be
+    multiples of the tile sizes (the ops.py wrapper pads; K-pad rows of qw
+    are zero so padded blocks contribute exactly 0)."""
+    fmt = B.parse_format(fmt_name)
+    m_, k_ = a.shape
+    k2_, n_ = qw.shape
+    assert k_ == k2_ and sw.shape == (k_ // KBLOCK, n_), (a.shape, qw.shape, sw.shape)
+    assert m_ % tm == 0 and n_ % tn == 0 and k_ % tk == 0, (
+        (a.shape, qw.shape, tm, tn, tk))
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n_k = k_ // tk
+    int8_path = B.folded_max(fmt) <= 127
+    kernel = functools.partial(
+        _matmul_packed_kernel, m=fmt.mantissa, o=fmt.overlap, kind=fmt.kind,
+        n_k=n_k, int8_path=int8_path)
+    grid = (m_ // tm, n_ // tn, n_k)
+    nb = tk // KBLOCK
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((nb, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_, n_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(a, qw, sw)

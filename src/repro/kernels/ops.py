@@ -12,7 +12,15 @@ import jax.numpy as jnp
 from repro.core import bbfp as B
 from repro.kernels import ref as _ref
 from repro.kernels.bbfp_matmul import bbfp_matmul as _matmul_kernel_call
+from repro.kernels.bbfp_matmul import bbfp_matmul_packed as _matmul_packed_call
 from repro.kernels.lut_nonlinear import lut_apply_kernel
+
+# dispatch floor: at least one natural fp32 (8, 128) output tile's worth of
+# work, else the jnp reference wins. Row-thin operands (decode GEMMs: rows =
+# batch, N = model dim) still clear this and run the kernel with tm=8 —
+# the old `rows * n_dim < 128 * 128` floor sent every batch-sized serving
+# GEMM to the reference.
+_MIN_KERNEL_ELEMS = 8 * 128
 
 
 def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -22,6 +30,12 @@ def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
         widths[axis] = (0, pad)
         x = jnp.pad(x, widths)
     return x
+
+
+def _row_tile(rows: int) -> int:
+    """Output-row tile: full 128 MXU rows when the operand has them, the
+    minimal fp32 sublane tile (8) for row-thin decode GEMMs."""
+    return 128 if rows >= 128 else 8
 
 
 def bbfp_matmul(a: jax.Array, b: jax.Array, fmt_name: str = "BBFP(4,2)",
@@ -35,12 +49,46 @@ def bbfp_matmul(a: jax.Array, b: jax.Array, fmt_name: str = "BBFP(4,2)",
     n_dim = b.shape[1]
     a2 = a.reshape(-1, k_dim)
     rows = a2.shape[0]
-    if not use_kernel or rows * n_dim < 128 * 128:
+    if not use_kernel or rows * n_dim < _MIN_KERNEL_ELEMS:
         out = _ref.bbfp_matmul_ref(a2, b, fmt_name)
         return out.reshape(*lead, m_dim, n_dim)
-    a2 = _pad_axis(_pad_axis(a2, 128, 0), 128, 1)
+    tm = _row_tile(rows)
+    a2 = _pad_axis(_pad_axis(a2, tm, 0), 128, 1)
     b2 = _pad_axis(_pad_axis(b, 128, 0), 128, 1)
-    out = _matmul_kernel_call(a2, b2, fmt_name)[:rows, :n_dim]
+    out = _matmul_kernel_call(a2, b2, fmt_name, tm=tm)[:rows, :n_dim]
+    return out.reshape(*lead, m_dim, n_dim)
+
+
+def bbfp_matmul_packed(a: jax.Array, packed: dict,
+                       fmt_name: str = "BBFP(4,2)",
+                       use_kernel: bool = True) -> jax.Array:
+    """C[..., M, N] = Q(a)[..., M, K] @ W_packed — the serving fast path.
+
+    packed: {"q": (K, N) int8/int16, "scale": (K/32, N) fp32}
+    (``bbfp.pack_weight``). The weight side is consumed as stored — no
+    per-call weight quantisation; only the activation is quantised (in VMEM
+    on the kernel path). K-pad rows of q are zero, so padded K-blocks
+    contribute exactly 0 whatever their (zero-padded) scale.
+    """
+    q, scale = packed["q"], packed["scale"]
+    *lead, m_dim, k_dim = a.shape
+    n_dim = q.shape[1]
+    assert q.shape[0] == k_dim and scale.shape == (k_dim // B.DEFAULT_BLOCK, n_dim), (
+        a.shape, q.shape, scale.shape)
+    # a weight packed under a wider format (int16 folded ints) must never hit
+    # the int8 MXU cast of a narrow fmt_name — catch the mismatch up front
+    assert (q.dtype == jnp.int8) == (B.folded_max(B.parse_format(fmt_name)) <= 127), (
+        f"packed dtype {q.dtype} inconsistent with {fmt_name}'s int8-path")
+    a2 = a.reshape(-1, k_dim)
+    rows = a2.shape[0]
+    if not use_kernel or rows * n_dim < _MIN_KERNEL_ELEMS:
+        out = B.bbfp_matmul_packed_ref(a2, q, scale, B.parse_format(fmt_name))
+        return out.reshape(*lead, m_dim, n_dim)
+    tm = _row_tile(rows)
+    a2 = _pad_axis(_pad_axis(a2, tm, 0), 128, 1)
+    q2 = _pad_axis(_pad_axis(q, 128, 0), 128, 1)
+    s2 = _pad_axis(_pad_axis(scale, 128 // B.DEFAULT_BLOCK, 0), 128, 1)
+    out = _matmul_packed_call(a2, q2, s2, fmt_name, tm=tm)[:rows, :n_dim]
     return out.reshape(*lead, m_dim, n_dim)
 
 

@@ -6,10 +6,12 @@
 
 Continuous-batching mode (ragged prompts through the paged-KV scheduler;
 --page-size/--n-pages set the page geometry and pool budget, --kv-layout
-dense falls back to the slab cache):
+dense falls back to the slab cache, --kv-storage packed keeps KV pages as
+int8 codes + shared exponents — ~2x fewer KV bytes at BBFP(6,3)):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
-      --continuous --batch 8 --slots 4 --max-len 128 --page-size 32
+      --continuous --batch 8 --slots 4 --max-len 128 --page-size 32 \
+      --kv-storage packed
 """
 from __future__ import annotations
 
@@ -72,14 +74,34 @@ def main(argv=None):
     p.add_argument("--max-len", type=int, default=128,
                    help="per-request KV capacity (prompt + max_new - 1)")
     p.add_argument("--kv-layout", choices=["paged", "dense"], default="paged")
+    p.add_argument("--kv-storage", choices=["fp", "packed"], default="fp",
+                   help="paged page storage: bf16 values, or packed int8 "
+                        "codes + shared exponents (~2x fewer KV bytes)")
+    p.add_argument("--kv-quant", default=None,
+                   help="KV-cache quantisation format (default: none; "
+                        "--kv-storage packed defaults it to BBFP(6,3))")
     p.add_argument("--page-size", type=int, default=32,
                    help="KV rows per page (32 = BBFP quantisation block)")
     p.add_argument("--n-pages", type=int, default=None,
                    help="page pool budget (default: slots * max_len/page)")
     args = p.parse_args(argv)
 
+    if args.kv_storage == "packed" and not args.continuous:
+        # packed pages live in the ContinuousBatcher's paged pool; the plain
+        # generate path has no packed store, and silently enabling KV
+        # fake-quant there would change tokens while packing nothing
+        p.error("--kv-storage packed requires --continuous")
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
-    qcfg = Q.QuantConfig(linear=args.quant, nonlinear=args.nonlinear)
+    kv_quant = args.kv_quant
+    if kv_quant is None:
+        # packed pages need a storage format; BBFP(6,3) is the serving
+        # default (8.16-bit class, near-lossless KV)
+        kv_quant = "BBFP(6,3)" if args.kv_storage == "packed" else "none"
+    elif kv_quant.lower() == "none" and args.kv_storage == "packed":
+        p.error("--kv-storage packed needs a KV format (--kv-quant), "
+                "it is the page storage format")
+    qcfg = Q.QuantConfig(linear=args.quant, nonlinear=args.nonlinear,
+                         kv_cache=kv_quant)
     key = jax.random.PRNGKey(args.seed)
     params = M.init(cfg, key)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
@@ -98,6 +120,7 @@ def main(argv=None):
         bat = ContinuousBatcher(cfg, params, qcfg, n_slots=args.slots,
                                 max_len=args.max_len,
                                 kv_layout=args.kv_layout,
+                                kv_storage=args.kv_storage,
                                 page_size=args.page_size,
                                 n_pages=args.n_pages)
         for i in range(args.batch):   # ragged mix around --prompt-len
@@ -112,7 +135,7 @@ def main(argv=None):
         n_new = sum(len(r.out_tokens) for r in finished)
         stats = bat.kv_stats()
         print(f"arch={cfg.name} quant={qcfg.linear}/{qcfg.nonlinear} "
-              f"layout={stats['kv_layout']}")
+              f"layout={stats['kv_layout']} storage={stats['kv_storage']}")
         print(f"served {len(finished)} requests / {n_new} tokens in "
               f"{dt:.2f}s over {ticks} ticks ({bat.decode_calls} decode "
               f"calls, {bat.prefill_traces} prefill traces)")

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import bbfp as B
 from repro.models import common as C
 from repro.quant import linear as Q
 
@@ -82,11 +83,20 @@ def _score_mask(m: jax.Array) -> jax.Array:
     return m[:, None, None] if m.ndim == 3 else m[None, None, None]
 
 
-def _paged_append(pool, block_table, pos, row):
+def _paged_append(pool, block_table, pos, row, kv_fmt=None):
     """Scatter each slot's new row (B, ...) into a page pool (n_pages,
     page, ...) at (block_table[b, pos//page], pos % page). Sentinel table
     entries (= n_pages) land out of bounds and are DROPPED — idle slots
-    never corrupt another slot's page. pos must be a per-slot (B,) vector."""
+    never corrupt another slot's page. pos must be a per-slot (B,) vector.
+
+    A PACKED pool (dict {"q", "exp"}, see paged_kv.init_paged_cache
+    storage="packed") quantises the row on scatter: int8 codes + int8
+    per-32-block shared exponents in `kv_fmt` (= qcfg.kv_fmt). Exact for
+    rows already on the format grid (the qkv_cache write path)."""
+    if isinstance(pool, dict):
+        enc = B.pack_kv(row.astype(jnp.float32), kv_fmt)
+        return {"q": _paged_append(pool["q"], block_table, pos, enc["q"]),
+                "exp": _paged_append(pool["exp"], block_table, pos, enc["exp"])}
     pv = jnp.asarray(pos)
     assert pv.ndim == 1, "paged caches require per-slot pos (B,)"
     page = pool.shape[1]
@@ -94,12 +104,20 @@ def _paged_append(pool, block_table, pos, row):
     return pool.at[pg, pv % page].set(row, mode="drop")
 
 
-def _paged_view(pool, block_table):
+def _paged_view(pool, block_table, kv_fmt=None, dtype=None):
     """Gather each slot's pages into a contiguous (B, max_pages*page, ...)
     view. Sentinel entries CLAMP to the last page; the caller's per-slot
-    position mask discards those rows."""
+    position mask discards those rows. A PACKED pool gathers the int8
+    codes + exponents and dequantises into `dtype` — HBM only ever streams
+    the 8.25-bit storage; the fp view exists in registers/VMEM only."""
+    if isinstance(pool, dict):
+        return B.unpack_kv(
+            {"q": _paged_view(pool["q"], block_table),
+             "exp": _paged_view(pool["exp"], block_table)},
+            kv_fmt, out_dtype=dtype)
     b = block_table.shape[0]
-    return pool[block_table].reshape(b, -1, *pool.shape[2:])
+    out = pool[block_table].reshape(b, -1, *pool.shape[2:])
+    return out if dtype is None else out.astype(dtype)
 
 
 def _full_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
@@ -239,18 +257,28 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
 
     new_cache = cache
     if cache is not None and kv_override is None:
-        # BBFP KV cache (serving): values land on the storage grid at write
-        k_st = Q.qkv_cache(k, qcfg).astype(cache["k"].dtype)
-        v_st = Q.qkv_cache(v, qcfg).astype(cache["v"].dtype)
+        # BBFP KV cache (serving): values land on the storage grid at write.
+        # A packed paged pool ({"q","exp"} leaves) skips the fake-quant —
+        # _paged_append's pack_kv IS the same quantiser (unpack(pack(x)) ==
+        # fake_quant(x) bitwise, tested), so encoding the raw row once is
+        # numerically identical to the fp pool and avoids double-quantising
+        # every write on the decode hot path.
+        packed = isinstance(cache["k"], dict)
+        kv_fmt = qcfg.kv_fmt if packed else None
+        if packed:
+            k_st, v_st = k, v
+        else:
+            k_st = Q.qkv_cache(k, qcfg).astype(cache["k"].dtype)
+            v_st = Q.qkv_cache(v, qcfg).astype(cache["v"].dtype)
         if pos is not None:   # decode: write this step's k/v at pos
             if block_table is not None:
                 # paged cache: k/v are page pools (n_pages, page, KH, hd)
                 pv = jnp.asarray(pos)
-                k_pool = _paged_append(cache["k"], block_table, pv, k_st[:, 0])
-                v_pool = _paged_append(cache["v"], block_table, pv, v_st[:, 0])
+                k_pool = _paged_append(cache["k"], block_table, pv, k_st[:, 0], kv_fmt)
+                v_pool = _paged_append(cache["v"], block_table, pv, v_st[:, 0], kv_fmt)
                 new_cache = {"k": k_pool, "v": v_pool}
-                k = _paged_view(k_pool, block_table).astype(dt)
-                v = _paged_view(v_pool, block_table).astype(dt)
+                k = _paged_view(k_pool, block_table, kv_fmt, dt)
+                v = _paged_view(v_pool, block_table, kv_fmt, dt)
                 k_pos = jnp.arange(k.shape[1])
             elif jnp.ndim(pos):   # ragged: each slot writes at its own offset
                 if ring_positions is not None:
@@ -344,21 +372,28 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
     new_cache = cache
 
     if pos is not None:
-        # MLA's compressed latent is NOT quantised: it feeds both k_nope and
-        # v through learned up-projections, which amplify quantisation error
-        # ~4x vs a plain KV cache (measured; DESIGN.md §5). The latent is
-        # already 4.5x smaller than a GQA cache, so the win is small anyway.
-        ckv_st = ckv.astype(cache["ckv"].dtype)
-        kr_st = k_rope.astype(cache["krope"].dtype)
+        # MLA's compressed latent is NOT quantised on the fp paths: it feeds
+        # both k_nope and v through learned up-projections, which amplify
+        # quantisation error ~4x vs a plain KV cache (measured; DESIGN.md
+        # §5). The latent is already 4.5x smaller than a GQA cache, so the
+        # win is small anyway. PACKED page pools are the explicit opt-in
+        # exception (kv_storage="packed"): the latent is stored as int8
+        # codes in qcfg.kv_fmt — a memory/accuracy tradeoff the fp paths
+        # deliberately don't take, so packed-MLA is close-but-not-equal to
+        # fp-MLA (unlike GQA, where packed is exact).
+        packed = isinstance(cache["ckv"], dict)
+        kv_fmt = qcfg.kv_fmt if packed else None
+        ckv_st = ckv if packed else ckv.astype(cache["ckv"].dtype)
+        kr_st = k_rope if packed else k_rope.astype(cache["krope"].dtype)
         pv = jnp.asarray(pos)
         if block_table is not None:
             # paged compressed cache: scatter at (page, offset), gather the
             # slot's pages back into a contiguous (B, max_pages*page) view
-            ckv_pool = _paged_append(cache["ckv"], block_table, pv, ckv_st[:, 0])
-            kr_pool = _paged_append(cache["krope"], block_table, pv, kr_st[:, 0])
+            ckv_pool = _paged_append(cache["ckv"], block_table, pv, ckv_st[:, 0], kv_fmt)
+            kr_pool = _paged_append(cache["krope"], block_table, pv, kr_st[:, 0], kv_fmt)
             new_cache = {"ckv": ckv_pool, "krope": kr_pool}
-            ckv_all = _paged_view(ckv_pool, block_table)
-            kr_all = _paged_view(kr_pool, block_table)
+            ckv_all = _paged_view(ckv_pool, block_table, kv_fmt, dt)
+            kr_all = _paged_view(kr_pool, block_table, kv_fmt, dt)
         elif pv.ndim:   # ragged: per-slot write offsets (B,), batched scatter
             bidx = jnp.arange(ckv_st.shape[0])
             ckv_all = cache["ckv"].at[bidx, pv].set(ckv_st[:, 0], mode="drop")
@@ -369,8 +404,9 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
             kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_st, pos, axis=1)
             new_cache = {"ckv": ckv_all, "krope": kr_all}
         t = ckv_all.shape[1]
-        # absorbed attention: q_nope -> lora space via w_uk
-        w_uk = params["w_uk"]["w"].reshape(lora, h, nope).astype(dt)
+        # absorbed attention: q_nope -> lora space via w_uk (weight_view:
+        # the up-projections may arrive packed int8+scales in serving)
+        w_uk = Q.weight_view(params["w_uk"], dt).reshape(lora, h, nope)
         q_lora = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)              # (B,1,H,lora)
         s_nope = jnp.einsum("bqhl,btl->bhqt", q_lora, ckv_all.astype(dt))
         s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope, kr_all.astype(dt))
@@ -381,7 +417,7 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
             where = (jnp.arange(t) <= pos)[None, None, None, :]
         probs = Q.qsoftmax(scores, qcfg, axis=-1, where=where)
         ctx = jnp.einsum("bhqt,btl->bqhl", probs.astype(dt), ckv_all.astype(dt))
-        w_uv = params["w_uv"]["w"].reshape(lora, h, vdim).astype(dt)
+        w_uv = Q.weight_view(params["w_uv"], dt).reshape(lora, h, vdim)
         out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
     else:
         if cache is not None:

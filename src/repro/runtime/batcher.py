@@ -30,6 +30,13 @@ KV layouts (tested in tests/test_paged_kv.py):
   * "dense" — the original (B, max_len) slab per layer; kept as the
     reference layout and for the bench comparison.
 
+KV storage (paged only; `kv_storage` parameter):
+  * "fp" (default) — pages hold bf16 values;
+  * "packed" — pages hold int8 codes + int8 per-32-block shared exponents
+    in qcfg.kv_fmt (runtime/paged_kv.packed_proto): 8.25 bits/elt at
+    BBFP(6,3) vs 16 for bf16, and token-for-token identical to the fp pool
+    for GQA because cache writes already sit on the format grid.
+
 Bucketed chunked prefill: a new request prefills into a staging cache whose
 length is the prompt rounded up to a power-of-two BUCKET (min
 `min_prefill_bucket`), so total prefill compilations are O(log max_len)
@@ -69,14 +76,27 @@ class ContinuousBatcher:
     def __init__(self, cfg, params, qcfg: Q.QuantConfig, *,
                  n_slots: int = 4, max_len: int = 128, eos_id: int | None = None,
                  kv_layout: str = "paged", page_size: int = PK.PAGE_SIZE,
-                 n_pages: int | None = None, min_prefill_bucket: int = 16):
+                 n_pages: int | None = None, min_prefill_bucket: int = 16,
+                 kv_storage: str = "fp"):
         assert cfg.family == "decoder", "batcher targets the decoder family"
         assert kv_layout in ("paged", "dense"), kv_layout
+        assert kv_storage in ("fp", "packed"), kv_storage
         self.cfg, self.params, self.qcfg = cfg, params, qcfg
         self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
         self.paged = kv_layout == "paged"
+        self.kv_storage = kv_storage
         self.page_size = page_size
         self.min_bucket = max(1, min_prefill_bucket)
+        if kv_storage == "packed":
+            # packed pages store int8 codes in qcfg.kv_fmt — the storage
+            # format IS the cache-quantisation format, so it must be set
+            # (and the pool layout must be paged: pages = quant blocks)
+            if not self.paged:
+                raise ValueError("kv_storage='packed' requires kv_layout='paged'")
+            if qcfg.kv_cache == "none":
+                raise ValueError(
+                    "kv_storage='packed' needs qcfg.kv_cache set (e.g. "
+                    "'BBFP(6,3)') — it is the page storage format")
         if self.paged:
             self.max_pages = PK.pages_for(max_len, page_size)
             # default budget = dense-equivalent capacity (no overcommit);
@@ -84,8 +104,10 @@ class ContinuousBatcher:
             self.n_pages = n_pages if n_pages is not None \
                 else n_slots * self.max_pages
             self.alloc = PK.PagedKVAllocator(self.n_pages, page_size, n_slots)
-            self.cache = PK.init_paged_cache(cfg, n_slots, max_len,
-                                             n_pages=self.n_pages, page=page_size)
+            self.cache = PK.init_paged_cache(
+                cfg, n_slots, max_len, n_pages=self.n_pages, page=page_size,
+                storage=kv_storage,
+                kv_fmt=qcfg.kv_fmt if kv_storage == "packed" else None)
         else:
             self.alloc = None
             self.cache = M.init_cache(cfg, n_slots, max_len)  # cache["pos"]: (B,)
@@ -209,7 +231,9 @@ class ContinuousBatcher:
                         jnp.asarray(pids, jnp.int32))
                     self.cache = PK.splice_pages(
                         {**self.cache, "block_table": bt}, staged, pids,
-                        p_len, self.page_size)
+                        p_len, self.page_size,
+                        kv_fmt=self.qcfg.kv_fmt
+                        if self.kv_storage == "packed" else None)
                 else:
                     self._splice_dense(slot, staged, p_len)
                 self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
@@ -291,6 +315,7 @@ class ContinuousBatcher:
         """Serving-path memory counters for the bench trajectory."""
         total = PK.kv_bytes(self.cache)
         stats = {"kv_layout": "paged" if self.paged else "dense",
+                 "kv_storage": self.kv_storage,
                  "kv_store_bytes": total,
                  "kv_bytes_per_slot": total // self.n_slots}
         if self.paged:

@@ -228,6 +228,37 @@ def test_pack_unpack_roundtrip_all_formats():
                                       err_msg=fmt.name)
 
 
+def test_pack_kv_roundtrip_and_idempotence():
+    """KV page storage codes (serving): for every int8-codable format,
+    (a) unpack(pack(x)) == fake_quant(x) EXACTLY for arbitrary x (packing IS
+    the quantiser, just stored as sign|flag|mantissa bytes + exponent
+    bytes), and (b) values already on the grid — the qkv_cache write path,
+    including the bf16 cast of the cache — survive a pack/unpack round-trip
+    bitwise, which is what makes packed pages numerically identical to fp
+    pages end-to-end."""
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 3, 48)) * 6
+    x = x.at[0, 0, 5].set(77.0)                  # outlier drives the flags
+    for fmt in B.FORMATS.values():
+        if fmt.kind == "none" or not B.kv_packable(fmt):
+            continue
+        packed = B.pack_kv(x, fmt)
+        assert packed["q"].dtype == jnp.int8 and packed["q"].shape == x.shape
+        assert packed["exp"].dtype == jnp.int8
+        assert packed["exp"].shape == x.shape[:-1] + (2,)   # ceil(48/32)
+        got = B.unpack_kv(packed, fmt, out_dtype=jnp.float32)
+        want = B.fake_quant(x, fmt, axis=-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=fmt.name)
+        # on-grid idempotence (bf16 store, as the cache writes it)
+        grid = want.astype(jnp.bfloat16)
+        back = B.unpack_kv(B.pack_kv(grid.astype(jnp.float32), fmt), fmt)
+        np.testing.assert_array_equal(
+            np.asarray(back, np.float32), np.asarray(grid, np.float32),
+            err_msg=fmt.name)
+    assert not B.kv_packable(B.BBFP105)          # needs 11+1 bits
+    assert not B.kv_packable(B.INT8)             # float scale, not exponent
+
+
 def test_zeros_and_signs():
     x = jnp.asarray([[0.0] * 32, [-1.5] * 32])
     for fmt in FMTS:

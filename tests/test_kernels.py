@@ -4,11 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import bbfp as B
 from repro.kernels import ops, ref
 
 MATMUL_SHAPES = [(128, 128, 128), (256, 384, 128), (128, 256, 256),
                  (130, 100, 140), (64, 32, 16)]
 FMTS = ["BBFP(4,2)", "BBFP(3,1)", "BBFP(6,3)", "BFP4", "BFP6", "INT8"]
+# every registered quantised format (the packed kernel must serve them all)
+ALL_FMTS = [f.name for f in B.FORMATS.values() if f.kind != "none"]
 
 
 @pytest.mark.parametrize("shape", MATMUL_SHAPES)
@@ -42,6 +45,191 @@ def test_bbfp_matmul_batched_lead_dims():
     assert got.shape == (4, 33, 40)
     want = ref.bbfp_matmul_ref(a.reshape(-1, 96), b, "BBFP(4,2)").reshape(4, 33, 40)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# packed-operand kernel (weight-stationary serving path)
+# ---------------------------------------------------------------------------
+
+PACKED_SHAPES = [(128, 128, 128), (130, 96, 140), (8, 256, 128), (4, 64, 256)]
+
+
+@pytest.mark.parametrize("shape", PACKED_SHAPES)
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_bbfp_matmul_packed_vs_fp_kernel(shape, fmt):
+    """The packed kernel (weight pre-decomposed by pack_weight, consumed as
+    stored) against the fp kernel (weight quantised in VMEM per call):
+    pack_weight uses the identical quantiser and the kernels accumulate in
+    the identical block order, so power-of-two-scale formats (bbfp/bfp) are
+    BIT-EXACT. The int baseline's absmax scale is not a power of two, so its
+    last bit depends on how the compiler fuses the scale multiplies (FMA) —
+    there equality holds to fp32 roundoff. Covers both sides of the
+    folded_max <= 127 int8-path boundary (INT8 sits exactly ON it at 127;
+    BBFP(6,3) folds to 504 -> int16 storage, fp32 dot)."""
+    m, k, n = shape
+    f = B.parse_format(fmt)
+    a = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32) * 2
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n), jnp.float32)
+    packed = B.pack_weight(w, f, cast_dtype=None)
+    want_dtype = jnp.int8 if B.folded_max(f) <= 127 else jnp.int16
+    assert packed["q"].dtype == want_dtype, fmt
+    got = ops.bbfp_matmul_packed(a, packed, fmt)
+    fp_kernel = ops.bbfp_matmul(a, w, fmt)
+    if f.kind == "int":
+        scale = float(jnp.max(jnp.abs(fp_kernel))) + 1e-9
+        np.testing.assert_allclose(np.asarray(got) / scale,
+                                   np.asarray(fp_kernel) / scale, atol=2e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(fp_kernel))
+    # and against the fake-quant oracle, like the fp kernel's own test
+    want = ref.bbfp_matmul_ref(a, w, fmt)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=2e-6)
+
+
+def test_bbfp_matmul_packed_batched_lead_dims():
+    a = jax.random.normal(jax.random.PRNGKey(3), (4, 33, 96))
+    w = jax.random.normal(jax.random.PRNGKey(4), (96, 40))
+    packed = B.pack_weight(w, B.BBFP42, cast_dtype=None)
+    got = ops.bbfp_matmul_packed(a, packed, "BBFP(4,2)")
+    assert got.shape == (4, 33, 40)
+    want = ref.bbfp_matmul_ref(a.reshape(-1, 96), w, "BBFP(4,2)").reshape(4, 33, 40)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_packed_dtype_mismatch_rejected():
+    """an int16-folded weight (BBFP(6,3)) must never reach an int8-path
+    fmt_name's MXU cast — the wrapper rejects the inconsistent pairing."""
+    a = jax.random.normal(jax.random.PRNGKey(5), (16, 64))
+    packed = B.pack_weight(jax.random.normal(jax.random.PRNGKey(6), (64, 128)),
+                           B.BBFP63, cast_dtype=None)
+    with pytest.raises(AssertionError, match="int8-path"):
+        ops.bbfp_matmul_packed(a, packed, "BBFP(4,2)")
+
+
+def test_row_thin_dispatch_hits_kernel(monkeypatch):
+    """decode-shaped GEMMs (rows = batch size) must run the Pallas kernel
+    with the tm=8 row tile, not fall back to the jnp reference — and truly
+    tiny problems must still fall back. Verifies the pad/slice logic for
+    row counts that are not multiples of the tile."""
+    calls = {"fp": 0, "packed": 0}
+    real_fp, real_pk = ops._matmul_kernel_call, ops._matmul_packed_call
+    monkeypatch.setattr(ops, "_matmul_kernel_call",
+                        lambda *a, **k: (calls.__setitem__("fp", calls["fp"] + 1),
+                                         real_fp(*a, **k))[1])
+    monkeypatch.setattr(ops, "_matmul_packed_call",
+                        lambda *a, **k: (calls.__setitem__("packed", calls["packed"] + 1),
+                                         real_pk(*a, **k))[1])
+    w = jax.random.normal(jax.random.PRNGKey(7), (96, 256))
+    packed = B.pack_weight(w, B.BBFP42, cast_dtype=None)
+    for rows in (4, 5, 8):            # 4/5 pad to 8; 5 exercises the slice
+        a = jax.random.normal(jax.random.PRNGKey(rows), (rows, 96)) * 2
+        got_fp = ops.bbfp_matmul(a, w, "BBFP(4,2)")
+        got_pk = ops.bbfp_matmul_packed(a, packed, "BBFP(4,2)")
+        want = ref.bbfp_matmul_ref(a, w, "BBFP(4,2)")
+        np.testing.assert_allclose(np.asarray(got_fp), np.asarray(want), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got_pk), np.asarray(want), atol=1e-4)
+    assert calls == {"fp": 3, "packed": 3}      # every call hit the kernel
+    # below the dispatch floor (rows * n < 8*128): jnp reference, no kernel
+    a = jax.random.normal(jax.random.PRNGKey(9), (4, 96))
+    small_w = w[:, :16]
+    ops.bbfp_matmul(a, small_w, "BBFP(4,2)")
+    ops.bbfp_matmul_packed(
+        a, {"q": packed["q"][:, :16], "scale": packed["scale"][:, :16]},
+        "BBFP(4,2)")
+    assert calls == {"fp": 3, "packed": 3}      # unchanged: fell back to ref
+
+
+def test_qlinear_packed_routes_both_ways():
+    """the qlinear dispatch bug: packed {"q","scale"} params must respect
+    qcfg.use_kernel — kernel path -> bbfp_matmul_packed, no-kernel path ->
+    the fused-dequant fp dot. Both agree with the fake-quant baseline."""
+    from repro.quant import linear as Q
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 16, 64), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(11), (64, 96), jnp.bfloat16)
+    params_packed = {**B.pack_weight(w, B.BBFP42),
+                     "b": jnp.ones((96,), jnp.bfloat16)}
+    y_fake = Q.qlinear({"w": w, "b": params_packed["b"]}, x,
+                       Q.QuantConfig(linear="BBFP(4,2)"))
+    y_nok = Q.qlinear(params_packed, x, Q.QuantConfig(linear="BBFP(4,2)"))
+    y_ker = Q.qlinear(params_packed, x,
+                      Q.QuantConfig(linear="BBFP(4,2)", use_kernel=True))
+    for name, y in (("no-kernel", y_nok), ("kernel", y_ker)):
+        err = float(jnp.max(jnp.abs((y - y_fake).astype(jnp.float32))))
+        ref_mag = float(jnp.max(jnp.abs(y_fake.astype(jnp.float32)))) + 1e-9
+        assert err <= 1e-2 * ref_mag, (name, err)
+
+
+def test_packed_params_generate_gqa_and_mla():
+    """pack_params'd projections thread through the model layers end-to-end:
+    GQA decodes with packed weights on BOTH qlinear paths (kernel and
+    fused-dequant), and MLA's absorbed decode reads packed w_uk/w_uv through
+    weight_view instead of crashing on the missing "w" leaf.
+
+    GQA no-kernel packed == fake-quant token-for-token (unpack ==
+    fake_quant exactly). MLA is agreement-only: its absorbed decode uses
+    w_uk/w_uv RAW in the fp run (prefill quantises them, decode does not),
+    while packed weights are on-grid in both phases — so packed-MLA is the
+    self-consistent one and can't match the fp run bitwise. The kernel run
+    may also flip near-tied logits (different fp32 accumulation order)."""
+    from repro import configs
+    from repro.launch.serve import generate
+    from repro.models import model as M
+    from repro.quant import linear as Q
+    from repro.quant.packed import pack_params
+
+    def unpack_tree(orig, node):
+        """fp twin of the packed params (every weight exactly on the format
+        grid), mirroring the original structure: a {"w"} dict stays a dict,
+        a bare packed leaf (MoE expert weights) unpacks back to an array."""
+        if isinstance(node, dict) and "q" in node and "scale" in node:
+            w = B.unpack_weight(node)
+            if isinstance(orig, dict):
+                return {"w": w, **{k: v for k, v in node.items()
+                                   if k not in ("q", "scale")}}
+            return w
+        if isinstance(node, dict):
+            return {k: unpack_tree(orig[k], v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(unpack_tree(o, v) for o, v in zip(orig, node))
+        return node
+
+    for arch in ("llama7b", "deepseek_v2_lite_16b"):
+        cfg = configs.smoke_config(arch)
+        params = M.init(cfg, jax.random.PRNGKey(0))
+        fmt = B.BBFP42
+        packed = pack_params(params, fmt)
+        assert any("q" in str(jax.tree_util.keystr(kp))
+                   for kp, _ in jax.tree_util.tree_leaves_with_path(packed))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+        qcfg = Q.QuantConfig(linear="BBFP(4,2)")
+        # strong invariant, both archs: serving packed storage ==
+        # serving the dequantised weights, token-for-token (requantisation
+        # of on-grid weights is idempotent)
+        t_grid = generate(cfg, unpack_tree(params, packed), prompts, qcfg,
+                          gen_len=5)
+        t_packed = generate(cfg, packed, prompts, qcfg, gen_len=5)
+        np.testing.assert_array_equal(np.asarray(t_packed),
+                                      np.asarray(t_grid), err_msg=arch)
+        # GQA only: the fp-params run quantises every weight it uses, so
+        # packed == fake-quant exactly. (MLA's absorbed decode uses w_uk/
+        # w_uv RAW on fp params while prefill quantises them — the packed
+        # run is the self-consistent one and can't match the fp run.)
+        if arch == "llama7b":
+            t_fake = generate(cfg, params, prompts, qcfg, gen_len=5)
+            np.testing.assert_array_equal(np.asarray(t_packed),
+                                          np.asarray(t_fake), err_msg=arch)
+        # kernel path on packed params: same quantised operands, different
+        # fp32 accumulation order — compare prefill logits, not greedy
+        # token chains (near-tied random-init logits make chains diverge)
+        lg_nok, _ = M.prefill(packed, cfg, prompts, qcfg, max_len=16)
+        lg_ker, _ = M.prefill(
+            packed, cfg, prompts,
+            Q.QuantConfig(linear="BBFP(4,2)", use_kernel=True), max_len=16)
+        scale = float(jnp.max(jnp.abs(lg_nok.astype(jnp.float32)))) + 1e-9
+        err = float(jnp.max(jnp.abs((lg_ker - lg_nok).astype(jnp.float32))))
+        assert err <= 0.05 * scale, (arch, err, scale)
 
 
 LUT_SHAPES = [(8, 512), (16, 33, 700), (5000,), (3, 3, 3)]

@@ -70,20 +70,27 @@ def test_pages_for():
 
 def test_paged_matches_dense_and_sequential():
     """Ragged mix (one prompt spanning 2 pages, decode crossing a page
-    boundary): identical tokens in all three regimes, ONE decode per tick."""
+    boundary): identical tokens in all FOUR regimes — sequential reference,
+    dense slab, paged-fp pool, paged-PACKED pool (int8 codes + shared
+    exponents) — and ONE decode per tick. All regimes run with the
+    BBFP(6,3) KV-cache format, so the packed store's quantise-on-scatter
+    sees values already on the grid and is bit-identical to the fp pool."""
     cfg = configs.smoke_config("llama7b")
     params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
     lens = [5, 9, 30]                  # 30 spans pages 0-1; +6 crosses row 32
     prompts = [jax.random.randint(jax.random.fold_in(KEY, i), (n,), 0, cfg.vocab)
                for i, n in enumerate(lens)]
     gen = 6
-    refs = [generate(cfg, params, p[None, :], Q.FP, gen_len=gen)[0].tolist()
+    refs = [generate(cfg, params, p[None, :], qcfg, gen_len=gen)[0].tolist()
             for p in prompts]
 
     outs = {}
-    for layout in ("dense", "paged"):
-        bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=3, max_len=64,
-                                kv_layout=layout)
+    variants = [("dense", "dense", "fp"), ("paged", "paged", "fp"),
+                ("packed", "paged", "packed")]
+    for name, layout, storage in variants:
+        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=3, max_len=64,
+                                kv_layout=layout, kv_storage=storage)
         calls = []
         inner = bat._decode
         bat._decode = lambda *a: (calls.append(1), inner(*a))[1]
@@ -97,7 +104,7 @@ def test_paged_matches_dense_and_sequential():
             # exactly ONE jitted decode per tick, however ragged the batch
             assert len(calls) == before + 1
         assert bat.decode_calls == ticks == len(calls)
-        outs[layout] = {r.rid: r.out_tokens[:gen] for r in bat.finished}
+        outs[name] = {r.rid: r.out_tokens[:gen] for r in bat.finished}
         if layout == "paged":
             # retirement returned every page to the pool
             assert bat.alloc.used_count == 0
@@ -105,6 +112,7 @@ def test_paged_matches_dense_and_sequential():
     for i, ref in enumerate(refs):
         assert outs["dense"][i] == ref, (i, outs["dense"][i], ref)
         assert outs["paged"][i] == ref, (i, outs["paged"][i], ref)
+        assert outs["packed"][i] == ref, (i, outs["packed"][i], ref)
 
 
 def test_prefill_traces_bounded_by_buckets():
@@ -188,3 +196,65 @@ def test_init_paged_cache_rejects_non_transformer():
     cfg = configs.smoke_config("mamba2_2_7b")
     with pytest.raises(NotImplementedError, match="transformer"):
         PK.init_paged_cache(cfg, 2, 32, n_pages=2)
+
+
+# ---------------------------------------------------------------------------
+# packed page storage (int8 codes + shared exponents)
+# ---------------------------------------------------------------------------
+
+def test_packed_storage_bytes_ratio():
+    """deterministic byte accounting (the CI bench gate mirrors this):
+    packed pages (int8 code + int8 per-32-block exponent) hold <= 0.55x the
+    bytes of the bf16 fp pool. NOTE the 8-bit code is the information floor
+    of BBFP(6,3) (1 sign + 1 flag + 6 mantissa bits): vs a bf16 store the
+    ratio can never go below ~0.52, only vs an fp32 store would it be ~0.26."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    fp = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=64)
+    pk = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=64,
+                           kv_storage="packed")
+    r = pk.kv_stats()["kv_store_bytes"] / fp.kv_stats()["kv_store_bytes"]
+    assert 0.5 <= r <= 0.55, r
+    # the packed pool's leaves really are int8
+    dtypes = {x.dtype for x in jax.tree.leaves(pk.cache["layers"])}
+    assert dtypes == {jnp.dtype(jnp.int8)}, dtypes
+
+
+def test_packed_storage_validation():
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    with pytest.raises(ValueError, match="kv_cache"):
+        ContinuousBatcher(cfg, params, Q.FP, kv_storage="packed")
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatcher(cfg, params, Q.QuantConfig(kv_cache="BBFP(6,3)"),
+                          kv_layout="dense", kv_storage="packed")
+    # a format that does not fit the int8 code (BBFP(10,5) needs 11+1 bits)
+    with pytest.raises(ValueError, match="int8-codable"):
+        PK.init_paged_cache(cfg, 2, 32, n_pages=2, storage="packed",
+                            kv_fmt=Q.QuantConfig(kv_cache="BBFP(10,5)").kv_fmt)
+
+
+def test_packed_storage_mla_decodes_close_to_fp():
+    """MLA's compressed latent is deliberately NOT quantised on the fp
+    paths; packed storage is the explicit opt-in that stores it as int8
+    codes. So packed-MLA only tracks fp-MLA approximately (BBFP(6,3) is
+    near-lossless) rather than token-for-token like GQA."""
+    cfg = configs.smoke_config("deepseek_v2_lite_16b")
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, i), (n,), 0, cfg.vocab)
+               for i, n in enumerate([6, 11])]
+    outs = {}
+    for storage in ("fp", "packed"):
+        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=48,
+                                kv_storage=storage)
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=5))
+        finished, _ = bat.run()
+        assert len(finished) == 2
+        outs[storage] = {r.rid: r.out_tokens for r in finished}
+    agree = sum(a == b for i in outs["fp"]
+                for a, b in zip(outs["fp"][i], outs["packed"][i]))
+    total = sum(len(v) for v in outs["fp"].values())
+    assert agree >= 0.6 * total, (outs, agree, total)
