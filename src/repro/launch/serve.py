@@ -12,6 +12,15 @@ int8 codes + shared exponents — ~2x fewer KV bytes at BBFP(6,3)):
   PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
       --continuous --batch 8 --slots 4 --max-len 128 --page-size 32 \
       --kv-storage packed
+
+Shared-system-prompt workload: --shared-prefix P prepends the same P random
+tokens to every request, so the prefix cache maps the common pages into
+each follower's block table (stored once, prefill skipped) and chunked
+prefill only runs the unique remainders; --no-prefix-cache re-stores and
+recomputes everything, --prefill-chunk sets the fixed prefill step width:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
+      --continuous --batch 8 --slots 4 --max-len 256 --shared-prefix 96
 """
 from __future__ import annotations
 
@@ -84,6 +93,16 @@ def main(argv=None):
                    help="KV rows per page (32 = BBFP quantisation block)")
     p.add_argument("--n-pages", type=int, default=None,
                    help="page pool budget (default: slots * max_len/page)")
+    p.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="share page-aligned prompt prefixes across requests "
+                        "(copy-on-write pages; paged layout only)")
+    p.add_argument("--prefill-chunk", type=int, default=32,
+                   help="incremental chunked-prefill step width (paged "
+                        "layout; ONE compiled prefill shape)")
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="prepend this many common tokens to every request "
+                        "(shared-system-prompt workload for the prefix cache)")
     args = p.parse_args(argv)
 
     if args.kv_storage == "packed" and not args.continuous:
@@ -122,11 +141,17 @@ def main(argv=None):
                                 kv_layout=args.kv_layout,
                                 kv_storage=args.kv_storage,
                                 page_size=args.page_size,
-                                n_pages=args.n_pages)
+                                n_pages=args.n_pages,
+                                prefix_cache=args.prefix_cache,
+                                prefill_chunk=args.prefill_chunk)
+        shared = jax.random.randint(jax.random.fold_in(key, 999),
+                                    (args.shared_prefix,), 0, cfg.vocab)
         for i in range(args.batch):   # ragged mix around --prompt-len
             p_len = max(1, args.prompt_len - 4 + (3 * i) % 9)
             prompt = jax.random.randint(jax.random.fold_in(key, i),
                                         (p_len,), 0, cfg.vocab)
+            if args.shared_prefix:    # shared-system-prompt workload
+                prompt = jnp.concatenate([shared, prompt])
             bat.submit(Request(rid=i, prompt=prompt, max_new=args.gen))
         with PT.activation_sharding(mesh, PT.SERVE_RULES):
             t0 = time.perf_counter()
@@ -138,7 +163,13 @@ def main(argv=None):
               f"layout={stats['kv_layout']} storage={stats['kv_storage']}")
         print(f"served {len(finished)} requests / {n_new} tokens in "
               f"{dt:.2f}s over {ticks} ticks ({bat.decode_calls} decode "
-              f"calls, {bat.prefill_traces} prefill traces)")
+              f"calls, {bat.prefill_traces} prefill traces, "
+              f"{bat.chunk_prefill_calls} prefill chunks)")
+        if bat.paged:
+            print(f"prefix cache: hit rate {bat.prefix_hit_rate:.0%} "
+                  f"({bat.prefix_hit_pages} of "
+                  f"{bat.prefix_hit_pages + bat.prefix_miss_pages} prompt "
+                  f"pages served from resident pages)")
         print("kv:", {k: v for k, v in stats.items() if k != "kv_layout"})
         return finished
     with PT.activation_sharding(mesh, PT.SERVE_RULES):

@@ -83,25 +83,33 @@ def _score_mask(m: jax.Array) -> jax.Array:
     return m[:, None, None] if m.ndim == 3 else m[None, None, None]
 
 
-def _paged_append(pool, block_table, pos, row, kv_fmt=None):
-    """Scatter each slot's new row (B, ...) into a page pool (n_pages,
-    page, ...) at (block_table[b, pos//page], pos % page). Sentinel table
-    entries (= n_pages) land out of bounds and are DROPPED — idle slots
-    never corrupt another slot's page. pos must be a per-slot (B,) vector.
+def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
+    """Scatter each slot's new rows (B, S, ...) — S consecutive KV rows
+    starting at the slot's offset pos (B,) — into a page pool (n_pages,
+    page, ...) at (block_table[b, (pos+i)//page], (pos+i) % page). S=1 is
+    the decode append; S=chunk is incremental chunked prefill. Sentinel
+    table entries (= n_pages) land out of bounds and are DROPPED — idle
+    slots never corrupt another slot's page — and target rows past the
+    table's extent (tail-chunk padding) are redirected to the sentinel.
 
     A PACKED pool (dict {"q", "exp"}, see paged_kv.init_paged_cache
-    storage="packed") quantises the row on scatter: int8 codes + int8
+    storage="packed") quantises the rows on scatter: int8 codes + int8
     per-32-block shared exponents in `kv_fmt` (= qcfg.kv_fmt). Exact for
     rows already on the format grid (the qkv_cache write path)."""
     if isinstance(pool, dict):
-        enc = B.pack_kv(row.astype(jnp.float32), kv_fmt)
+        enc = B.pack_kv(rows.astype(jnp.float32), kv_fmt)
         return {"q": _paged_append(pool["q"], block_table, pos, enc["q"]),
                 "exp": _paged_append(pool["exp"], block_table, pos, enc["exp"])}
     pv = jnp.asarray(pos)
     assert pv.ndim == 1, "paged caches require per-slot pos (B,)"
     page = pool.shape[1]
-    pg = jnp.take_along_axis(block_table, (pv // page)[:, None], axis=1)[:, 0]
-    return pool.at[pg, pv % page].set(row, mode="drop")
+    rpos = pv[:, None] + jnp.arange(rows.shape[1])          # (B,S) target rows
+    idx = rpos // page
+    max_pages = block_table.shape[1]
+    pg = jnp.take_along_axis(block_table, jnp.minimum(idx, max_pages - 1),
+                             axis=1)
+    pg = jnp.where(idx < max_pages, pg, pool.shape[0])      # past table: drop
+    return pool.at[pg, rpos % page].set(rows, mode="drop")
 
 
 def _paged_view(pool, block_table, kv_fmt=None, dtype=None):
@@ -270,12 +278,14 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         else:
             k_st = Q.qkv_cache(k, qcfg).astype(cache["k"].dtype)
             v_st = Q.qkv_cache(v, qcfg).astype(cache["v"].dtype)
-        if pos is not None:   # decode: write this step's k/v at pos
+        if pos is not None:   # decode/chunk: write this step's k/v at pos
             if block_table is not None:
-                # paged cache: k/v are page pools (n_pages, page, KH, hd)
+                # paged cache: k/v are page pools (n_pages, page, KH, hd);
+                # all s rows (1 = decode, chunk = incremental prefill)
+                # scatter through the slot's block-table row
                 pv = jnp.asarray(pos)
-                k_pool = _paged_append(cache["k"], block_table, pv, k_st[:, 0], kv_fmt)
-                v_pool = _paged_append(cache["v"], block_table, pv, v_st[:, 0], kv_fmt)
+                k_pool = _paged_append(cache["k"], block_table, pv, k_st, kv_fmt)
+                v_pool = _paged_append(cache["v"], block_table, pv, v_st, kv_fmt)
                 new_cache = {"k": k_pool, "v": v_pool}
                 k = _paged_view(k_pool, block_table, kv_fmt, dt)
                 v = _paged_view(v_pool, block_table, kv_fmt, dt)
@@ -284,14 +294,15 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
                 if ring_positions is not None:
                     raise NotImplementedError(
                         "ring-buffer caches (griffin) are scalar-pos only")
-                # batched scatter: B rows, not a full-cache rewrite.
+                # batched scatter: B*s rows, not a full-cache rewrite.
                 # mode="drop" makes a write at pos >= T a no-op (NOTE: the
                 # scalar path below instead CLAMPS to row T-1 — callers must
                 # keep pos < T; the batcher rejects oversized requests).
-                bidx = jnp.arange(k_st.shape[0])
+                bidx = jnp.arange(k_st.shape[0])[:, None]
                 pv = jnp.asarray(pos)
-                k_all = cache["k"].at[bidx, pv].set(k_st[:, 0], mode="drop")
-                v_all = cache["v"].at[bidx, pv].set(v_st[:, 0], mode="drop")
+                rpos = pv[:, None] + jnp.arange(s)
+                k_all = cache["k"].at[bidx, rpos].set(k_st, mode="drop")
+                v_all = cache["v"].at[bidx, rpos].set(v_st, mode="drop")
             else:
                 k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_st, pos, axis=1)
                 v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_st, pos, axis=1)
@@ -301,6 +312,11 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
                 k_pos = jnp.arange(cache["k"].shape[1])
         else:                 # prefill: cache <- computed k/v
             new_cache = {"k": k_st, "v": v_st}
+            # attention reads the STORED values (the qkv_cache grid), exactly
+            # what decode and incremental chunked prefill will read back from
+            # the cache — prefill attending raw k/v while every later reader
+            # sees the grid would make chunked prefill non-reproducible
+            k, v = k_st.astype(dt), v_st.astype(dt)
             k_pos = jnp.arange(s)
     elif kv_override is not None:
         k_pos = kv_override[2]
@@ -321,9 +337,11 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
             eff_window = window if window is not None else s_kv + 1
             pv = jnp.asarray(pos)
             if pv.ndim:
-                valid = (k_pos[None, :] <= pv[:, None]) & \
-                        (k_pos[None, :] > pv[:, None] - eff_window)
-                where = valid[:, None, None, None, :]
+                # per-slot query rows pos+i (s=1: decode; s=chunk: prefill)
+                qp = pv[:, None] + jnp.arange(s)             # (B,Sq)
+                valid = (k_pos[None, None, :] <= qp[..., None]) & \
+                        (k_pos[None, None, :] > qp[..., None] - eff_window)
+                where = valid[:, None, None]                 # (B,1,1,Sq,Skv)
             else:
                 valid = (k_pos <= pos) & (k_pos > pos - eff_window)
                 where = valid[None, None, None, None, :]
@@ -387,42 +405,69 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         kr_st = k_rope if packed else k_rope.astype(cache["krope"].dtype)
         pv = jnp.asarray(pos)
         if block_table is not None:
-            # paged compressed cache: scatter at (page, offset), gather the
-            # slot's pages back into a contiguous (B, max_pages*page) view
-            ckv_pool = _paged_append(cache["ckv"], block_table, pv, ckv_st[:, 0], kv_fmt)
-            kr_pool = _paged_append(cache["krope"], block_table, pv, kr_st[:, 0], kv_fmt)
+            # paged compressed cache: scatter all s rows at (page, offset),
+            # gather the slot's pages back into a (B, max_pages*page) view
+            ckv_pool = _paged_append(cache["ckv"], block_table, pv, ckv_st, kv_fmt)
+            kr_pool = _paged_append(cache["krope"], block_table, pv, kr_st, kv_fmt)
             new_cache = {"ckv": ckv_pool, "krope": kr_pool}
             ckv_all = _paged_view(ckv_pool, block_table, kv_fmt, dt)
             kr_all = _paged_view(kr_pool, block_table, kv_fmt, dt)
         elif pv.ndim:   # ragged: per-slot write offsets (B,), batched scatter
-            bidx = jnp.arange(ckv_st.shape[0])
-            ckv_all = cache["ckv"].at[bidx, pv].set(ckv_st[:, 0], mode="drop")
-            kr_all = cache["krope"].at[bidx, pv].set(kr_st[:, 0], mode="drop")
+            bidx = jnp.arange(ckv_st.shape[0])[:, None]
+            rpos = pv[:, None] + jnp.arange(s)
+            ckv_all = cache["ckv"].at[bidx, rpos].set(ckv_st, mode="drop")
+            kr_all = cache["krope"].at[bidx, rpos].set(kr_st, mode="drop")
             new_cache = {"ckv": ckv_all, "krope": kr_all}
         else:
             ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_st, pos, axis=1)
             kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_st, pos, axis=1)
             new_cache = {"ckv": ckv_all, "krope": kr_all}
         t = ckv_all.shape[1]
-        # absorbed attention: q_nope -> lora space via w_uk (weight_view:
-        # the up-projections may arrive packed int8+scales in serving)
-        w_uk = Q.weight_view(params["w_uk"], dt).reshape(lora, h, nope)
-        q_lora = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)              # (B,1,H,lora)
-        s_nope = jnp.einsum("bqhl,btl->bhqt", q_lora, ckv_all.astype(dt))
-        s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope, kr_all.astype(dt))
-        scores = (s_nope + s_rope).astype(jnp.float32) * scale
-        if pv.ndim:
-            where = (jnp.arange(t)[None, :] <= pv[:, None])[:, None, None, :]
+        if s > 1:
+            # incremental chunked prefill: materialise k/v from the cached
+            # latent exactly as the dense-prefill branch does (the absorbed
+            # form below contracts in a different order and would not be
+            # bit-identical to a staged prefill of the same rows)
+            qp = pv[:, None] + jnp.arange(s) if pv.ndim else pos + jnp.arange(s)
+            k_nope = Q.qlinear(params["w_uk"], ckv_all.astype(dt), qcfg
+                               ).reshape(b, t, h, nope)
+            v_all = Q.qlinear(params["w_uv"], ckv_all.astype(dt), qcfg
+                              ).reshape(b, t, h, vdim)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr_all.astype(dt)[:, :, None],
+                                          (b, t, h, rope_d))], -1)
+            qq = jnp.concatenate([q_nope, q_rope], -1
+                                 ).reshape(b, s, h, 1, nope + rope_d)
+            out = _full_attention(qq, k_full, v_all, qp, jnp.arange(t),
+                                  True, None, scale, qcfg)
+            out = out.reshape(b, s, h, vdim)
         else:
-            where = (jnp.arange(t) <= pos)[None, None, None, :]
-        probs = Q.qsoftmax(scores, qcfg, axis=-1, where=where)
-        ctx = jnp.einsum("bhqt,btl->bqhl", probs.astype(dt), ckv_all.astype(dt))
-        w_uv = Q.weight_view(params["w_uv"], dt).reshape(lora, h, vdim)
-        out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
+            # absorbed attention: q_nope -> lora space via w_uk (weight_view:
+            # the up-projections may arrive packed int8+scales in serving)
+            w_uk = Q.weight_view(params["w_uk"], dt).reshape(lora, h, nope)
+            q_lora = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)          # (B,1,H,lora)
+            s_nope = jnp.einsum("bqhl,btl->bhqt", q_lora, ckv_all.astype(dt))
+            s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope, kr_all.astype(dt))
+            scores = (s_nope + s_rope).astype(jnp.float32) * scale
+            if pv.ndim:
+                where = (jnp.arange(t)[None, :] <= pv[:, None])[:, None, None, :]
+            else:
+                where = (jnp.arange(t) <= pos)[None, None, None, :]
+            probs = Q.qsoftmax(scores, qcfg, axis=-1, where=where)
+            ctx = jnp.einsum("bhqt,btl->bqhl", probs.astype(dt), ckv_all.astype(dt))
+            w_uv = Q.weight_view(params["w_uv"], dt).reshape(lora, h, vdim)
+            out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
     else:
         if cache is not None:
             new_cache = {"ckv": ckv.astype(cache["ckv"].dtype),
                          "krope": k_rope.astype(cache["krope"].dtype)}
+            # serving prefill attends the STORED latent (same invariant as
+            # the GQA branch): every later reader — decode, incremental
+            # chunk prefill — sees the cache dtype, and prefill computing
+            # k/v from a higher-precision latent would break their bitwise
+            # agreement whenever compute_dtype != the cache dtype
+            ckv = new_cache["ckv"].astype(dt)
+            k_rope = new_cache["krope"].astype(dt)
         k_nope = Q.qlinear(params["w_uk"], ckv, qcfg).reshape(b, s, h, nope)
         v = Q.qlinear(params["w_uv"], ckv, qcfg).reshape(b, s, h, vdim)
         k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, rope_d))], -1)

@@ -243,23 +243,17 @@ def prefill(params, cfg: C.ArchConfig, tokens, qcfg: Q.QuantConfig,
     return logits[:, -1], cache
 
 
-def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
-    """One token step. tokens: (B,1). Returns (logits (B,V), new cache).
-
-    cache["pos"] is the per-slot position vector (B,) — slots may sit at
-    DIFFERENT sequence lengths (ragged continuous batching): each row RoPEs,
-    writes K/V, and masks attention at its own position, so one jitted call
-    serves the whole batch. A scalar pos keeps the dense fast path (shared
-    rope row, contiguous dynamic_update_slice instead of a scatter).
-
-    A cache carrying "block_table" (B, max_pages) is PAGED (see
-    runtime/paged_kv.py): per-layer stores are page pools (L, n_pages,
-    page, ...) shared by all slots, and attention scatters/gathers through
-    the block table instead of indexing a per-slot slab."""
+def _step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+    """Shared body of decode_step (S=1) and chunk_prefill (S=chunk): run
+    tokens (B,S) against the cache at per-slot offsets cache["pos"], writing
+    the S new K/V rows and attending at each row's own position. Returns
+    (logits (B,S,V), new cache with pos advanced by S)."""
     h = _embed(params, cfg, tokens)
-    b = h.shape[0]
+    b, s = tokens.shape
     pos = jnp.asarray(cache["pos"], jnp.int32)
-    positions = pos[:, None] if pos.ndim else pos.reshape(1)
+    # query rows pos+i: (B,S) for ragged per-slot vectors, (S,) for the
+    # scalar dense fast path (s=1 reproduces the old decode shapes exactly)
+    positions = pos[:, None] + jnp.arange(s) if pos.ndim else pos + jnp.arange(s)
     windows = layer_windows(cfg)
     block_table = cache.get("block_table")
     if block_table is not None:
@@ -288,10 +282,47 @@ def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
 
     h, new_layer_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"], windows))
     h = C.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = _unembed(params, cfg, h)[:, 0]
+    logits = _unembed(params, cfg, h)
     new_cache = dict(cache)
     new_cache["layers"] = new_layer_caches
-    new_cache["pos"] = pos + 1
+    new_cache["pos"] = pos + s
     if n_dense:
         new_cache["dense"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_dense)
     return logits, new_cache
+
+
+def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+    """One token step. tokens: (B,1). Returns (logits (B,V), new cache).
+
+    cache["pos"] is the per-slot position vector (B,) — slots may sit at
+    DIFFERENT sequence lengths (ragged continuous batching): each row RoPEs,
+    writes K/V, and masks attention at its own position, so one jitted call
+    serves the whole batch. A scalar pos keeps the dense fast path (shared
+    rope row, contiguous dynamic_update_slice instead of a scatter).
+
+    A cache carrying "block_table" (B, max_pages) is PAGED (see
+    runtime/paged_kv.py): per-layer stores are page pools (L, n_pages,
+    page, ...) shared by all slots, and attention scatters/gathers through
+    the block table instead of indexing a per-slot slab."""
+    logits, new_cache = _step(params, cfg, cache, tokens, qcfg)
+    return logits[:, 0], new_cache
+
+
+def chunk_prefill(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+    """Incremental chunked prefill: one multi-token step over a PAGED cache.
+
+    tokens (B,S) are S consecutive prompt tokens per slot starting at
+    cache["pos"]; their K/V rows scatter straight into the slot's pages
+    through the block table (no dense staging cache), and each query attends
+    to the already-resident paged KV — including pages mapped in by the
+    prefix cache — plus the chunk's own earlier rows, via the same
+    gather/mask path decode uses. Returns (logits (B,S,V), new cache with
+    pos advanced by S); the caller reads next-token logits at its last REAL
+    row (tail chunks are padded to the fixed chunk width, so every prompt
+    compiles to ONE shape; pad rows land past the prompt where the position
+    mask hides them until decode overwrites them)."""
+    if "block_table" not in cache:
+        raise NotImplementedError(
+            "chunk_prefill targets paged caches (block_table); dense-layout "
+            "prefill uses forward() staging")
+    return _step(params, cfg, cache, tokens, qcfg)

@@ -19,31 +19,47 @@ Ragged-position cache contract (tested in tests/test_ragged_decode.py):
     their pos is pinned back to 0 and their outputs discarded, so they cost
     one masked row instead of a retrace.
 
-KV layouts (tested in tests/test_paged_kv.py):
+KV layouts (tested in tests/test_paged_kv.py, tests/test_prefix_cache.py):
   * "paged" (default) — the cache is a pool of 32-row pages shared by all
     slots (runtime/paged_kv.py): pages are allocated on ADMISSION (prompt
     pages, plus a worst-case reservation so decode appends can never fail),
     APPENDED one at a time as a slot's decode crosses a page boundary, and
-    FREED on retirement. KV memory tracks the pool's actual load instead of
-    n_slots * max_len, and a page is always aligned to the BBFP 32-element
-    quantisation block;
+    RELEASED on retirement (refcounted: a page only truly frees when its
+    last reader retires). KV memory tracks the pool's actual load instead
+    of n_slots * max_len, and a page is always aligned to the BBFP
+    32-element quantisation block;
   * "dense" — the original (B, max_len) slab per layer; kept as the
     reference layout and for the bench comparison.
+
+Page-native admission (paged layout):
+  * PREFIX CACHE (`prefix_cache=True`): a request whose prompt shares a
+    32-token-page-aligned prefix with a resident sequence maps the matching
+    pages into its block table (refcount++, copy-on-write: shared pages are
+    immutable full prompt pages; the last partial page — and the page
+    holding the last prompt token, whose logits must be recomputed — stay
+    private) and SKIPS that share of prefill compute and storage entirely.
+    Because a page is exactly one BBFP quantisation block, the shared pages
+    are bit-identical to what the request would have computed;
+  * INCREMENTAL CHUNKED PREFILL: the (post-prefix) prompt remainder runs in
+    fixed `prefill_chunk`-token jitted steps (transformer.chunk_prefill)
+    whose queries attend to the already-resident paged KV through the block
+    table and whose K/V rows scatter straight into the request's pages — no
+    max_len-sized dense staging cache, and ONE compiled prefill shape
+    regardless of prompt length (tail chunks pad to the chunk width;
+    `prefill_traces` counts 1). `chunk_prefill_calls` counts the chunk
+    steps actually run, so prefix hits are measurable as skipped chunks.
 
 KV storage (paged only; `kv_storage` parameter):
   * "fp" (default) — pages hold bf16 values;
   * "packed" — pages hold int8 codes + int8 per-32-block shared exponents
     in qcfg.kv_fmt (runtime/paged_kv.packed_proto): 8.25 bits/elt at
-    BBFP(6,3) vs 16 for bf16, and token-for-token identical to the fp pool
-    for GQA because cache writes already sit on the format grid.
+    BBFP(6,3) vs 16, and token-for-token identical to the fp pool for GQA
+    because cache writes already sit on the format grid.
 
-Bucketed chunked prefill: a new request prefills into a staging cache whose
+The dense layout keeps the legacy bucketed prefill: a staging cache whose
 length is the prompt rounded up to a power-of-two BUCKET (min
-`min_prefill_bucket`), so total prefill compilations are O(log max_len)
-instead of O(#distinct prompt lengths) — `prefill_traces` counts them. The
-next token is read at row p_len-1 (causality makes the padded tail
-invisible), and the staged rows [0, p_len) splice page-by-page into the
-request's pages (paged) or its slot's slab rows (dense).
+`min_prefill_bucket`), compilations O(log max_len), rows [0, p_len) spliced
+into the slot's slab rows.
 
 Works with every decoder-family arch and any QuantConfig (incl. the full
 BBAL serving stack). SSM/griffin caches are sequence-synchronous (scalar
@@ -53,14 +69,27 @@ shapes' family).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import model as M
 from repro.quant import linear as Q
 from repro.runtime import paged_kv as PK
+
+
+def kv_rows_needed(p_len: int, max_new: int) -> int:
+    """Worst-case KV rows a request ever occupies. The first generated
+    token comes from prefill and the LAST generated token is never written
+    back, so a request needs prompt + max_new - 1 rows (max_new >= 1 — a
+    request that generates nothing is not a request)."""
+    if max_new < 1:
+        raise ValueError(f"max_new must be >= 1, got {max_new}")
+    return p_len + max_new - 1
 
 
 @dataclasses.dataclass
@@ -77,7 +106,8 @@ class ContinuousBatcher:
                  n_slots: int = 4, max_len: int = 128, eos_id: int | None = None,
                  kv_layout: str = "paged", page_size: int = PK.PAGE_SIZE,
                  n_pages: int | None = None, min_prefill_bucket: int = 16,
-                 kv_storage: str = "fp"):
+                 kv_storage: str = "fp", prefix_cache: bool = True,
+                 prefill_chunk: int = 32):
         assert cfg.family == "decoder", "batcher targets the decoder family"
         assert kv_layout in ("paged", "dense"), kv_layout
         assert kv_storage in ("fp", "packed"), kv_storage
@@ -87,6 +117,8 @@ class ContinuousBatcher:
         self.kv_storage = kv_storage
         self.page_size = page_size
         self.min_bucket = max(1, min_prefill_bucket)
+        self.prefix_cache = prefix_cache and self.paged
+        self.prefill_chunk = max(1, prefill_chunk)
         if kv_storage == "packed":
             # packed pages store int8 codes in qcfg.kv_fmt — the storage
             # format IS the cache-quantisation format, so it must be set
@@ -121,9 +153,13 @@ class ContinuousBatcher:
             donate_argnums=(1,))
         self.decode_calls = 0          # jitted decode invocations (1 per tick)
         self._prefill_fns: dict[int, object] = {}   # bucket -> jitted prefill
+        self._chunk_prefill_fn = None  # the ONE jitted chunk-prefill shape
         self.prefill_traces = 0        # distinct prefill shapes compiled
+        self.chunk_prefill_calls = 0   # chunk steps run (hits skip chunks)
+        self.prefix_hit_pages = 0      # prompt pages served from the index
+        self.prefix_miss_pages = 0     # prompt pages computed by prefill
         self._host_pos = [0] * n_slots  # host mirror of live slots' pos
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
 
     @property
@@ -131,16 +167,19 @@ class ContinuousBatcher:
         """Host copy of the per-slot KV position vector."""
         return [int(p) for p in jax.device_get(self.cache["pos"])]
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt pages served from the prefix cache."""
+        total = self.prefix_hit_pages + self.prefix_miss_pages
+        return self.prefix_hit_pages / total if total else 0.0
+
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request):
         # a ragged decode write past max_len is silently dropped (scatter
         # mode="drop"), so a request that cannot fit would diverge from
         # sequential decoding with no error — reject it up front instead.
-        # Capacity is prompt + max_new - 1: the first token comes from
-        # prefill and the LAST generated token is never written back, so a
-        # request that exactly fills max_len KV rows is admissible.
-        need = req.prompt.shape[0] + req.max_new - 1
+        need = kv_rows_needed(req.prompt.shape[0], req.max_new)
         if need > self.max_len:
             raise ValueError(
                 f"request {req.rid} needs up to {need} KV rows (prompt "
@@ -155,16 +194,48 @@ class ContinuousBatcher:
                 f"pool budget is n_pages={self.n_pages}")
         self.queue.append(req)
 
+    def _prefix_keys(self, prompt, n: int) -> list[bytes]:
+        """Page-aligned prefix keys for the first `n` pages: key i is the
+        sha256 CHAIN digest of page i's token bytes onto key i-1, so each
+        key identifies the full prefix through its page in O(1) bytes (an
+        identity key would make a p-page chain cost O(p^2) bytes to build
+        and store; collisions of chained sha256 are not a practical
+        concern). Resolved entirely on the host at admission."""
+        toks = np.asarray(jax.device_get(prompt), np.int32).tobytes()
+        stride = 4 * self.page_size
+        keys, h = [], b""
+        for i in range(n):
+            h = hashlib.sha256(h + toks[i * stride:(i + 1) * stride]).digest()
+            keys.append(h)
+        return keys
+
+    def _match_prefix(self, req: Request) -> tuple[list[int], list[bytes]]:
+        """(resident shared-prefix page ids, the prompt's full-page keys).
+        Sharing is capped at the page BEFORE the one holding the last
+        prompt token: only KV is cached, so the last token always reruns
+        through chunk prefill to produce the next-token logits. Keys are
+        cached on the request — a head-of-queue request re-matched every
+        tick under pool pressure hashes its prompt only once."""
+        if not self.prefix_cache:
+            return [], []
+        keys = getattr(req, "_prefix_keys", None)
+        if keys is None:
+            p_len = int(req.prompt.shape[0])
+            keys = req._prefix_keys = self._prefix_keys(
+                req.prompt, p_len // self.page_size)
+        shareable = (int(req.prompt.shape[0]) - 1) // self.page_size
+        return self.alloc.match_prefix(keys[:shareable]), keys
+
     def _bucket(self, p_len: int) -> int:
-        """Prompt staging length: next power of two >= p_len (floored at
-        min_bucket), so prefill shapes form an O(log max_len) ladder."""
+        """Dense-layout prompt staging length: next power of two >= p_len
+        (floored at min_bucket) — an O(log max_len) shape ladder."""
         return max(self.min_bucket, 1 << max(p_len - 1, 0).bit_length())
 
     def _prefill(self, prompt: jnp.ndarray):
-        """Bucketed prefill: pad the prompt to its bucket, run one jitted
-        forward per BUCKET (not per length), read logits at row p_len-1
-        (the padded tail is causally invisible to real rows). Returns
-        (next-token logits (V,), staged cache of bucket rows)."""
+        """Dense-layout bucketed prefill: pad the prompt to its bucket, run
+        one jitted forward per BUCKET (not per length), read logits at row
+        p_len-1 (the padded tail is causally invisible to real rows).
+        Returns (next-token logits (V,), staged cache of bucket rows)."""
         p_len = prompt.shape[0]
         bkt = self._bucket(p_len)
         fn = self._prefill_fns.get(bkt)
@@ -184,6 +255,108 @@ class ContinuousBatcher:
         toks = jnp.pad(prompt.astype(jnp.int32), (0, bkt - p_len))[None, :]
         logits, staged = fn(self.params, toks)
         return logits[0, p_len - 1], staged
+
+    def _chunk_fn(self):
+        """The single jitted chunk-prefill step: (params, {layers[,dense],
+        block_table row, pos}, (1, prefill_chunk) tokens) -> (logits, new
+        KV). ONE shape for every prompt length — compare the dense ladder's
+        O(log max_len)."""
+        if self._chunk_prefill_fn is None:
+            cfg, qcfg = self.cfg, self.qcfg
+            mod = M.family_module(cfg)
+
+            def run(params, kv, bt_row, pos0, toks):
+                sub = {**kv, "block_table": bt_row, "pos": pos0}
+                logits, new_cache = mod.chunk_prefill(params, cfg, sub, toks, qcfg)
+                return logits, {k: v for k, v in new_cache.items()
+                                if k in ("layers", "dense")}
+
+            # donate the KV pool (arg 1 holds only the pool leaves — the
+            # table row and pos pass through undonated): chunk i+1's pool
+            # aliases chunk i's instead of double-buffering the store
+            self._chunk_prefill_fn = jax.jit(run, donate_argnums=(1,))
+            self.prefill_traces += 1
+        return self._chunk_prefill_fn
+
+    def _chunked_prefill(self, slot: int, prompt, start: int):
+        """Incremental chunked prefill of prompt rows [start, p_len) —
+        start > 0 when a shared prefix is already resident — straight into
+        `slot`'s pages. Each fixed-width chunk is one jitted multi-token
+        step attending to everything already resident via the block table;
+        the tail chunk pads to the chunk width (pad rows scatter past
+        p_len inside the slot's own reservation, stay position-masked, and
+        decode overwrites them). Returns the last REAL row's logits (V,)."""
+        chunk = self.prefill_chunk
+        p_len = int(prompt.shape[0])
+        fn = self._chunk_fn()
+        logits = real = None
+        for off in range(start, p_len, chunk):
+            real = min(chunk, p_len - off)
+            toks = jnp.pad(prompt[off:off + real].astype(jnp.int32),
+                           (0, chunk - real))[None, :]
+            kv = {"layers": self.cache["layers"]}
+            if "dense" in self.cache:
+                kv["dense"] = self.cache["dense"]
+            logits, new_kv = fn(self.params, kv,
+                                self.cache["block_table"][slot:slot + 1],
+                                jnp.asarray([off], jnp.int32), toks)
+            self.cache = {**self.cache, **new_kv}
+            self.chunk_prefill_calls += 1
+        return logits[0, real - 1]
+
+    def _finish_admission(self, slot: int, req: Request, tok: int) -> bool:
+        """Common admission tail: record the prefill token; retire budget-
+        met / EOS-at-prefill requests without occupying the slot, otherwise
+        seat the request. Returns True when the slot was taken."""
+        req.out_tokens.append(tok)
+        if len(req.out_tokens) >= req.max_new or \
+                (self.eos is not None and tok == self.eos):
+            req.done = True
+            self.finished.append(req)
+            return False
+        self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+        p_len = req.prompt.shape[0]
+        self.cache = {**self.cache,
+                      "pos": self.cache["pos"].at[slot].set(p_len)}
+        self._host_pos[slot] = p_len
+        self.slot_req[slot] = req
+        return True
+
+    def _admit_paged(self, slot: int, req: Request, shared: list[int],
+                     keys: list[bytes]) -> bool:
+        """Page-native admission: map shared prefix pages + allocate the
+        rest, chunk-prefill the remainder straight into them, register the
+        now-resident full prompt pages for future sharing."""
+        p_len = req.prompt.shape[0]
+        need_rows = kv_rows_needed(p_len, req.max_new)
+        pids = self.alloc.admit(slot, p_len, need_rows, shared=shared)
+        bt = self.cache["block_table"].at[slot, :len(pids)].set(
+            jnp.asarray(pids, jnp.int32))
+        self.cache = {**self.cache, "block_table": bt}
+        logits = self._chunked_prefill(slot, req.prompt,
+                                       start=len(shared) * self.page_size)
+        self.prefix_hit_pages += len(shared)
+        self.prefix_miss_pages += PK.pages_for(p_len, self.page_size) - len(shared)
+        tok = int(jnp.argmax(logits))
+        if not self._finish_admission(slot, req, tok):
+            # budget met / EOS at prefill: drop the transient pages
+            self.alloc.release(slot)
+            bt = self.cache["block_table"].at[slot].set(self.alloc.sentinel)
+            self.cache = {**self.cache, "block_table": bt}
+            return False
+        if self.prefix_cache:
+            self.alloc.register_prefix(keys, pids[:len(keys)])
+        return True
+
+    def _admit_dense(self, slot: int, req: Request) -> bool:
+        """Dense-layout admission: bucketed staging prefill + slab splice."""
+        logits, staged = self._prefill(req.prompt)
+        tok = int(jnp.argmax(logits))
+        p_len = req.prompt.shape[0]
+        seated = self._finish_admission(slot, req, tok)
+        if seated:
+            self._splice_dense(slot, staged, p_len)
+        return seated
 
     def _splice_dense(self, slot: int, staged_cache, p_len: int):
         """Copy a prefilled request's K/V rows into rows [0, p_len) of
@@ -210,37 +383,16 @@ class ContinuousBatcher:
         for slot in range(self.n_slots):
             while self.slot_req[slot] is None and self.queue:
                 req = self.queue[0]
-                p_len = req.prompt.shape[0]
-                need_rows = max(p_len, p_len + req.max_new - 1)
-                if self.paged and not self.alloc.can_admit(need_rows):
-                    return   # FIFO: wait for a retirement to free pages
-                self.queue.pop(0)
-                logits, staged = self._prefill(req.prompt)
-                tok = int(jnp.argmax(logits))
-                req.out_tokens.append(tok)
-                if len(req.out_tokens) >= req.max_new or \
-                        (self.eos is not None and tok == self.eos):
-                    # budget met / EOS at prefill: retire without ever
-                    # occupying the slot (or any pages); try the next request
-                    req.done = True
-                    self.finished.append(req)
-                    continue
                 if self.paged:
-                    pids = self.alloc.admit(slot, p_len, need_rows)
-                    bt = self.cache["block_table"].at[slot, :len(pids)].set(
-                        jnp.asarray(pids, jnp.int32))
-                    self.cache = PK.splice_pages(
-                        {**self.cache, "block_table": bt}, staged, pids,
-                        p_len, self.page_size,
-                        kv_fmt=self.qcfg.kv_fmt
-                        if self.kv_storage == "packed" else None)
+                    shared, keys = self._match_prefix(req)
+                    need = kv_rows_needed(req.prompt.shape[0], req.max_new)
+                    if not self.alloc.can_admit(need, n_shared=len(shared)):
+                        return   # FIFO: wait for a retirement to free pages
+                    self.queue.popleft()
+                    self._admit_paged(slot, req, shared, keys)
                 else:
-                    self._splice_dense(slot, staged, p_len)
-                self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
-                self.cache = {**self.cache,
-                              "pos": self.cache["pos"].at[slot].set(p_len)}
-                self._host_pos[slot] = p_len
-                self.slot_req[slot] = req
+                    self.queue.popleft()
+                    self._admit_dense(slot, req)
 
     # -- the decode tick ----------------------------------------------------
 
@@ -293,7 +445,8 @@ class ContinuousBatcher:
             self._host_pos[s] = self._host_pos[s] + 1 \
                 if self.slot_req[s] is not None else 0
         if self.paged and retired:
-            # return the retired slots' pages and reset their table rows
+            # drop the retired slots' page references (shared pages survive
+            # until their last reader retires) and reset their table rows
             for s in retired:
                 self.alloc.release(s)
             bt = self.cache["block_table"].at[
@@ -312,7 +465,11 @@ class ContinuousBatcher:
     # -- introspection ------------------------------------------------------
 
     def kv_stats(self) -> dict:
-        """Serving-path memory counters for the bench trajectory."""
+        """Serving-path memory counters for the bench trajectory. Under
+        prefix sharing, LOGICAL bytes are what the slots collectively
+        reference (shared pages counted once per reader) while PHYSICAL
+        bytes are what the pool actually stores — their ratio is the
+        dedup win the prefix cache delivers."""
         total = PK.kv_bytes(self.cache)
         stats = {"kv_layout": "paged" if self.paged else "dense",
                  "kv_storage": self.kv_storage,
@@ -320,7 +477,13 @@ class ContinuousBatcher:
                  "kv_bytes_per_slot": total // self.n_slots}
         if self.paged:
             per_page = total // max(self.n_pages, 1)
+            physical, logical = self.alloc.used_count, self.alloc.logical_count
             stats.update(pages_total=self.n_pages,
-                         pages_in_use=self.alloc.used_count,
-                         kv_bytes_in_use=per_page * self.alloc.used_count)
+                         pages_in_use=physical,
+                         pages_logical=logical,
+                         pages_shared=self.alloc.shared_count,
+                         kv_bytes_in_use=per_page * physical,
+                         kv_bytes_physical=per_page * physical,
+                         kv_bytes_logical=per_page * logical,
+                         prefix_hit_rate=self.prefix_hit_rate)
         return stats

@@ -21,11 +21,35 @@ with a pool of fixed-size PAGES shared by all slots:
     out of bounds and are dropped (``mode="drop"``), and gather reads clamp
     to the last page, whose rows the per-slot position mask discards.
 
+Prefix cache + copy-on-write contract: every page carries a REFCOUNT and
+full pages are indexed by their page-aligned token prefix (the key for page
+i is the sha256 chain digest of page i's tokens onto page i-1's key, so a
+key identifies the full (i+1)*32-token prefix in O(1) bytes — see
+``ContinuousBatcher._prefix_keys``). A request whose prompt shares a
+32-token-aligned prefix with a
+RESIDENT sequence maps the matching pages into its block table
+(``match_prefix`` -> ``admit(shared=...)``) instead of recomputing and
+re-storing them; because a page is exactly one BBFP quantisation block and
+packed pages are deterministic int8 codes, whole-page sharing is bit-exact.
+Sharing is copy-on-write by construction rather than by copying: shared
+pages are immutable (they hold only full prompt pages strictly before any
+writer's position — the last PARTIAL prompt page is never shared, and the
+page holding the last prompt token is also kept private so its logits can
+be recomputed on admission), decode appends always land on private pages
+(``ensure_row`` refcount 1), and ``release`` only returns a page to the
+free list — and evicts its prefix-index entry — when its refcount reaches
+zero, so either retire order of a sharing pair leaves the pool fully free.
+
 Batcher contract (mirrors runtime/batcher.py):
-  * ADMIT  — pages for the prompt are allocated up front and the prefilled
-    rows are spliced page-by-page into them; admission only proceeds when
-    the pool can cover the request's WORST-CASE page count on top of the
-    outstanding reservations of live slots, so a decode-time append can
+  * ADMIT  — ``match_prefix`` maps any resident shared-prefix pages into
+    the block table (refcount++), the remaining prompt pages are allocated,
+    and the (post-prefix) prompt remainder is INCREMENTALLY CHUNK-PREFILLED
+    straight into those pages (``transformer.chunk_prefill``: fixed-width
+    multi-token steps whose queries attend to the already-resident paged KV
+    through the block table — no dense staging cache, ONE compiled prefill
+    shape). Admission only proceeds when the pool covers the pages the
+    request will NEWLY allocate (worst case, minus prefix hits) on top of
+    the outstanding reservations of live slots, so a decode-time append can
     never fail (no mid-flight eviction needed);
   * DECODE — stays ONE jitted call per tick: before the call the batcher
     appends a page to any slot whose next write crosses a page boundary
@@ -33,13 +57,14 @@ Batcher contract (mirrors runtime/batcher.py):
     each slot scatters its new K/V row at (block_table[slot, pos//page],
     pos % page) and attention gathers its pages back into a contiguous
     (B, max_pages*page) view masked at the slot's own position;
-  * RETIRE — the slot's pages return to the free list and its block-table
-    row is reset to the sentinel.
+  * RETIRE — refcounts of the slot's pages drop; pages reaching zero return
+    to the free list, and the block-table row is reset to the sentinel.
 
 The allocator itself is host-side Python (a free list + per-slot page
-lists); only the block table lives on device. ``init_paged_cache`` builds
-the cache pytree {"layers", "block_table", "pos"[, "dense"]} that
-``transformer.decode_step`` recognises by the presence of "block_table".
+lists + refcounts + the prefix index); only the block table lives on
+device. ``init_paged_cache`` builds the cache pytree {"layers",
+"block_table", "pos"[, "dense"]} that ``transformer.decode_step`` /
+``chunk_prefill`` recognise by the presence of "block_table".
 """
 from __future__ import annotations
 
@@ -57,14 +82,21 @@ def pages_for(rows: int, page: int = PAGE_SIZE) -> int:
 
 
 class PagedKVAllocator:
-    """Host-side block-table allocator over a pool of `n_pages` pages.
+    """Host-side block-table allocator over a pool of `n_pages` pages, with
+    per-page refcounts and a prefix index for copy-on-write prefix sharing.
 
     Reservation accounting: every live slot reserves its worst-case page
     count at admission (`reserve[slot]`); `committed` is the number of free
     pages already promised to live slots' future appends. `can_admit` only
-    accepts a request when the pool covers its worst case on top of that,
-    which makes `append` infallible for admitted requests.
-    """
+    accepts a request when the pool covers the pages it will NEWLY allocate
+    (worst case minus prefix hits) on top of that, which makes `append`
+    infallible for admitted requests.
+
+    Prefix sharing: `register_prefix` indexes a slot's full prompt pages
+    under cumulative page-aligned prefix keys; `match_prefix` returns the
+    longest resident chain for a new prompt, and `admit(shared=...)` maps
+    those pages in with refcount++ instead of allocating. `release` only
+    frees a page (and evicts its index entry) at refcount zero."""
 
     def __init__(self, n_pages: int, page: int = PAGE_SIZE, n_slots: int = 4):
         assert n_pages >= 1 and page >= 1 and n_slots >= 1
@@ -72,6 +104,9 @@ class PagedKVAllocator:
         self.free: list[int] = list(range(n_pages - 1, -1, -1))  # pop() -> 0 first
         self.pages: list[list[int]] = [[] for _ in range(n_slots)]
         self.reserve: list[int] = [0] * n_slots
+        self.refcount: list[int] = [0] * n_pages
+        self._prefix_index: dict = {}    # cumulative prefix key -> page id
+        self._page_key: dict[int, object] = {}   # page id -> its index key
 
     @property
     def sentinel(self) -> int:
@@ -84,40 +119,106 @@ class PagedKVAllocator:
 
     @property
     def used_count(self) -> int:
+        """Physical pages allocated (shared pages count ONCE)."""
         return self.n_pages - len(self.free)
+
+    @property
+    def logical_count(self) -> int:
+        """Pages as the slots see them (shared pages count per reference)."""
+        return sum(len(p) for p in self.pages)
+
+    @property
+    def shared_count(self) -> int:
+        """Physical pages referenced by more than one slot."""
+        return sum(1 for rc in self.refcount if rc > 1)
 
     @property
     def committed(self) -> int:
         """Free pages already promised to live slots' future appends."""
         return sum(max(r - len(p), 0) for r, p in zip(self.reserve, self.pages))
 
-    def can_admit(self, total_rows: int) -> bool:
-        return self.free_count - self.committed >= pages_for(total_rows, self.page)
+    def can_admit(self, total_rows: int, n_shared: int = 0) -> bool:
+        """Pool covers the request's NEWLY allocated worst case: its total
+        page count minus the `n_shared` prefix-cache hits it maps in."""
+        need = pages_for(total_rows, self.page) - n_shared
+        return self.free_count - self.committed >= need
 
-    def admit(self, slot: int, prompt_rows: int, total_rows: int) -> list[int]:
-        """Reserve `total_rows` worst-case and allocate the prompt's pages."""
+    def match_prefix(self, keys) -> list[int]:
+        """Longest resident page chain for cumulative prefix `keys` (key i
+        must identify the FULL prompt prefix through page i, not just page
+        i's own tokens). Callers cap `keys` so the last partial page — and
+        the page holding the last prompt token — are never shared."""
+        out = []
+        for key in keys:
+            pid = self._prefix_index.get(key)
+            if pid is None:
+                break
+            out.append(pid)
+        return out
+
+    def register_prefix(self, keys, page_ids: list[int]) -> int:
+        """Index a slot's full prompt pages (`page_ids[i]` under `keys[i]`)
+        so later admissions can share them; first registration of a key
+        wins. Returns the number of newly indexed pages."""
+        new = 0
+        for key, pid in zip(keys, page_ids):
+            if key in self._prefix_index or pid in self._page_key:
+                continue            # key already canonical / page indexed
+            self._prefix_index[key] = pid
+            self._page_key[pid] = key
+            new += 1
+        return new
+
+    def admit(self, slot: int, prompt_rows: int, total_rows: int,
+              shared: list[int] | tuple = ()) -> list[int]:
+        """Reserve `total_rows` worst-case, map in the `shared` prefix pages
+        (refcount++), and allocate the rest of the prompt's pages."""
         assert not self.pages[slot], f"slot {slot} already holds pages"
-        assert self.can_admit(total_rows), "admit() without can_admit()"
+        n_prompt = pages_for(prompt_rows, self.page)
+        assert len(shared) <= n_prompt, (len(shared), n_prompt)
+        assert self.can_admit(total_rows, n_shared=len(shared)), \
+            "admit() without can_admit()"
         self.reserve[slot] = pages_for(total_rows, self.page)
-        for _ in range(pages_for(prompt_rows, self.page)):
-            self.pages[slot].append(self.free.pop())
+        for pid in shared:
+            assert self.refcount[pid] >= 1, f"shared page {pid} is not resident"
+            self.refcount[pid] += 1
+            self.pages[slot].append(pid)
+        for _ in range(n_prompt - len(shared)):
+            pid = self.free.pop()
+            self.refcount[pid] = 1
+            self.pages[slot].append(pid)
         return list(self.pages[slot])
 
     def ensure_row(self, slot: int, row: int) -> tuple[int, int] | None:
         """Make the page holding `row` exist; returns (slot_page_index,
-        page_id) when a page was appended, None when it already existed."""
+        page_id) when a page was appended, None when it already existed.
+        Appended pages are always PRIVATE (refcount 1, never indexed)."""
         idx = row // self.page
         if idx < len(self.pages[slot]):
             return None
         assert idx == len(self.pages[slot]), (slot, row, self.pages[slot])
         assert idx < self.reserve[slot], f"append past slot {slot} reservation"
         pid = self.free.pop()      # infallible: covered by `committed`
+        self.refcount[pid] = 1
         self.pages[slot].append(pid)
         return idx, pid
 
     def release(self, slot: int) -> list[int]:
-        """Free a retired slot's pages; returns them (for block-table reset)."""
-        freed, self.pages[slot] = self.pages[slot], []
+        """Drop the retired slot's references; pages reaching refcount zero
+        return to the free list (their prefix-index entries evicted) and are
+        returned (for block-table reset). Shared pages survive until their
+        last reader retires — either retire order of a sharing pair leaves
+        the pool fully free."""
+        freed = []
+        for pid in self.pages[slot]:
+            self.refcount[pid] -= 1
+            assert self.refcount[pid] >= 0, f"page {pid} over-released"
+            if self.refcount[pid] == 0:
+                freed.append(pid)
+                key = self._page_key.pop(pid, None)
+                if key is not None:
+                    self._prefix_index.pop(key, None)
+        self.pages[slot] = []
         self.free.extend(reversed(freed))
         self.reserve[slot] = 0
         return freed
@@ -176,49 +277,6 @@ def init_paged_cache(cfg, n_slots: int, max_len: int, *,
     if n_dense:
         cache["dense"] = stack(n_dense)
     return cache
-
-
-def splice_pages(cache, staged, page_ids: list[int], p_len: int, page: int,
-                 kv_fmt=None):
-    """Copy a prefilled request's rows [0, p_len) from its dense staging
-    cache into the physical pages `page_ids` (host-driven, page-granular:
-    chunk i of the prompt lands in page_ids[i]). ONE batched scatter per KV
-    leaf — not one full-pool copy per page. Returns the updated cache.
-
-    PACKED pools ({"q","exp"} leaves) encode the staged fp rows into int8
-    codes + exponents in `kv_fmt` before the scatter — exact for rows the
-    prefill already wrote through the qkv_cache grid.
-
-    Rows past p_len in the last page are zero-filled; they sit beyond every
-    reader's position mask and decode overwrites them as the slot grows."""
-    pids = jnp.asarray(page_ids, jnp.int32)
-    total = len(page_ids) * page
-
-    def paged_rows(src):
-        # src: (L, 1|b, >=p_len, ...) -> (L, len(page_ids), page, ...)
-        rows = src[:, :1, :min(p_len, total)]
-        if rows.shape[2] < total:
-            widths = [(0, 0)] * rows.ndim
-            widths[2] = (0, total - rows.shape[2])
-            rows = jnp.pad(rows, widths)
-        return rows.reshape(src.shape[0], len(page_ids), page, *src.shape[3:])
-
-    def one(dst, src):
-        rows = paged_rows(src)
-        if isinstance(dst, dict):   # packed pool: quantise on splice
-            enc = bbfp.pack_kv(rows.astype(jnp.float32), kv_fmt)
-            return {"q": dst["q"].at[:, pids].set(enc["q"]),
-                    "exp": dst["exp"].at[:, pids].set(enc["exp"])}
-        return dst.at[:, pids].set(rows.astype(dst.dtype))
-
-    is_pool = lambda x: isinstance(x, dict) and "q" in x
-    new_cache = {**cache,
-                 "layers": jax.tree.map(one, cache["layers"], staged["layers"],
-                                        is_leaf=is_pool)}
-    if "dense" in cache:
-        new_cache["dense"] = jax.tree.map(one, cache["dense"], staged["dense"],
-                                          is_leaf=is_pool)
-    return new_cache
 
 
 def kv_bytes(cache) -> int:

@@ -1,15 +1,18 @@
-"""Paged KV-block allocator + bucketed prefill (runtime/paged_kv.py).
+"""Paged KV-block allocator + prefill shapes (runtime/paged_kv.py).
 
 Acceptance criteria of the paged-KV rework:
   * paged-vs-dense-vs-sequential decode parity: token-for-token identical
     outputs for a ragged mix of prompt lengths (including a prompt that
     spans multiple pages and decode steps that cross page boundaries);
   * step() stays ONE jitted decode per tick in both layouts;
-  * prefill compilations are bounded by the number of power-of-two BUCKETS,
-    not the number of distinct prompt lengths;
+  * prefill compilations: the dense layout's bucket ladder is bounded by
+    the number of power-of-two BUCKETS, and the paged layout's incremental
+    chunked prefill compiles exactly ONE shape for any prompt length;
   * the allocator's reservation accounting: admission waits (FIFO) when the
     page pool cannot cover a request's worst case, decode-time appends never
     fail, retirement returns pages to the pool.
+
+(Prefix sharing / copy-on-write refcounts live in tests/test_prefix_cache.py.)
 """
 import jax
 import jax.numpy as jnp
@@ -115,13 +118,14 @@ def test_paged_matches_dense_and_sequential():
         assert outs["packed"][i] == ref, (i, outs["packed"][i], ref)
 
 
-def test_prefill_traces_bounded_by_buckets():
-    """8 distinct prompt lengths but only 3 power-of-two buckets -> exactly
-    3 prefill compilations (max_new=1 retires at admission: prefill-only)."""
+def test_prefill_traces_bounded_by_buckets_dense():
+    """Dense layout keeps the bucket ladder: 8 distinct prompt lengths but
+    only 3 power-of-two buckets -> exactly 3 prefill compilations
+    (max_new=1 retires at admission: prefill-only)."""
     cfg = configs.smoke_config("llama7b")
     params = M.init(cfg, KEY)
     bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=32,
-                            min_prefill_bucket=4)
+                            min_prefill_bucket=4, kv_layout="dense")
     lens = [3, 4, 5, 6, 7, 9, 11, 13]          # buckets {4, 8, 16}
     assert len(set(lens)) == 8
     for i, n in enumerate(lens):
@@ -132,6 +136,27 @@ def test_prefill_traces_bounded_by_buckets():
     assert {bat._bucket(n) for n in lens} == {4, 8, 16}
     assert bat.prefill_traces == 3             # buckets, not distinct lengths
     assert bat.decode_calls == 0               # all retired at prefill
+
+
+def test_chunked_prefill_traces_o1_paged():
+    """Paged layout replaced the bucket ladder with incremental chunked
+    prefill: ONE compiled shape for every prompt length (tail chunks pad
+    to the chunk width), and ceil(p_len/chunk) chunk steps per prompt."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=64,
+                            prefill_chunk=8)
+    lens = [3, 4, 5, 6, 7, 9, 11, 13, 17, 26]  # many lengths, one shape
+    for i, n in enumerate(lens):
+        bat.submit(Request(rid=i, prompt=jnp.arange(n, dtype=jnp.int32),
+                           max_new=1))
+    finished, _ = bat.run()
+    assert len(finished) == len(lens)
+    assert bat.prefill_traces == 1             # ONE chunk shape, any length
+    assert bat.chunk_prefill_calls == sum(-(-n // 8) for n in lens)
+    assert bat.decode_calls == 0               # all retired at prefill
+    # transiently-admitted pages all returned (max_new=1 retires at prefill)
+    assert bat.alloc.used_count == 0
 
 
 def test_page_exhaustion_queues_fifo():

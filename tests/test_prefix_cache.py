@@ -1,0 +1,329 @@
+"""Shared-prefix copy-on-write pages + incremental chunked prefill.
+
+Acceptance criteria of the page-native scheduler rework:
+  * a batch of requests sharing a >= 64-token page-aligned prompt prefix
+    stores each shared 32-row page exactly ONCE (refcounts + kv_stats
+    logical-vs-physical bytes) yet decodes token-for-token identically to
+    independent sequential decoding — for fp AND packed storage, GQA and
+    MLA;
+  * prefix-hit admissions measurably skip the shared pages' prefill compute
+    (chunk_prefill_calls) and the chunked-prefill compile count is O(1) in
+    prompt length;
+  * allocator refcount lifecycle: admit-with-shared-prefix, then EITHER
+    retire order returns the pool to fully free (and empties the prefix
+    index); a hypothesis property sweep drives random admit/decode/release
+    schedules against the invariants (deterministic fallback when
+    hypothesis is absent, like test_bbfp_format.py).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    def seeds(n):
+        return settings(max_examples=n, deadline=None)(
+            given(st.integers(0, 2**32 - 1)))
+except ModuleNotFoundError:
+    # bare containers (no network) fall back to a deterministic seed sweep
+    def seeds(n):
+        return pytest.mark.parametrize("seed", [7 * i + 1 for i in range(n)])
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import model as M
+from repro.quant import linear as Q
+from repro.runtime import paged_kv as PK
+from repro.runtime.batcher import ContinuousBatcher, Request, kv_rows_needed
+
+KEY = jax.random.PRNGKey(23)
+PAGE = PK.PAGE_SIZE
+
+
+def _keys(tokens, page):
+    """Cumulative full-page prefix keys, as the batcher derives them."""
+    return [tuple(tokens[:(i + 1) * page]) for i in range(len(tokens) // page)]
+
+
+def _prompts_with_shared_prefix(cfg, prefix_len, suffix_lens, salt=0):
+    prefix = jax.random.randint(jax.random.fold_in(KEY, 100 + salt),
+                                (prefix_len,), 0, cfg.vocab)
+    return [jnp.concatenate([
+        prefix, jax.random.randint(jax.random.fold_in(KEY, salt + i),
+                                   (n,), 0, cfg.vocab)])
+        for i, n in enumerate(suffix_lens)]
+
+
+# ---------------------------------------------------------------------------
+# allocator refcount lifecycle (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_refcount_lifecycle_both_retire_orders():
+    """admit -> register -> admit-with-shared-prefix; whichever of the pair
+    retires first, shared pages survive until the second release and the
+    pool then returns to fully free with an empty prefix index."""
+    for retire_first in (0, 1):
+        al = PK.PagedKVAllocator(n_pages=8, page=4, n_slots=2)
+        toks_a = list(range(10))                      # 2 full pages + tail
+        a = al.admit(0, prompt_rows=10, total_rows=12)
+        assert len(a) == 3 and [al.refcount[p] for p in a] == [1, 1, 1]
+        al.register_prefix(_keys(toks_a, 4), a[:2])
+        # same 8-token prefix, longer prompt: both full pages hit
+        toks_b = toks_a[:8] + [90, 91, 92, 93, 94]
+        hit = al.match_prefix(_keys(toks_b, 4)[: (13 - 1) // 4])
+        assert hit == a[:2]
+        b = al.admit(1, prompt_rows=13, total_rows=14, shared=hit)
+        assert b[:2] == a[:2] and b[2] not in a
+        assert [al.refcount[p] for p in a[:2]] == [2, 2]
+        assert al.shared_count == 2 and al.logical_count == 3 + 4
+        assert al.used_count == 5                     # shared stored once
+        freed_1 = al.release(retire_first)
+        # the other slot still references the shared pages: NOT freed yet
+        assert not set(freed_1) & set(a[:2])
+        assert [al.refcount[p] for p in a[:2]] == [1, 1]
+        assert al.match_prefix(_keys(toks_a, 4)) == a[:2]   # still resident
+        al.release(1 - retire_first)
+        assert al.used_count == 0 and al.free_count == 8
+        assert al.committed == 0 and al.shared_count == 0
+        assert al._prefix_index == {} and al._page_key == {}
+        assert al.refcount == [0] * 8
+
+
+def test_can_admit_counts_only_newly_allocated_pages():
+    """a prefix-heavy request must be admissible when the pool only covers
+    its NEW pages — the whole point of sharing under memory pressure."""
+    al = PK.PagedKVAllocator(n_pages=4, page=4, n_slots=2)
+    toks = list(range(16))
+    a = al.admit(0, prompt_rows=12, total_rows=12)    # 3 pages, no reserve
+    al.register_prefix(_keys(toks[:12], 4), a)
+    assert al.free_count == 1 and al.committed == 0
+    # 16-token prompt, 16 total rows -> 4 pages; 3 are resident prefix hits
+    hit = al.match_prefix(_keys(toks, 4)[: (16 - 1) // 4])
+    assert hit == a                                   # all 3 full pages
+    assert not al.can_admit(16)                       # 4 new > 1 free
+    assert al.can_admit(16, n_shared=len(hit))        # 1 new <= 1 free
+    b = al.admit(1, prompt_rows=16, total_rows=16, shared=hit)
+    assert al.free_count == 0 and b[:3] == a
+
+
+@seeds(25)
+def test_allocator_invariants_random_schedules(seed):
+    """property sweep: random admit(+prefix match/register)/decode/release
+    schedules keep the allocator's books consistent, and draining every
+    slot always returns the pool to fully free."""
+    rng = random.Random(seed)
+    page, n_slots = 4, 3
+    n_pages = rng.randrange(6, 14)
+    al = PK.PagedKVAllocator(n_pages, page, n_slots)
+    live = {}                                  # slot -> (host_pos, total)
+
+    def check():
+        held = [p for ps in al.pages for p in ps]
+        assert al.used_count == len(set(held))
+        assert sorted(set(al.free)) == sorted(al.free)       # no dup frees
+        assert not set(al.free) & set(held)
+        for pid in range(n_pages):
+            assert al.refcount[pid] == held.count(pid)
+            assert (al.refcount[pid] == 0) == (pid in al.free)
+        assert al.committed >= 0
+        for key, pid in al._prefix_index.items():
+            assert al.refcount[pid] >= 1 and al._page_key[pid] == key
+        assert al.logical_count == len(held)
+        assert al.shared_count == sum(1 for pid in set(held)
+                                      if held.count(pid) > 1)
+
+    for _ in range(40):
+        op = rng.randrange(3)
+        free_slots = [s for s in range(n_slots) if s not in live]
+        if op == 0 and free_slots:
+            slot = rng.choice(free_slots)
+            # tiny alphabet so prefixes collide across admissions
+            p_len = rng.randrange(1, 3 * page + 2)
+            toks = [rng.randrange(3) for _ in range(p_len)]
+            max_new = rng.randrange(1, page + 2)
+            total = kv_rows_needed(p_len, max_new)
+            if PK.pages_for(total, page) > n_pages:
+                continue
+            keys = _keys(toks, page)
+            hit = al.match_prefix(keys[: (p_len - 1) // page])
+            if al.can_admit(total, n_shared=len(hit)):
+                pids = al.admit(slot, p_len, total, shared=hit)
+                al.register_prefix(keys, pids[:len(keys)])
+                live[slot] = [p_len, total]
+        elif op == 1 and live:
+            slot = rng.choice(list(live))
+            pos, total = live[slot]
+            if pos < total:                    # decode writes rows < total
+                al.ensure_row(slot, pos)
+                live[slot][0] = pos + 1
+        elif op == 2 and live:
+            slot = rng.choice(list(live))
+            al.release(slot)
+            del live[slot]
+        check()
+    for slot in list(live):
+        al.release(slot)
+        check()
+    assert al.free_count == n_pages and al.used_count == 0
+    assert al._prefix_index == {} and al.refcount == [0] * n_pages
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: shared-prefix batches vs independent sequential decodes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("storage", ["fp", "packed"])
+def test_gqa_shared_prefix_matches_sequential(storage):
+    """4 requests sharing a 64-token (2-page) prefix: the shared pages are
+    stored exactly once, prefix-hit admissions skip those pages' prefill
+    chunks, and every request decodes token-for-token like an independent
+    sequential decode."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    suffixes = [5, 9, 13, 17]
+    prompts = _prompts_with_shared_prefix(cfg, 2 * PAGE, suffixes)
+    gen = 6
+    refs = [generate(cfg, params, p[None, :], qcfg, gen_len=gen)[0].tolist()
+            for p in prompts]
+
+    bat = ContinuousBatcher(cfg, params, qcfg, n_slots=4, max_len=128,
+                            kv_storage=storage)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    assert bat.step()                          # all four admitted this tick
+    st_ = bat.kv_stats()
+    # each shared 32-row page stored exactly once: 3 followers x 2 pages
+    assert st_["pages_shared"] == 2
+    assert st_["pages_logical"] - st_["pages_in_use"] == 6
+    assert st_["kv_bytes_logical"] > st_["kv_bytes_physical"]
+    assert bat.prefix_hit_pages == 6
+    assert bat.prefix_hit_rate == pytest.approx(6 / 12)  # 3 pages/prompt
+    # prefill compute skipped: leader runs ceil(69/32)=3 chunks, followers
+    # only their post-prefix remainder (1 chunk each)
+    assert bat.chunk_prefill_calls == 3 + 3 * 1
+    assert bat.prefill_traces == 1
+    finished, _ = bat.run()
+    assert len(finished) == 4
+    got = {r.rid: r.out_tokens[:gen] for r in finished}
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, (storage, i, got[i], ref)
+    # retirement drains everything, in whatever order requests finished
+    assert bat.alloc.used_count == 0 and bat.alloc.shared_count == 0
+    assert bool(jnp.all(bat.cache["block_table"] == bat.alloc.sentinel))
+
+
+def test_mla_shared_prefix_matches_sequential_fp():
+    """MLA (compressed-latent cache): chunked prefill + prefix sharing stay
+    token-for-token with sequential decoding on the fp pool. The arch is
+    MoE: chunked prefill routes prompt tokens DROPLESS (decode-style),
+    while the dense reference prefill uses capacity routing — raise the
+    capacity factor so neither drops and the routing maths coincide (same
+    workaround as test_ragged_moe_dense_layers_match_sequential)."""
+    import dataclasses
+    cfg = configs.smoke_config("deepseek_v2_lite_16b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = M.init(cfg, KEY)
+    prompts = _prompts_with_shared_prefix(cfg, 2 * PAGE, [5, 9], salt=3)
+    gen = 4
+    refs = [generate(cfg, params, p[None, :], Q.FP, gen_len=gen)[0].tolist()
+            for p in prompts]
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=96)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    finished, _ = bat.run()
+    assert bat.prefix_hit_pages == 2           # follower shares both pages
+    got = {r.rid: r.out_tokens[:gen] for r in finished}
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, (i, got[i], ref)
+    assert bat.alloc.used_count == 0
+
+
+def test_mla_packed_sharing_is_deterministic():
+    """packed MLA quantises the latent (close-not-equal to fp by design),
+    so the parity statement is sharing vs NO-sharing on the same packed
+    pool: shared pages hold bit-identical codes, tokens must match."""
+    cfg = configs.smoke_config("deepseek_v2_lite_16b")
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    prompts = _prompts_with_shared_prefix(cfg, 2 * PAGE, [5, 9], salt=5)
+    outs = {}
+    for share in (True, False):
+        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=96,
+                                kv_storage="packed", prefix_cache=share)
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=4))
+        finished, _ = bat.run()
+        assert len(finished) == 2
+        assert bat.prefix_hit_pages == (2 if share else 0)
+        outs[share] = {r.rid: r.out_tokens for r in finished}
+    assert outs[True] == outs[False]
+
+
+# ---------------------------------------------------------------------------
+# sharing boundaries
+# ---------------------------------------------------------------------------
+
+def test_partial_and_last_pages_never_shared():
+    """identical 40-token prompts share only page 0: page 1 is the last
+    (partial) page and must stay private to each writer. And identical
+    64-token prompts share only page 0: page 1 holds the last prompt token,
+    which must rerun through chunk prefill for its logits."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    for p_len, want_shared in ((40, 1), (64, 1), (65, 2)):
+        prompt = jax.random.randint(jax.random.fold_in(KEY, p_len),
+                                    (p_len,), 0, cfg.vocab)
+        bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=128)
+        ref = generate(cfg, params, prompt[None, :], Q.FP, gen_len=4)[0].tolist()
+        for i in range(2):
+            bat.submit(Request(rid=i, prompt=prompt, max_new=4))
+        assert bat.step()
+        assert bat.kv_stats()["pages_shared"] == want_shared, p_len
+        assert bat.prefix_hit_pages == want_shared
+        finished, _ = bat.run()
+        for r in finished:
+            assert r.out_tokens == ref, (p_len, r.out_tokens, ref)
+
+
+def test_decode_appended_pages_stay_private():
+    """two requests sharing a prefix cross a page boundary while decoding:
+    the appended pages are private (refcount 1) and never indexed, so the
+    divergent generated rows cannot leak into a later admission."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prompts = _prompts_with_shared_prefix(cfg, PAGE, [PAGE - 2, PAGE - 4],
+                                          salt=9)   # 62/60 rows: page 1 partial
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=128)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=8))  # crosses row 64
+    finished, _ = bat.run()
+    assert len(finished) == 2
+    assert bat.prefix_hit_pages == 1
+    assert bat.alloc.used_count == 0           # appended pages also drained
+
+
+def test_prefix_cache_disabled_stores_everything():
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prompts = _prompts_with_shared_prefix(cfg, 2 * PAGE, [5, 7], salt=11)
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=128,
+                            prefix_cache=False)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=3))
+    assert bat.step()
+    st_ = bat.kv_stats()
+    assert st_["pages_shared"] == 0
+    assert st_["pages_logical"] == st_["pages_in_use"]
+    assert bat.prefix_hit_rate == 0.0
+
+
+def test_kv_rows_needed_contract():
+    assert kv_rows_needed(10, 1) == 10
+    assert kv_rows_needed(10, 5) == 14
+    with pytest.raises(ValueError, match="max_new"):
+        kv_rows_needed(10, 0)

@@ -73,8 +73,8 @@ def test_ragged_refill_keeps_one_call_per_tick():
 
 def test_ragged_moe_dense_layers_match_sequential():
     """MoE archs with leading dense layers keep a separate cache['dense'] —
-    the prefill splice (paged splice_pages / dense _splice_dense) must copy
-    it too (regression: it was silently skipped)."""
+    the prefill (paged chunk_prefill / dense _splice_dense) must write it
+    too (regression: it was silently skipped)."""
     import dataclasses
     cfg = configs.smoke_config("deepseek_v2_lite_16b")   # first_dense=1, MLA
     cfg = dataclasses.replace(
