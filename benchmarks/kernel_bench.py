@@ -63,6 +63,36 @@ def run(tiny: bool = False):
     return out
 
 
+def _serve_batcher(cfg, params, qcfg, prompts, max_new, **kw):
+    """Shared serving-row setup: build a ContinuousBatcher and submit one
+    request per prompt (the previously copy-pasted per-row boilerplate)."""
+    from repro.runtime.batcher import ContinuousBatcher, Request
+
+    bat = ContinuousBatcher(cfg, params, qcfg, **kw)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=max_new))
+    return bat
+
+
+def _prompts(cfg, lens, seed, prefix=None):
+    """Deterministic prompts of the given lengths; `prefix` (an array) is
+    shared verbatim by every prompt (prefix-cache workloads)."""
+    ps = [jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(seed), i),
+                             (n,), 0, cfg.vocab) for i, n in enumerate(lens)]
+    if prefix is not None:
+        ps = [jnp.concatenate([prefix, p]) for p in ps]
+    return ps
+
+
+def _timed_ticks(bat, n_ticks):
+    """Mean wall time per decode tick over up to `n_ticks` steps (us)."""
+    t0 = time.perf_counter()
+    n = 0
+    while n < n_ticks and bat.step():
+        n += 1
+    return (time.perf_counter() - t0) / max(n, 1) * 1e6
+
+
 def serving_rows(tiny: bool = False):
     """Serving-path metrics: steady-state decode-tick latency and KV bytes
     per slot for the continuous batcher, dense slab vs paged allocator.
@@ -70,7 +100,6 @@ def serving_rows(tiny: bool = False):
     from repro import configs
     from repro.models import model as M
     from repro.quant import linear as Q
-    from repro.runtime.batcher import ContinuousBatcher, Request
 
     cfg = configs.smoke_config("llama7b")
     params = M.init(cfg, jax.random.PRNGKey(3))
@@ -86,22 +115,14 @@ def serving_rows(tiny: bool = False):
     variants = [("dense", "dense", "fp", Q.FP),
                 ("paged", "paged", "fp", kvq),
                 ("packed", "paged", "packed", kvq)]
+    prompts = _prompts(cfg, [5 + 7 * i for i in range(n_slots)], seed=4)
     for name, layout, storage, qcfg in variants:
-        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=n_slots,
-                                max_len=max_len, kv_layout=layout,
-                                kv_storage=storage)
-        for i in range(n_slots):
-            p_len = 5 + 7 * i                   # ragged mix
-            prompt = jax.random.randint(jax.random.fold_in(
-                jax.random.PRNGKey(4), i), (p_len,), 0, cfg.vocab)
-            bat.submit(Request(rid=i, prompt=prompt, max_new=gen))
+        bat = _serve_batcher(cfg, params, qcfg, prompts, gen,
+                             n_slots=n_slots, max_len=max_len,
+                             kv_layout=layout, kv_storage=storage)
         bat.step()                              # admit + compile the decode
         stats = bat.kv_stats()                  # measured at full load
-        t0 = time.perf_counter()
-        n = 0
-        while n < timed_ticks and bat.step():
-            n += 1
-        us_tick = (time.perf_counter() - t0) / max(n, 1) * 1e6
+        us_tick = _timed_ticks(bat, timed_ticks)
         # derived column must stay comma-free (the JSON writer rsplits rows)
         out.append(row(f"serve/decode_tick_{name}", us_tick,
                        f"slots={n_slots} max_len={max_len} one-jit-per-tick "
@@ -114,6 +135,7 @@ def serving_rows(tiny: bool = False):
                            f"unit=bytes pages={stats['pages_in_use']}"
                            f"/{stats['pages_total']}"))
     out.extend(prefix_rows(cfg, params, tiny=tiny))
+    out.extend(engine_rows(cfg, params, tiny=tiny))
     return out
 
 
@@ -130,11 +152,12 @@ def prefix_rows(cfg, params, tiny: bool = False):
         chunk-prefill step (the O(1)-compile replacement for the dense
         bucket ladder)."""
     from repro.quant import linear as Q
-    from repro.runtime.batcher import ContinuousBatcher, Request
+    from repro.runtime.batcher import Request
 
     n_req, gen = 4, (6 if tiny else 12)
     shared = jax.random.randint(jax.random.PRNGKey(6), (64,), 0, cfg.vocab)
-    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=n_req, max_len=128)
+    bat = _serve_batcher(cfg, params, Q.FP, [], gen, n_slots=n_req,
+                         max_len=128)
     # warm up the (single) chunk-prefill compilation with an unrelated
     # prompt that retires at admission, then zero the counters so the
     # timed rows are steady-state and the sharing stats cover only the
@@ -144,11 +167,8 @@ def prefix_rows(cfg, params, tiny: bool = False):
     bat.step()
     assert bat.alloc.used_count == 0 and bat.prefill_traces == 1
     bat.prefix_hit_pages = bat.prefix_miss_pages = bat.chunk_prefill_calls = 0
-    for i in range(n_req):
-        sfx = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(7), i),
-                                 (8,), 0, cfg.vocab)
-        bat.submit(Request(rid=i, prompt=jnp.concatenate([shared, sfx]),
-                           max_new=gen))
+    for i, p in enumerate(_prompts(cfg, [8] * n_req, seed=7, prefix=shared)):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
     t0 = time.perf_counter()
     bat._admit()                                # admissions ONLY: no decode
     prefill_s = time.perf_counter() - t0        # (decode would add its own
@@ -166,6 +186,60 @@ def prefix_rows(cfg, params, tiny: bool = False):
                f"chunks={bat.chunk_prefill_calls} traces={bat.prefill_traces} "
                f"(leader 3 + 3 hits x 1; no-sharing would be 12)")]
     bat.run()
+    return out
+
+
+def engine_rows(cfg, params, tiny: bool = False):
+    """Engine-seam metrics (deterministic; the CI smoke gate reads them):
+      * serve/batched_prefill_tick — mean wall time of one BATCHED
+        multi-slot chunk-prefill step on a 4-request burst. The derived
+        column carries steps/chunks/traces: lockstep batching launches
+        max-chunks steps (3) for sum-of-chunks work items (9) under ONE
+        compiled shape (traces=1 — the gate asserts it);
+      * serve/preemption_recovery_tick — mean decode-tick wall time of an
+        oversubscribed-pool run (3 requests x 3 worst-case pages through a
+        6-page pool): the gate asserts every request completes its full
+        budget with >= 1 preemption."""
+    from repro.quant import linear as Q
+    from repro.runtime.batcher import Request
+
+    out = []
+    # batched prefill burst: 4 requests, no sharing, 2-3 chunks each.
+    # Warm the (single) compiled shape with a throwaway admission, then
+    # time the burst's admissions only (no decode in the window).
+    bat = _serve_batcher(cfg, params, Q.FP,
+                         _prompts(cfg, [72], seed=9), 1,
+                         n_slots=4, max_len=128)
+    bat.step()                                  # warm + retire at admission
+    bat.chunk_prefill_calls = 0
+    bat.runner.prefill_steps = 0
+    for i, p in enumerate(_prompts(cfg, [40, 50, 60, 70], seed=10)):
+        bat.submit(Request(rid=10 + i, prompt=p, max_new=2))
+    t0 = time.perf_counter()
+    bat._admit()                                # the whole burst, batched
+    prefill_s = time.perf_counter() - t0
+    out.append(row("serve/batched_prefill_tick",
+                   prefill_s / max(bat.prefill_steps, 1) * 1e6,
+                   f"steps={bat.prefill_steps} "
+                   f"chunks={bat.chunk_prefill_calls} "
+                   f"traces={bat.prefill_traces} (sequential would launch "
+                   f"{bat.chunk_prefill_calls} calls)"))
+    bat.run()
+    # preemption recovery: pool of 6 pages, three 2-page prompts that each
+    # grow past a page boundary (worst case 3 pages each = 9 > 6): the
+    # engine must preempt, recompute on readmit, and complete everything.
+    gen = 10
+    bat = _serve_batcher(cfg, params, Q.FP,
+                         _prompts(cfg, [55, 58, 61], seed=11), gen,
+                         n_slots=3, max_len=128, n_pages=6, preempt=True)
+    bat.step()                                  # admit + compile the decode
+    us_tick = _timed_ticks(bat, 200)            # runs to completion
+    bat.run()
+    done = sum(len(r.out_tokens) == gen for r in bat.finished)
+    out.append(row("serve/preemption_recovery_tick", us_tick,
+                   f"preempted={bat.preemptions} "
+                   f"recomputed={bat.recomputed_tokens} "
+                   f"completed={done} of=3 pool=6pages"))
     return out
 
 

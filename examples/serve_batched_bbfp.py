@@ -2,9 +2,12 @@
 BBFP(4,2) linears and the BBFP(10,5) segmented-LUT nonlinear unit — an
 accuracy check of the quantised server against the fp server, a ragged
 continuous-batching run (staggered prompt lengths sharing ONE jitted decode
-per tick via the per-slot position cache), and a shared-system-prompt
-workload through the prefix cache (common 64-token prefix stored once as
-copy-on-write pages; followers chunk-prefill only their unique suffix).
+per tick via the per-slot position cache), a shared-system-prompt workload
+through the radix prefix cache (common 64-token prefix stored once as
+copy-on-write pages; followers chunk-prefill only their unique suffix,
+admitted together through ONE batched multi-slot prefill shape), and an
+OVERSUBSCRIBED page pool served via preemption + recompute-on-readmit —
+token-identical to the unconstrained run.
 
   PYTHONPATH=src python examples/serve_batched_bbfp.py
 """
@@ -70,9 +73,35 @@ def main():
           f"{stats['pages_shared']} pages shared "
           f"({stats['kv_bytes_physical']} physical vs "
           f"{stats['kv_bytes_logical']} logical KV bytes), "
-          f"{bat2.chunk_prefill_calls} prefill chunks with "
+          f"{bat2.chunk_prefill_calls} prefill chunks in "
+          f"{bat2.prefill_steps} batched steps with "
           f"{bat2.prefill_traces} compiled shape "
           f"(no sharing would need {4 * 3} chunks)")
+
+    # oversubscribed pool: three requests whose worst case totals 9 pages
+    # share a 6-page pool. The engine admits them all (prompt pages only),
+    # preempts the lowest-priority sequence when decode appends exhaust the
+    # pool, and recomputes it on readmission — greedy decode makes the
+    # outputs token-identical to an unconstrained pool.
+    prompts3 = [jnp.concatenate([system[:32], jax.random.randint(
+        jax.random.fold_in(key, 90 + i), (9 + 4 * i,), 0, cfg.vocab)])
+        for i in range(3)]
+    outs = {}
+    for n_pages in (None, 6):
+        bat3 = ContinuousBatcher(cfg, params, Q.PAPER, n_slots=3,
+                                 max_len=128, n_pages=n_pages, preempt=True)
+        for i, p in enumerate(prompts3):
+            bat3.submit(Request(rid=i, prompt=p, max_new=28))
+        done, _ = bat3.run()
+        outs[n_pages] = {r.rid: r.out_tokens for r in done}
+        if n_pages:
+            print(f"oversubscribed pool ({n_pages} pages for 9 worst-case): "
+                  f"{len(done)} served with {bat3.preemptions} preemptions, "
+                  f"{bat3.recomputed_tokens} tokens recomputed on readmit, "
+                  f"radix kept {bat3.kv_stats()['radix_pages']} pages "
+                  f"indexed")
+    print("preempted run token-identical to unconstrained:",
+          outs[None] == outs[6])
 
 
 if __name__ == "__main__":

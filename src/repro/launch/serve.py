@@ -21,6 +21,17 @@ recomputes everything, --prefill-chunk sets the fixed prefill step width:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
       --continuous --batch 8 --slots 4 --max-len 256 --shared-prefix 96
+
+Preemption (--preempt; paged layout only): admission reserves only the
+prompt's pages, so the page pool may be OVERSUBSCRIBED — when a decode
+append or a higher-priority admission finds it exhausted, the lowest-
+priority running sequence is evicted and requeued for recompute-on-
+readmit (token-identical under greedy decode). --preempt-demo runs a
+canned oversubscribed mixed-length workload and prints the preemption /
+recompute counters:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
+      --preempt-demo --slots 4 --batch 6
 """
 from __future__ import annotations
 
@@ -103,8 +114,31 @@ def main(argv=None):
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="prepend this many common tokens to every request "
                         "(shared-system-prompt workload for the prefix cache)")
+    p.add_argument("--prefill-slots", type=int, default=None,
+                   help="admissions per batched chunk-prefill call "
+                        "(default: --slots; ONE compiled prefill shape)")
+    p.add_argument("--preempt", action="store_true",
+                   help="oversubscribe the page pool: evict the lowest-"
+                        "priority running sequence when it runs out and "
+                        "recompute it on readmission (paged layout only)")
+    p.add_argument("--preempt-demo", action="store_true",
+                   help="canned oversubscribed mixed-length workload; "
+                        "implies --continuous --preempt and prints the "
+                        "preemption/recompute counters")
     args = p.parse_args(argv)
 
+    if args.preempt_demo:
+        args.continuous = args.preempt = True
+    if args.preempt and not args.continuous:
+        # preemption is a property of the ContinuousBatcher's page pool;
+        # the plain generate path has no pool to oversubscribe
+        p.error("--preempt requires --continuous")
+    if args.preempt and args.kv_layout == "dense":
+        # the dense slab reserves a full (max_len) row range per slot up
+        # front — there are no pages to evict, so the flag would be a no-op
+        # that silently changes nothing; reject it like --kv-storage packed
+        p.error("--preempt requires --kv-layout paged "
+                "(the dense slab has no pages to evict)")
     if args.kv_storage == "packed" and not args.continuous:
         # packed pages live in the ContinuousBatcher's paged pool; the plain
         # generate path has no packed store, and silently enabling KV
@@ -136,6 +170,21 @@ def main(argv=None):
     if args.continuous:
         from repro.runtime.batcher import ContinuousBatcher, Request
         assert cfg.family == "decoder", "continuous mode targets decoders"
+        gen = args.gen
+        if args.preempt_demo:
+            # oversubscribed pool, mixed lengths: every request fits the
+            # pool ALONE, the concurrent mix does not — admission fills the
+            # pool with prompt pages and the first decode page-boundary
+            # crossings force preemptions + recompute-on-readmit
+            args.shared_prefix = args.shared_prefix or args.page_size
+            gen = max(gen, args.page_size)
+            p_lens = [args.page_size + 9 + (7 * i) % 17
+                      for i in range(args.batch)]
+            if args.n_pages is None:
+                args.n_pages = 2 * args.slots   # prompt pages only: tight
+        else:
+            p_lens = [max(1, args.prompt_len - 4 + (3 * i) % 9)
+                      for i in range(args.batch)]
         bat = ContinuousBatcher(cfg, params, qcfg, n_slots=args.slots,
                                 max_len=args.max_len,
                                 kv_layout=args.kv_layout,
@@ -143,16 +192,17 @@ def main(argv=None):
                                 page_size=args.page_size,
                                 n_pages=args.n_pages,
                                 prefix_cache=args.prefix_cache,
-                                prefill_chunk=args.prefill_chunk)
+                                prefill_chunk=args.prefill_chunk,
+                                prefill_slots=args.prefill_slots,
+                                preempt=args.preempt)
         shared = jax.random.randint(jax.random.fold_in(key, 999),
                                     (args.shared_prefix,), 0, cfg.vocab)
-        for i in range(args.batch):   # ragged mix around --prompt-len
-            p_len = max(1, args.prompt_len - 4 + (3 * i) % 9)
+        for i, p_len in enumerate(p_lens):   # ragged mix
             prompt = jax.random.randint(jax.random.fold_in(key, i),
                                         (p_len,), 0, cfg.vocab)
             if args.shared_prefix:    # shared-system-prompt workload
                 prompt = jnp.concatenate([shared, prompt])
-            bat.submit(Request(rid=i, prompt=prompt, max_new=args.gen))
+            bat.submit(Request(rid=i, prompt=prompt, max_new=gen))
         with PT.activation_sharding(mesh, PT.SERVE_RULES):
             t0 = time.perf_counter()
             finished, ticks = bat.run()
@@ -164,12 +214,21 @@ def main(argv=None):
         print(f"served {len(finished)} requests / {n_new} tokens in "
               f"{dt:.2f}s over {ticks} ticks ({bat.decode_calls} decode "
               f"calls, {bat.prefill_traces} prefill traces, "
-              f"{bat.chunk_prefill_calls} prefill chunks)")
+              f"{bat.chunk_prefill_calls} prefill chunks in "
+              f"{bat.prefill_steps} batched steps)")
         if bat.paged:
             print(f"prefix cache: hit rate {bat.prefix_hit_rate:.0%} "
                   f"({bat.prefix_hit_pages} of "
                   f"{bat.prefix_hit_pages + bat.prefix_miss_pages} prompt "
-                  f"pages served from resident pages)")
+                  f"pages served from resident pages; radix index "
+                  f"{stats['radix_pages']} pages)")
+        if args.preempt:
+            done = sum(len(r.out_tokens) == gen for r in finished)
+            print(f"preemption: pool {stats['pages_total']} pages for "
+                  f"{len(p_lens)} requests -> {stats['preemptions']} "
+                  f"preemptions, {stats['recomputed_tokens']} tokens "
+                  f"recomputed on readmit, {done}/{len(p_lens)} requests "
+                  f"ran to full budget")
         print("kv:", {k: v for k, v in stats.items() if k != "kv_layout"})
         return finished
     with PT.activation_sharding(mesh, PT.SERVE_RULES):

@@ -87,7 +87,11 @@ def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
     """Scatter each slot's new rows (B, S, ...) — S consecutive KV rows
     starting at the slot's offset pos (B,) — into a page pool (n_pages,
     page, ...) at (block_table[b, (pos+i)//page], (pos+i) % page). S=1 is
-    the decode append; S=chunk is incremental chunked prefill. Sentinel
+    the decode append; S=chunk is incremental chunked prefill (the B rows
+    may be DIFFERENT requests at different offsets — batched multi-slot
+    prefill scatters them all in one call, and because this append runs
+    before the gather in every layer, one batch row's writes are visible
+    to another's reads within the same call). Sentinel
     table entries (= n_pages) land out of bounds and are DROPPED — idle
     slots never corrupt another slot's page — and target rows past the
     table's extent (tail-chunk padding) are redirected to the sentinel.

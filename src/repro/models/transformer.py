@@ -320,7 +320,16 @@ def chunk_prefill(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig)
     pos advanced by S); the caller reads next-token logits at its last REAL
     row (tail chunks are padded to the fixed chunk width, so every prompt
     compiles to ONE shape; pad rows land past the prompt where the position
-    mask hides them until decode overwrites them)."""
+    mask hides them until decode overwrites them).
+
+    BATCHED MULTI-SLOT contract (runtime/model_runner.py): the B rows may
+    belong to DIFFERENT requests at different offsets — cache["pos"] is the
+    per-row chunk offset and cache["block_table"] carries each row's own
+    table row. Per layer the scatter of ALL rows lands before the gather,
+    so a row may read rows another batch row wrote in the same call (the
+    lockstep prefix-sharing schedule relies on this); an idle row carries a
+    sentinel table row (writes dropped, gathered garbage position-masked)
+    and its logits are discarded by the caller."""
     if "block_table" not in cache:
         raise NotImplementedError(
             "chunk_prefill targets paged caches (block_table); dense-layout "

@@ -1,7 +1,45 @@
+"""Serving/runtime engine.
+
+The continuous-batching engine is three collaborating layers behind the
+``ContinuousBatcher`` façade; each owns a disjoint slice of state and the
+seams between them are ordinary method calls, so every layer is testable
+on its own:
+
+  * ``Scheduler`` (runtime/scheduler.py) — POLICY. Owns the wait queue
+    (rank-sorted: priority desc, arrival asc), the slot seating map, the
+    per-slot written-row mirror, and the preemption policy (admission-
+    blocked and append-exhausted eviction, recompute-on-readmit
+    bookkeeping). Pure host Python: never touches jax, params, or device
+    arrays — unit-testable with a mock runner.
+
+  * ``KVCacheManager`` (runtime/kv_manager.py) — MEMORY. Owns the physical
+    page pool: free list, refcounts, per-slot page lists, reservations
+    (strict worst-case or relaxed prompt-only), the RADIX PREFIX TREE over
+    page-granular token chunks, and the LRU that retains retired pages
+    until the pool actually reclaims them. Host Python; the façade mirrors
+    its decisions into the device block table.
+
+  * ``ModelRunner`` (runtime/model_runner.py) — EXECUTION. Owns params,
+    the QuantConfig, and every compiled shape: the one-jitted-decode-per-
+    tick step, the dense bucketed-prefill reference ladder, and batched
+    multi-slot chunked prefill (one compiled ``(prefill_slots, chunk)``
+    call serving several admissions per step). All counters that describe
+    compiled work (prefill_traces, chunk_prefill_calls, prefill_steps)
+    live here.
+
+``ContinuousBatcher`` (runtime/batcher.py) composes the three, owns the
+device cache pytree + block table, and keeps the public ``submit`` /
+``step`` / ``run`` / ``kv_stats`` API stable. ``PagedKVAllocator``
+(runtime/paged_kv.py) remains the bare bookkeeping base class
+KVCacheManager extends.
+"""
 from repro.runtime.resilient import (  # noqa: F401
     FailureInjector, StragglerMonitor, resilient_train_loop,
 )
 from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: F401
+from repro.runtime.kv_manager import KVCacheManager  # noqa: F401
+from repro.runtime.model_runner import ModelRunner  # noqa: F401
 from repro.runtime.paged_kv import (  # noqa: F401
-    PAGE_SIZE, PagedKVAllocator, init_paged_cache, pages_for,
+    PAGE_SIZE, PagedKVAllocator, PoolExhausted, init_paged_cache, pages_for,
 )
+from repro.runtime.scheduler import Scheduler  # noqa: F401

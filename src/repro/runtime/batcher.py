@@ -1,77 +1,51 @@
-"""Continuous-batching serving scheduler (slot-based, vLLM-style-lite).
+"""Continuous-batching serving engine façade (Scheduler/KVCacheManager/
+ModelRunner composition).
 
-A fixed pool of B slots runs a single jitted decode step per tick; requests
-are admitted into free slots as others finish (EOS or max_new), so the
-decode batch stays full instead of draining to the slowest request —
-the thing that actually determines serving throughput at scale.
+``ContinuousBatcher`` keeps the public serving API (``submit`` / ``step`` /
+``run`` / ``kv_stats``) but is now a thin façade over three collaborating
+layers with explicit seams (see runtime/__init__.py for the contract):
 
-Ragged-position cache contract (tested in tests/test_ragged_decode.py):
+  * ``runtime.scheduler.Scheduler`` — wait queue, admission order, seating,
+    and the PREEMPTION policy (pure host Python);
+  * ``runtime.kv_manager.KVCacheManager`` — page pool + refcounts + the
+    RADIX PREFIX TREE over page-granular token chunks, with LRU retention
+    of retired pages (host Python; the device block table mirrors it here);
+  * ``runtime.model_runner.ModelRunner`` — params, jit caches, compiled
+    shapes: the one-per-tick decode, the dense bucket ladder, and BATCHED
+    MULTI-SLOT chunked prefill (one compiled ``(prefill_slots, chunk)``
+    call prefills a chunk for several admissions per step).
+
+Serving contract (unchanged from the monolith, tested in
+tests/test_ragged_decode.py, tests/test_paged_kv.py,
+tests/test_prefix_cache.py):
   * one shared KV cache whose cache["pos"] is a PER-SLOT position vector
-    (B,) int32 — slots at arbitrary, distinct sequence lengths decode
-    together. Each row RoPEs its query, writes its K/V, and masks attention
-    at its own position;
-  * consequently step() issues exactly ONE jitted decode call per tick, no
-    matter how many distinct lengths are active (the old implementation
-    looped over position groups, degrading exactly when traffic is ragged);
-  * requests that cannot fit (prompt + max_new - 1 > max_len; the LAST
-    generated token is never written back) are rejected at submit();
-  * idle and just-finished slots keep decoding garbage in the same call —
-    their pos is pinned back to 0 and their outputs discarded, so they cost
-    one masked row instead of a retrace.
+    (B,) int32; step() issues exactly ONE jitted decode call per tick;
+  * "paged" layout (default): pages of 32 KV rows = one BBFP quantisation
+    block, allocated on admission, appended on page-boundary crossings,
+    released on retirement; "dense" keeps the (B, max_len) slab reference;
+  * prefix cache: a request sharing a page-aligned token prefix with any
+    indexed sequence — resident OR recently retired (the radix tree's LRU
+    keeps zero-refcount pages until the pool actually reclaims them) —
+    maps those pages copy-on-write and skips their prefill;
+  * kv_storage="packed" pages hold int8 codes + shared exponents.
 
-KV layouts (tested in tests/test_paged_kv.py, tests/test_prefix_cache.py):
-  * "paged" (default) — the cache is a pool of 32-row pages shared by all
-    slots (runtime/paged_kv.py): pages are allocated on ADMISSION (prompt
-    pages, plus a worst-case reservation so decode appends can never fail),
-    APPENDED one at a time as a slot's decode crosses a page boundary, and
-    RELEASED on retirement (refcounted: a page only truly frees when its
-    last reader retires). KV memory tracks the pool's actual load instead
-    of n_slots * max_len, and a page is always aligned to the BBFP
-    32-element quantisation block;
-  * "dense" — the original (B, max_len) slab per layer; kept as the
-    reference layout and for the bench comparison.
-
-Page-native admission (paged layout):
-  * PREFIX CACHE (`prefix_cache=True`): a request whose prompt shares a
-    32-token-page-aligned prefix with a resident sequence maps the matching
-    pages into its block table (refcount++, copy-on-write: shared pages are
-    immutable full prompt pages; the last partial page — and the page
-    holding the last prompt token, whose logits must be recomputed — stay
-    private) and SKIPS that share of prefill compute and storage entirely.
-    Because a page is exactly one BBFP quantisation block, the shared pages
-    are bit-identical to what the request would have computed;
-  * INCREMENTAL CHUNKED PREFILL: the (post-prefix) prompt remainder runs in
-    fixed `prefill_chunk`-token jitted steps (transformer.chunk_prefill)
-    whose queries attend to the already-resident paged KV through the block
-    table and whose K/V rows scatter straight into the request's pages — no
-    max_len-sized dense staging cache, and ONE compiled prefill shape
-    regardless of prompt length (tail chunks pad to the chunk width;
-    `prefill_traces` counts 1). `chunk_prefill_calls` counts the chunk
-    steps actually run, so prefix hits are measurable as skipped chunks.
-
-KV storage (paged only; `kv_storage` parameter):
-  * "fp" (default) — pages hold bf16 values;
-  * "packed" — pages hold int8 codes + int8 per-32-block shared exponents
-    in qcfg.kv_fmt (runtime/paged_kv.packed_proto): 8.25 bits/elt at
-    BBFP(6,3) vs 16, and token-for-token identical to the fp pool for GQA
-    because cache writes already sit on the format grid.
-
-The dense layout keeps the legacy bucketed prefill: a staging cache whose
-length is the prompt rounded up to a power-of-two BUCKET (min
-`min_prefill_bucket`), compilations O(log max_len), rows [0, p_len) spliced
-into the slot's slab rows.
-
-Works with every decoder-family arch and any QuantConfig (incl. the full
-BBAL serving stack). SSM/griffin caches are sequence-synchronous (scalar
-pos, no per-slot time index) and explicitly reject ragged position vectors,
-so the batcher targets the transformer family (the assigned serving
-shapes' family).
+Preemption (``preempt=True``, paged only): admission reserves only the
+prompt's pages, so the pool may be OVERSUBSCRIBED — more concurrent
+sequences than worst-case capacity, and requests whose worst case exceeds
+the pool are accepted at submit (they complete whenever eos lands early
+enough). When a decode-time append (or a higher-priority admission) finds
+the pool exhausted, the lowest-priority running sequence is evicted: its
+private pages free (shared pages survive via refcounts, indexed pages stay
+radix-reachable), and the request requeues with its generated tokens for
+recompute-on-readmit — chunk prefill of ``prompt + out_tokens[:-1]``
+(minus surviving prefix pages), then decode resumes from its last token.
+Greedy decode makes the interrupted run token-identical to an
+uninterrupted one. ``kv_stats`` reports ``preemptions``,
+``recomputed_tokens``, and the radix index size.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -80,16 +54,12 @@ import numpy as np
 from repro.models import model as M
 from repro.quant import linear as Q
 from repro.runtime import paged_kv as PK
-
-
-def kv_rows_needed(p_len: int, max_new: int) -> int:
-    """Worst-case KV rows a request ever occupies. The first generated
-    token comes from prefill and the LAST generated token is never written
-    back, so a request needs prompt + max_new - 1 rows (max_new >= 1 — a
-    request that generates nothing is not a request)."""
-    if max_new < 1:
-        raise ValueError(f"max_new must be >= 1, got {max_new}")
-    return p_len + max_new - 1
+from repro.runtime.kv_manager import KVCacheManager
+from repro.runtime.model_runner import ModelRunner
+from repro.runtime.scheduler import Scheduler, kv_rows_needed  # noqa: F401
+# kv_rows_needed is re-exported here (its historical home); the formula
+# itself lives next to the admission reservation in runtime/scheduler.py
+# so submit-time validation and schedule-time accounting cannot diverge.
 
 
 @dataclasses.dataclass
@@ -99,6 +69,7 @@ class Request:
     max_new: int
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    priority: int = 0              # higher = may preempt lower (preempt mode)
 
 
 class ContinuousBatcher:
@@ -107,7 +78,8 @@ class ContinuousBatcher:
                  kv_layout: str = "paged", page_size: int = PK.PAGE_SIZE,
                  n_pages: int | None = None, min_prefill_bucket: int = 16,
                  kv_storage: str = "fp", prefix_cache: bool = True,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32, prefill_slots: int | None = None,
+                 preempt: bool = False):
         assert cfg.family == "decoder", "batcher targets the decoder family"
         assert kv_layout in ("paged", "dense"), kv_layout
         assert kv_storage in ("fp", "packed"), kv_storage
@@ -116,9 +88,12 @@ class ContinuousBatcher:
         self.paged = kv_layout == "paged"
         self.kv_storage = kv_storage
         self.page_size = page_size
-        self.min_bucket = max(1, min_prefill_bucket)
         self.prefix_cache = prefix_cache and self.paged
         self.prefill_chunk = max(1, prefill_chunk)
+        self.preempt = preempt
+        if preempt and not self.paged:
+            raise ValueError("preempt=True requires kv_layout='paged' "
+                             "(the dense slab has no pages to evict)")
         if kv_storage == "packed":
             # packed pages store int8 codes in qcfg.kv_fmt — the storage
             # format IS the cache-quantisation format, so it must be set
@@ -135,32 +110,72 @@ class ContinuousBatcher:
             # pass a smaller n_pages to overcommit the pool
             self.n_pages = n_pages if n_pages is not None \
                 else n_slots * self.max_pages
-            self.alloc = PK.PagedKVAllocator(self.n_pages, page_size, n_slots)
+            self.kv = KVCacheManager(self.n_pages, page_size, n_slots,
+                                     strict_reserve=not preempt,
+                                     retain=self.prefix_cache)
             self.cache = PK.init_paged_cache(
                 cfg, n_slots, max_len, n_pages=self.n_pages, page=page_size,
                 storage=kv_storage,
                 kv_fmt=qcfg.kv_fmt if kv_storage == "packed" else None)
         else:
-            self.alloc = None
+            self.kv = None
             self.cache = M.init_cache(cfg, n_slots, max_len)  # cache["pos"]: (B,)
-        self.slot_req: list[Request | None] = [None] * n_slots
+        self.sched = Scheduler(self.kv, n_slots, page_size=page_size,
+                               preempt=preempt, prefix_cache=self.prefix_cache)
+        self.runner = ModelRunner(cfg, params, qcfg,
+                                  prefill_chunk=self.prefill_chunk,
+                                  prefill_slots=prefill_slots or n_slots,
+                                  min_prefill_bucket=min_prefill_bucket)
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
-        # the pre-call cache is never touched after a tick: donate it so XLA
-        # aliases the new pool onto the old instead of double-buffering the
-        # whole KV store every decode (no-op on CPU, real aliasing on TPU)
-        self._decode = jax.jit(
-            lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
-            donate_argnums=(1,))
+        self._decode = self.runner.make_decode()
         self.decode_calls = 0          # jitted decode invocations (1 per tick)
-        self._prefill_fns: dict[int, object] = {}   # bucket -> jitted prefill
-        self._chunk_prefill_fn = None  # the ONE jitted chunk-prefill shape
-        self.prefill_traces = 0        # distinct prefill shapes compiled
-        self.chunk_prefill_calls = 0   # chunk steps run (hits skip chunks)
         self.prefix_hit_pages = 0      # prompt pages served from the index
         self.prefix_miss_pages = 0     # prompt pages computed by prefill
-        self._host_pos = [0] * n_slots  # host mirror of live slots' pos
-        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+
+    # -- façade surface (delegation) ---------------------------------------
+
+    @property
+    def alloc(self):
+        """The page manager (None for the dense layout); kept under the
+        monolith's name so allocator-level introspection keeps working."""
+        return self.kv
+
+    @property
+    def queue(self):
+        return self.sched.queue
+
+    @property
+    def slot_req(self):
+        return self.sched.slot_req
+
+    @property
+    def prefill_traces(self) -> int:
+        return self.runner.prefill_traces
+
+    @prefill_traces.setter
+    def prefill_traces(self, v: int):
+        self.runner.prefill_traces = v
+
+    @property
+    def chunk_prefill_calls(self) -> int:
+        return self.runner.chunk_prefill_calls
+
+    @chunk_prefill_calls.setter
+    def chunk_prefill_calls(self, v: int):
+        self.runner.chunk_prefill_calls = v
+
+    @property
+    def prefill_steps(self) -> int:
+        return self.runner.prefill_steps
+
+    @property
+    def preemptions(self) -> int:
+        return self.sched.preemptions
+
+    @property
+    def recomputed_tokens(self) -> int:
+        return self.sched.recomputed_tokens
 
     @property
     def pos(self) -> list[int]:
@@ -172,6 +187,9 @@ class ContinuousBatcher:
         """Fraction of admitted prompt pages served from the prefix cache."""
         total = self.prefix_hit_pages + self.prefix_miss_pages
         return self.prefix_hit_pages / total if total else 0.0
+
+    def _bucket(self, p_len: int) -> int:
+        return self.runner.bucket(p_len)
 
     # -- admission ---------------------------------------------------------
 
@@ -185,124 +203,30 @@ class ContinuousBatcher:
                 f"request {req.rid} needs up to {need} KV rows (prompt "
                 f"{req.prompt.shape[0]} + max_new {req.max_new} - 1) but the "
                 f"shared cache capacity is max_len={self.max_len}")
-        if self.paged and PK.pages_for(need, self.page_size) > self.n_pages:
-            # can_admit() would never hold, so the request (and everything
-            # FIFO-queued behind it) would spin unserved — reject up front
-            raise ValueError(
-                f"request {req.rid} needs {PK.pages_for(need, self.page_size)} "
-                f"pages (KV rows {need} / page {self.page_size}) but the page "
-                f"pool budget is n_pages={self.n_pages}")
-        self.queue.append(req)
+        if self.paged:
+            # strict mode charges the worst case; preempt mode admits
+            # optimistically (only an early eos can complete a request whose
+            # worst case exceeds the pool — the no-progress guard fails it
+            # loudly otherwise) but still needs the prompt plus the first
+            # decode write to fit. Either way a request over its budget
+            # would spin unserved at the head of the queue — reject it at
+            # submit instead.
+            floor = min(need, req.prompt.shape[0] + 1) if self.preempt else need
+            if PK.pages_for(floor, self.page_size) > self.n_pages:
+                raise ValueError(
+                    f"request {req.rid} needs {PK.pages_for(floor, self.page_size)} "
+                    f"pages (KV rows {floor} / page {self.page_size}) but the "
+                    f"page pool budget is n_pages={self.n_pages}")
+        self.sched.submit(req, np.asarray(jax.device_get(req.prompt), np.int32))
 
-    def _prefix_keys(self, prompt, n: int) -> list[bytes]:
-        """Page-aligned prefix keys for the first `n` pages: key i is the
-        sha256 CHAIN digest of page i's token bytes onto key i-1, so each
-        key identifies the full prefix through its page in O(1) bytes (an
-        identity key would make a p-page chain cost O(p^2) bytes to build
-        and store; collisions of chained sha256 are not a practical
-        concern). Resolved entirely on the host at admission."""
-        toks = np.asarray(jax.device_get(prompt), np.int32).tobytes()
-        stride = 4 * self.page_size
-        keys, h = [], b""
-        for i in range(n):
-            h = hashlib.sha256(h + toks[i * stride:(i + 1) * stride]).digest()
-            keys.append(h)
-        return keys
-
-    def _match_prefix(self, req: Request) -> tuple[list[int], list[bytes]]:
-        """(resident shared-prefix page ids, the prompt's full-page keys).
-        Sharing is capped at the page BEFORE the one holding the last
-        prompt token: only KV is cached, so the last token always reruns
-        through chunk prefill to produce the next-token logits. Keys are
-        cached on the request — a head-of-queue request re-matched every
-        tick under pool pressure hashes its prompt only once."""
-        if not self.prefix_cache:
-            return [], []
-        keys = getattr(req, "_prefix_keys", None)
-        if keys is None:
-            p_len = int(req.prompt.shape[0])
-            keys = req._prefix_keys = self._prefix_keys(
-                req.prompt, p_len // self.page_size)
-        shareable = (int(req.prompt.shape[0]) - 1) // self.page_size
-        return self.alloc.match_prefix(keys[:shareable]), keys
-
-    def _bucket(self, p_len: int) -> int:
-        """Dense-layout prompt staging length: next power of two >= p_len
-        (floored at min_bucket) — an O(log max_len) shape ladder."""
-        return max(self.min_bucket, 1 << max(p_len - 1, 0).bit_length())
-
-    def _prefill(self, prompt: jnp.ndarray):
-        """Dense-layout bucketed prefill: pad the prompt to its bucket, run
-        one jitted forward per BUCKET (not per length), read logits at row
-        p_len-1 (the padded tail is causally invisible to real rows).
-        Returns (next-token logits (V,), staged cache of bucket rows)."""
-        p_len = prompt.shape[0]
-        bkt = self._bucket(p_len)
-        fn = self._prefill_fns.get(bkt)
-        if fn is None:
-            mod = M.family_module(self.cfg)
-            cfg, qcfg = self.cfg, self.qcfg
-
-            def run(params, toks):
-                logits, cache, _ = mod.forward(
-                    params, cfg, toks, qcfg,
-                    cache=mod.init_cache(cfg, 1, toks.shape[1]))
-                return logits, cache
-
-            fn = jax.jit(run)
-            self._prefill_fns[bkt] = fn
-            self.prefill_traces += 1
-        toks = jnp.pad(prompt.astype(jnp.int32), (0, bkt - p_len))[None, :]
-        logits, staged = fn(self.params, toks)
-        return logits[0, p_len - 1], staged
-
-    def _chunk_fn(self):
-        """The single jitted chunk-prefill step: (params, {layers[,dense],
-        block_table row, pos}, (1, prefill_chunk) tokens) -> (logits, new
-        KV). ONE shape for every prompt length — compare the dense ladder's
-        O(log max_len)."""
-        if self._chunk_prefill_fn is None:
-            cfg, qcfg = self.cfg, self.qcfg
-            mod = M.family_module(cfg)
-
-            def run(params, kv, bt_row, pos0, toks):
-                sub = {**kv, "block_table": bt_row, "pos": pos0}
-                logits, new_cache = mod.chunk_prefill(params, cfg, sub, toks, qcfg)
-                return logits, {k: v for k, v in new_cache.items()
-                                if k in ("layers", "dense")}
-
-            # donate the KV pool (arg 1 holds only the pool leaves — the
-            # table row and pos pass through undonated): chunk i+1's pool
-            # aliases chunk i's instead of double-buffering the store
-            self._chunk_prefill_fn = jax.jit(run, donate_argnums=(1,))
-            self.prefill_traces += 1
-        return self._chunk_prefill_fn
-
-    def _chunked_prefill(self, slot: int, prompt, start: int):
-        """Incremental chunked prefill of prompt rows [start, p_len) —
-        start > 0 when a shared prefix is already resident — straight into
-        `slot`'s pages. Each fixed-width chunk is one jitted multi-token
-        step attending to everything already resident via the block table;
-        the tail chunk pads to the chunk width (pad rows scatter past
-        p_len inside the slot's own reservation, stay position-masked, and
-        decode overwrites them). Returns the last REAL row's logits (V,)."""
-        chunk = self.prefill_chunk
-        p_len = int(prompt.shape[0])
-        fn = self._chunk_fn()
-        logits = real = None
-        for off in range(start, p_len, chunk):
-            real = min(chunk, p_len - off)
-            toks = jnp.pad(prompt[off:off + real].astype(jnp.int32),
-                           (0, chunk - real))[None, :]
-            kv = {"layers": self.cache["layers"]}
-            if "dense" in self.cache:
-                kv["dense"] = self.cache["dense"]
-            logits, new_kv = fn(self.params, kv,
-                                self.cache["block_table"][slot:slot + 1],
-                                jnp.asarray([off], jnp.int32), toks)
-            self.cache = {**self.cache, **new_kv}
-            self.chunk_prefill_calls += 1
-        return logits[0, real - 1]
+    def _clear_slots(self, slots: list[int]):
+        """Reset evicted/retired slots' block-table rows to the sentinel
+        BEFORE the next compiled call: their pages may be reallocated this
+        very tick, and a stale row would scatter into the new owner."""
+        if self.paged and slots:
+            bt = self.cache["block_table"].at[
+                jnp.asarray(slots, jnp.int32)].set(self.kv.sentinel)
+            self.cache = {**self.cache, "block_table": bt}
 
     def _finish_admission(self, slot: int, req: Request, tok: int) -> bool:
         """Common admission tail: record the prefill token; retire budget-
@@ -313,55 +237,65 @@ class ContinuousBatcher:
                 (self.eos is not None and tok == self.eos):
             req.done = True
             self.finished.append(req)
+            self.sched.retire(slot)
             return False
+        self._seat(slot, req, tok, req.prompt.shape[0])
+        return True
+
+    def _seat(self, slot: int, req: Request, tok: int, n_rows: int):
         self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
-        p_len = req.prompt.shape[0]
         self.cache = {**self.cache,
-                      "pos": self.cache["pos"].at[slot].set(p_len)}
-        self._host_pos[slot] = p_len
-        self.slot_req[slot] = req
-        return True
+                      "pos": self.cache["pos"].at[slot].set(n_rows)}
+        self.sched.seat(slot, n_rows)
 
-    def _admit_paged(self, slot: int, req: Request, shared: list[int],
-                     keys: list[bytes]) -> bool:
-        """Page-native admission: map shared prefix pages + allocate the
-        rest, chunk-prefill the remainder straight into them, register the
-        now-resident full prompt pages for future sharing."""
-        p_len = req.prompt.shape[0]
-        need_rows = kv_rows_needed(p_len, req.max_new)
-        pids = self.alloc.admit(slot, p_len, need_rows, shared=shared)
-        bt = self.cache["block_table"].at[slot, :len(pids)].set(
-            jnp.asarray(pids, jnp.int32))
+    def _admit_paged(self, admissions):
+        """Apply one scheduling round's paged admissions: write the block-
+        table rows, run ONE batched multi-slot chunked prefill over all of
+        them, then seat (or resume) each request."""
+        bt = self.cache["block_table"]
+        for adm in admissions:
+            bt = bt.at[adm.slot, :len(adm.page_ids)].set(
+                jnp.asarray(adm.page_ids, jnp.int32))
         self.cache = {**self.cache, "block_table": bt}
-        logits = self._chunked_prefill(slot, req.prompt,
-                                       start=len(shared) * self.page_size)
-        self.prefix_hit_pages += len(shared)
-        self.prefix_miss_pages += PK.pages_for(p_len, self.page_size) - len(shared)
-        tok = int(jnp.argmax(logits))
-        if not self._finish_admission(slot, req, tok):
-            # budget met / EOS at prefill: drop the transient pages
-            self.alloc.release(slot)
-            bt = self.cache["block_table"].at[slot].set(self.alloc.sentinel)
-            self.cache = {**self.cache, "block_table": bt}
-            return False
-        if self.prefix_cache:
-            self.alloc.register_prefix(keys, pids[:len(keys)])
-        return True
+        # a job depends on the lockstep schedule only when its shared
+        # prefix pages are WRITTEN by another admission of this round;
+        # prefixes already resident (earlier ticks, radix LRU) start at 0
+        fresh = set()
+        for adm in admissions:
+            fresh.update(adm.page_ids[adm.n_shared:])
+        jobs = [(adm.slot, adm.tokens, adm.start_row,
+                 bool(set(adm.page_ids[:adm.n_shared]) & fresh))
+                for adm in admissions]
+        self.cache, finals = self.runner.batched_chunk_prefill(
+            self.cache, jobs, self.kv.sentinel)
+        cleared = []
+        for adm in admissions:
+            self.prefix_hit_pages += adm.n_shared
+            self.prefix_miss_pages += \
+                PK.pages_for(len(adm.tokens), self.page_size) - adm.n_shared
+            if adm.resume:
+                # readmission of a preempted request: its KV (minus radix
+                # hits) was just recomputed; decoding resumes from the last
+                # generated token — no new token is taken from the prefill
+                self._seat(adm.slot, adm.req, int(adm.req.out_tokens[-1]),
+                           len(adm.tokens))
+            elif not self._finish_admission(
+                    adm.slot, adm.req, int(jnp.argmax(finals[adm.slot]))):
+                cleared.append(adm.slot)   # retired at prefill: drop pages
+        self._clear_slots(cleared)
 
-    def _admit_dense(self, slot: int, req: Request) -> bool:
+    def _admit_dense(self, adm):
         """Dense-layout admission: bucketed staging prefill + slab splice."""
-        logits, staged = self._prefill(req.prompt)
+        logits, staged = self.runner.dense_prefill(adm.req.prompt)
         tok = int(jnp.argmax(logits))
-        p_len = req.prompt.shape[0]
-        seated = self._finish_admission(slot, req, tok)
-        if seated:
-            self._splice_dense(slot, staged, p_len)
-        return seated
+        p_len = adm.req.prompt.shape[0]
+        if self._finish_admission(adm.slot, adm.req, tok):
+            self._splice_dense(adm.slot, staged, p_len)
 
     def _splice_dense(self, slot: int, staged_cache, p_len: int):
         """Copy a prefilled request's K/V rows into rows [0, p_len) of
         `slot` in the shared dense cache (leading dims: layers..., batch,
-        time, ...); the slot's pos entry is then set to p_len by _admit."""
+        time, ...); the slot's pos entry is then set to p_len by _seat."""
         def one(dst, src):
             if dst.ndim < 3 or dst.shape[1] != self.n_slots:
                 return dst
@@ -380,49 +314,49 @@ class ContinuousBatcher:
         self.cache = new_cache
 
     def _admit(self):
-        for slot in range(self.n_slots):
-            while self.slot_req[slot] is None and self.queue:
-                req = self.queue[0]
-                if self.paged:
-                    shared, keys = self._match_prefix(req)
-                    need = kv_rows_needed(req.prompt.shape[0], req.max_new)
-                    if not self.alloc.can_admit(need, n_shared=len(shared)):
-                        return   # FIFO: wait for a retirement to free pages
-                    self.queue.popleft()
-                    self._admit_paged(slot, req, shared, keys)
-                else:
-                    self.queue.popleft()
-                    self._admit_dense(slot, req)
+        """Run scheduling rounds until no further admission is possible
+        (a round's prefill may retire requests at admission and free their
+        slots for the next round — the monolith's while-loop semantics)."""
+        while True:
+            admissions, evicted = self.sched.schedule()
+            self._clear_slots(evicted)
+            if not admissions:
+                break
+            if self.paged:
+                self._admit_paged(admissions)
+            else:
+                for adm in admissions:
+                    self._admit_dense(adm)
 
     # -- the decode tick ----------------------------------------------------
 
     def step(self):
-        """One batched decode tick: admit, ONE jitted decode over all slots
-        (each at its own position), retire finished requests."""
+        """One batched decode tick: admit (batched prefill, possibly
+        preempting), secure page appends (possibly preempting), ONE jitted
+        decode over all slots (each at its own position), retire finished
+        requests."""
         self._admit()
-        if all(r is None for r in self.slot_req):
+        if all(r is None for r in self.sched.slot_req):
             return False
         if self.paged:
             # append a page to any slot whose write this tick crosses a page
-            # boundary (infallible: covered by the admission reservation);
-            # one batched table write for all appends this tick
-            grown = []      # (slot, page_index, page_id)
-            for s, req in enumerate(self.slot_req):
-                if req is None:
-                    continue
-                res = self.alloc.ensure_row(s, self._host_pos[s])
-                if res is not None:
-                    grown.append((s, *res))
+            # boundary (strict mode: infallible, covered by the admission
+            # reservation; preempt mode: may evict the lowest-priority
+            # sequence); one batched table write for all appends this tick
+            grown, evicted = self.sched.secure_appends()
+            self._clear_slots(evicted)
             if grown:
                 rows, cols, vals = (jnp.asarray(v, jnp.int32)
                                     for v in zip(*grown))
                 bt = self.cache["block_table"].at[rows, cols].set(vals)
                 self.cache = {**self.cache, "block_table": bt}
+            if all(r is None for r in self.sched.slot_req):
+                return bool(self.queue)
         logits, new_cache = self._decode(self.params, self.cache, self.cur_tok)
         self.decode_calls += 1
         toks = jax.device_get(jnp.argmax(logits, axis=-1))      # (B,) host
         retired = []
-        for s, req in enumerate(self.slot_req):
+        for s, req in enumerate(self.sched.slot_req):
             if req is None:
                 continue
             tok = int(toks[s])
@@ -431,32 +365,27 @@ class ContinuousBatcher:
                     (self.eos is not None and tok == self.eos):
                 req.done = True
                 self.finished.append(req)
-                self.slot_req[s] = None
                 retired.append(s)
         # single vectorized state update: live slots take their new token and
-        # advanced position; idle/finished slots are pinned back to pos 0
-        live = jnp.asarray([r is not None for r in self.slot_req])
+        # advanced position; idle/finished/preempted slots pin back to pos 0
+        self.sched.note_decoded()
+        for s in retired:
+            # drop the retired slot's page references (shared pages survive
+            # until their last reader retires; indexed pages stay cached in
+            # the radix LRU until the pool reclaims them)
+            self.sched.retire(s)
+        live = jnp.asarray([r is not None for r in self.sched.slot_req])
         self.cur_tok = jnp.where(live[:, None],
                                  jnp.asarray(toks, jnp.int32)[:, None],
                                  self.cur_tok)
         self.cache = {**new_cache,
                       "pos": jnp.where(live, new_cache["pos"], 0)}
-        for s in range(self.n_slots):
-            self._host_pos[s] = self._host_pos[s] + 1 \
-                if self.slot_req[s] is not None else 0
-        if self.paged and retired:
-            # drop the retired slots' page references (shared pages survive
-            # until their last reader retires) and reset their table rows
-            for s in retired:
-                self.alloc.release(s)
-            bt = self.cache["block_table"].at[
-                jnp.asarray(retired, jnp.int32)].set(self.alloc.sentinel)
-            self.cache = {**self.cache, "block_table": bt}
+        self._clear_slots(retired)
         return True
 
     def run(self, max_ticks: int = 1000):
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
+        while (self.queue or any(r is not None for r in self.sched.slot_req)) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1
@@ -468,8 +397,9 @@ class ContinuousBatcher:
         """Serving-path memory counters for the bench trajectory. Under
         prefix sharing, LOGICAL bytes are what the slots collectively
         reference (shared pages counted once per reader) while PHYSICAL
-        bytes are what the pool actually stores — their ratio is the
-        dedup win the prefix cache delivers."""
+        bytes are what the pool actually stores for LIVE sequences — their
+        ratio is the dedup win the prefix cache delivers. Retired-but-
+        cached pages (the radix LRU) are reported as `pages_cached`."""
         total = PK.kv_bytes(self.cache)
         stats = {"kv_layout": "paged" if self.paged else "dense",
                  "kv_storage": self.kv_storage,
@@ -477,13 +407,17 @@ class ContinuousBatcher:
                  "kv_bytes_per_slot": total // self.n_slots}
         if self.paged:
             per_page = total // max(self.n_pages, 1)
-            physical, logical = self.alloc.used_count, self.alloc.logical_count
+            physical, logical = self.kv.used_count, self.kv.logical_count
             stats.update(pages_total=self.n_pages,
                          pages_in_use=physical,
                          pages_logical=logical,
-                         pages_shared=self.alloc.shared_count,
+                         pages_shared=self.kv.shared_count,
+                         pages_cached=self.kv.cached_count,
                          kv_bytes_in_use=per_page * physical,
                          kv_bytes_physical=per_page * physical,
                          kv_bytes_logical=per_page * logical,
-                         prefix_hit_rate=self.prefix_hit_rate)
+                         prefix_hit_rate=self.prefix_hit_rate,
+                         radix_pages=self.kv.radix_size,
+                         preemptions=self.sched.preemptions,
+                         recomputed_tokens=self.sched.recomputed_tokens)
         return stats

@@ -1,0 +1,232 @@
+"""KVCacheManager: paged-KV ownership layer of the serving engine.
+
+One of the three engine layers (Scheduler / KVCacheManager / ModelRunner —
+see runtime/__init__.py for the contract). The manager extends the host-side
+``PagedKVAllocator`` bookkeeping (free list, refcounts, per-slot page lists,
+reservations) with the two policies the monolithic batcher could not
+express:
+
+RADIX PREFIX TREE. The exact-chain hash index (``PagedKVAllocator
+.match_prefix`` over chained sha256 digests) is replaced by a radix tree
+over PAGE-GRANULAR TOKEN CHUNKS: each node is one page-size chunk of
+tokens, its path from the root spells the full token prefix, and the node
+pins the physical page holding that chunk's KV. Because a page is exactly
+one BBFP quantisation block, a node's page is bit-identical for every
+request that reaches it, so ``match_tokens`` returns the longest common
+page-aligned prefix of ANY indexed sequence — resident or recently
+retired — not just an exactly re-registered chain. Matching compares raw
+token chunks (no hashing, no collision argument needed) and is O(pages)
+per lookup.
+
+LRU RETENTION. ``release`` no longer frees an indexed page the moment its
+refcount reaches zero: it parks the page (content intact) in an LRU of
+RETIRED pages, still reachable through the radix tree, and only actually
+reclaims it — evicting its node — when ``_take_page`` finds the free list
+empty. A request arriving just after its prefix-mate retired therefore
+still shares the pages (``_revive_page`` lifts them out of the LRU,
+refcount 0 -> 1). Eviction walks the LRU oldest-first and only takes nodes
+with no resident children, so a cached chain is reclaimed leaf-up and an
+active subtree is never stranded (readers hold refcounts on their whole
+path, hence a retired node can never have an active child).
+
+CAPACITY MODES. ``strict_reserve=True`` (default) keeps the monolith's
+contract: admission reserves the worst-case page count so decode appends
+are infallible. ``strict_reserve=False`` is the preemption mode used by
+``Scheduler(preempt=True)``: admission reserves only the prompt's pages
+(the pool can oversubscribe) and ``ensure_row`` may raise ``PoolExhausted``,
+which the scheduler resolves by preempting a running sequence.
+``preempt_release`` registers the victim's full written pages (prompt AND
+generated rows — deterministic greedy KV is canonical for its token
+prefix) before releasing them, so a quick readmission finds most of its
+state still cached instead of recomputing it.
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.runtime import paged_kv as PK
+
+
+class _RadixNode:
+    """One page-size token chunk; the path from the root is the prefix."""
+    __slots__ = ("chunk", "parent", "children", "page_id")
+
+    def __init__(self, chunk, parent, page_id):
+        self.chunk, self.parent, self.page_id = chunk, parent, page_id
+        self.children: dict[tuple, _RadixNode] = {}
+
+
+class KVCacheManager(PK.PagedKVAllocator):
+    """Radix-indexed, LRU-retaining page manager (host-side, no jax)."""
+
+    def __init__(self, n_pages: int, page: int = PK.PAGE_SIZE,
+                 n_slots: int = 4, *, strict_reserve: bool = True,
+                 retain: bool = True):
+        super().__init__(n_pages, page, n_slots)
+        self.strict_reserve = strict_reserve
+        self.retain = retain                    # LRU retention of retired pages
+        self.root = _RadixNode(None, None, None)
+        self._node_of_page: dict[int, _RadixNode] = {}
+        self._lru: collections.OrderedDict[int, _RadixNode] = \
+            collections.OrderedDict()           # retired pages, oldest first
+        self.evictions = 0                      # retired pages reclaimed
+        self.revivals = 0                       # retired pages re-shared
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def cached_count(self) -> int:
+        """Retired pages whose content is still resident (reclaimable)."""
+        return len(self._lru)
+
+    @property
+    def allocatable(self) -> int:
+        """Pages a new allocation can obtain: free + evictable retired."""
+        return len(self.free) + len(self._lru)
+
+    @property
+    def used_count(self) -> int:
+        """ACTIVE pages (refcount >= 1). Retired-but-cached pages are
+        reclaimable cache, not load, and are reported separately."""
+        return self.n_pages - len(self.free) - len(self._lru)
+
+    @property
+    def radix_size(self) -> int:
+        """Indexed pages (= radix tree nodes, root excluded)."""
+        return len(self._node_of_page)
+
+    def can_admit(self, total_rows: int, n_shared: int = 0) -> bool:
+        """Count-only compat API (the engine uses ``can_admit_rows``,
+        which takes the matched chain itself): it cannot know how many of
+        the `n_shared` pages are retired-LRU entries whose revival
+        consumes `allocatable`, so it charges the worst case — every
+        shared page that COULD be cached is."""
+        avail = self.allocatable - min(n_shared, self.cached_count)
+        return avail - self.committed >= \
+            PK.pages_for(total_rows, self.page) - n_shared
+
+    def can_admit_rows(self, prompt_rows: int, total_rows: int,
+                       shared=()) -> bool:
+        """Mode-aware admission check: strict mode charges the worst case
+        plus outstanding reservations (appends stay infallible); relaxed
+        mode charges only the prompt's pages (preemption covers appends).
+        `shared` is the matched page chain itself, not a count: a shared
+        page currently RETIRED (refcount 0) still sits in `allocatable`,
+        and reviving it consumes that slack — it must be charged."""
+        n_cached = sum(1 for pid in shared if self.refcount[pid] == 0)
+        avail = self.allocatable - n_cached
+        if self.strict_reserve:
+            return avail - self.committed >= \
+                PK.pages_for(total_rows, self.page) - len(shared)
+        # relaxed: charge the prompt pages PLUS the page of the first
+        # decode write (row `prompt_rows`) — admitting a sequence that
+        # cannot write a single row before preempting is pure churn
+        rows_chk = min(total_rows, prompt_rows + 1)
+        return avail >= PK.pages_for(rows_chk, self.page) - len(shared)
+
+    # -- page acquisition overrides (LRU retention) ------------------------
+
+    def _take_page(self) -> int:
+        if self.free:
+            return self.free.pop()
+        return self._evict_one()
+
+    def _evict_one(self) -> int:
+        """Reclaim the oldest retired page with no resident children (a
+        cached chain is evicted leaf-up; active subtrees are unreachable
+        here because readers pin their whole path)."""
+        for pid, node in self._lru.items():
+            if not node.children:
+                del self._lru[pid]
+                self._drop_node(node)
+                self.evictions += 1
+                return pid
+        raise PK.PoolExhausted("page pool exhausted (all pages active)")
+
+    def _retire_page(self, pid: int) -> bool:
+        node = self._node_of_page.get(pid)
+        if node is not None and self.retain:
+            self._lru[pid] = node               # park at the MRU end
+            self._lru.move_to_end(pid)
+            return False
+        if node is not None:
+            self._drop_node(node)
+        self.free.append(pid)
+        return True
+
+    def _revive_page(self, pid: int):
+        if self.refcount[pid] == 0:             # retired -> active again
+            assert pid in self._lru, f"page {pid} is not resident"
+            del self._lru[pid]
+            self.refcount[pid] = 1
+            self.revivals += 1
+        else:
+            self.refcount[pid] += 1
+
+    def _drop_node(self, node: _RadixNode):
+        assert not node.children, "evicting a radix node with live children"
+        node.parent.children.pop(node.chunk, None)
+        self._node_of_page.pop(node.page_id, None)
+
+    # -- admission ---------------------------------------------------------
+
+    def _check_admit(self, prompt_rows: int, total_rows: int, shared):
+        """The base allocator's admit() body is reused as-is; only the
+        capacity policy differs (mode-aware, chain-aware)."""
+        assert self.can_admit_rows(prompt_rows, total_rows, shared), \
+            "admit() without can_admit_rows()"
+
+    # -- the radix prefix index --------------------------------------------
+
+    def match_tokens(self, tokens, max_pages: int | None = None) -> list[int]:
+        """Longest indexed page chain for `tokens` (page-granular walk).
+        Callers cap `max_pages` at (len-1)//page so the page holding the
+        last token — whose logits must be recomputed — stays private."""
+        toks = tokens if type(tokens) is list else [int(t) for t in tokens]
+        n = len(toks) // self.page
+        if max_pages is not None:
+            n = min(n, max_pages)
+        node, out = self.root, []
+        for i in range(n):
+            child = node.children.get(
+                tuple(toks[i * self.page:(i + 1) * self.page]))
+            if child is None:
+                break
+            out.append(child.page_id)
+            node = child
+        return out
+
+    def register_tokens(self, tokens, page_ids: list[int]) -> int:
+        """Index `page_ids[i]` under the i-th page chunk of `tokens` (full
+        pages only). Existing nodes win — identical prefixes admitted
+        without matching (prefix cache off mid-flight) keep one canonical
+        page per chunk. Returns the number of newly indexed pages."""
+        toks = tokens if type(tokens) is list else [int(t) for t in tokens]
+        n = min(len(toks) // self.page, len(page_ids))
+        node, new = self.root, 0
+        for i in range(n):
+            chunk = tuple(toks[i * self.page:(i + 1) * self.page])
+            child = node.children.get(chunk)
+            if child is None:
+                pid = page_ids[i]
+                if pid in self._node_of_page:
+                    break                       # page canonical elsewhere
+                child = _RadixNode(chunk, node, pid)
+                node.children[chunk] = child
+                self._node_of_page[pid] = child
+                new += 1
+            node = child
+        return new
+
+    # -- preemption --------------------------------------------------------
+
+    def preempt_release(self, slot: int, tokens) -> list[int]:
+        """Evict a running slot: index its full written pages first (prompt
+        AND generated rows — greedy decode makes the KV canonical for the
+        token prefix), then release. Pages another slot still reads keep
+        their refcount; the victim's own full pages land in the retired LRU
+        so a prompt readmission can skip their recompute if the pool
+        pressure passes before they are reclaimed."""
+        if self.retain:
+            self.register_tokens(tokens, self.pages[slot])
+        return self.release(slot)

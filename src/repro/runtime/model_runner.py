@@ -1,0 +1,180 @@
+"""ModelRunner: compiled-execution layer of the serving engine.
+
+One of the three engine layers (Scheduler / KVCacheManager / ModelRunner —
+see runtime/__init__.py for the contract). The runner owns the params, the
+QuantConfig, and EVERY compiled entry point of the serving path, so the
+other layers stay pure host Python:
+
+  * ``make_decode()`` — the one jitted decode step per tick (KV donated so
+    XLA aliases the pool instead of double-buffering it);
+  * ``dense_prefill`` — the dense-layout reference path: prompt padded to a
+    power-of-two BUCKET, one compilation per bucket (O(log max_len) ladder);
+  * ``batched_chunk_prefill`` — BATCHED MULTI-SLOT incremental chunked
+    prefill over the paged cache: ONE compiled shape
+    ``(prefill_slots, prefill_chunk)`` prefills a chunk for up to
+    `prefill_slots` admissions per step instead of looping requests
+    sequentially. Jobs run in LOCKSTEP on the absolute-offset grid: job j's
+    chunk k executes at step ``ceil(start_j/chunk) + k``, which guarantees
+    that by the time a prefix-sharing follower computes queries at
+    positions >= its shared region, the leader (same batch or already
+    resident) has scattered every shared row — per layer the scatter of all
+    batch rows lands before the gather, so same-step producer rows are
+    visible too, and the schedule is race-free for any chunk/page-size
+    combination. Idle batch rows carry a sentinel block-table row (writes
+    dropped, reads masked) and their outputs are discarded, so a partial
+    burst costs one padded call, not a retrace.
+
+Counters: ``prefill_traces`` (distinct compiled prefill shapes — the
+batched chunk path contributes exactly ONE), ``chunk_prefill_calls``
+(per-request chunk work items, so prefix hits stay measurable as skipped
+chunks), ``prefill_steps`` (batched lockstep steps actually launched —
+the wall-clock admission cost; < chunk_prefill_calls whenever a burst
+actually batched).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+class ModelRunner:
+    def __init__(self, cfg, params, qcfg, *, prefill_chunk: int = 32,
+                 prefill_slots: int = 4, min_prefill_bucket: int = 16):
+        self.cfg, self.params, self.qcfg = cfg, params, qcfg
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.prefill_slots = max(1, prefill_slots)
+        self.min_bucket = max(1, min_prefill_bucket)
+        self._prefill_fns: dict[int, object] = {}   # bucket -> jitted prefill
+        self._chunk_prefill_fn = None   # the ONE batched chunk-prefill shape
+        self.prefill_traces = 0         # distinct prefill shapes compiled
+        self.chunk_prefill_calls = 0    # per-request chunk work items
+        self.prefill_steps = 0          # batched lockstep steps launched
+
+    # -- decode ------------------------------------------------------------
+
+    def make_decode(self):
+        """The jitted decode step. The pre-call cache is never touched
+        after a tick: donate it so XLA aliases the new pool onto the old
+        instead of double-buffering the whole KV store every decode."""
+        cfg, qcfg = self.cfg, self.qcfg
+        return jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
+                       donate_argnums=(1,))
+
+    # -- dense-layout bucketed prefill (reference path) --------------------
+
+    def bucket(self, p_len: int) -> int:
+        """Dense-layout prompt staging length: next power of two >= p_len
+        (floored at min_bucket) — an O(log max_len) shape ladder."""
+        return max(self.min_bucket, 1 << max(p_len - 1, 0).bit_length())
+
+    def dense_prefill(self, prompt: jnp.ndarray):
+        """Pad the prompt to its bucket, run one jitted forward per BUCKET
+        (not per length), read logits at row p_len-1 (the padded tail is
+        causally invisible to real rows). Returns (next-token logits (V,),
+        staged cache of bucket rows)."""
+        p_len = prompt.shape[0]
+        bkt = self.bucket(p_len)
+        fn = self._prefill_fns.get(bkt)
+        if fn is None:
+            mod = M.family_module(self.cfg)
+            cfg, qcfg = self.cfg, self.qcfg
+
+            def run(params, toks):
+                logits, cache, _ = mod.forward(
+                    params, cfg, toks, qcfg,
+                    cache=mod.init_cache(cfg, 1, toks.shape[1]))
+                return logits, cache
+
+            fn = jax.jit(run)
+            self._prefill_fns[bkt] = fn
+            self.prefill_traces += 1
+        toks = jnp.pad(prompt.astype(jnp.int32), (0, bkt - p_len))[None, :]
+        logits, staged = fn(self.params, toks)
+        return logits[0, p_len - 1], staged
+
+    # -- batched multi-slot chunked prefill (paged layout) -----------------
+
+    def _chunk_fn(self):
+        """The single jitted batched chunk-prefill step: (params,
+        {layers[,dense]}, block-table rows (P, max_pages), pos (P,),
+        (P, prefill_chunk) tokens) -> (logits (P, chunk, V), new KV).
+        ONE shape for every prompt length AND burst size <= P — compare
+        the dense ladder's O(log max_len)."""
+        if self._chunk_prefill_fn is None:
+            cfg, qcfg = self.cfg, self.qcfg
+            mod = M.family_module(cfg)
+
+            def run(params, kv, bt_rows, pos, toks):
+                sub = {**kv, "block_table": bt_rows, "pos": pos}
+                logits, new_cache = mod.chunk_prefill(params, cfg, sub, toks, qcfg)
+                return logits, {k: v for k, v in new_cache.items()
+                                if k in ("layers", "dense")}
+
+            # donate the KV pool (arg 1 holds only the pool leaves — the
+            # table rows and pos pass through undonated): step i+1's pool
+            # aliases step i's instead of double-buffering the store
+            self._chunk_prefill_fn = jax.jit(run, donate_argnums=(1,))
+            self.prefill_traces += 1
+        return self._chunk_prefill_fn
+
+    def batched_chunk_prefill(self, cache, jobs, sentinel: int):
+        """Prefill every job — (slot, tokens (n,) int32, start_row,
+        depends) — into its pages through `cache`'s block table, batching
+        up to `prefill_slots` jobs per compiled step. Returns (new cache,
+        {slot: last REAL row's logits (V,)}).
+
+        `depends=True` marks a job whose shared-prefix pages are WRITTEN by
+        another job of the same admission round: it enters the lockstep
+        schedule at ``ceil(start/chunk)`` so its producers stay ahead. A
+        job whose prefix is already resident (earlier round, radix LRU)
+        starts at step 0. Jobs beyond `prefill_slots` run as additional
+        full groups (a later group may freely read pages a finished
+        earlier group wrote). Tail chunks pad to the chunk width; pad rows
+        scatter past the prompt inside the slot's own reservation, stay
+        position-masked, and decode overwrites them."""
+        chunk, P = self.prefill_chunk, self.prefill_slots
+        fn = self._chunk_fn()
+        finals: dict[int, jnp.ndarray] = {}
+        for g in range(0, len(jobs), P):
+            group = jobs[g:g + P]
+            t_act = [-(-start // chunk) if dep else 0
+                     for (_, _, start, dep) in group]
+            n_chunks = [-(-(len(toks) - start) // chunk)
+                        for (_, toks, start, _) in group]
+            for t in range(max(ta + nc for ta, nc in zip(t_act, n_chunks))):
+                tok_blk = np.zeros((P, chunk), np.int32)
+                pos = np.zeros((P,), np.int32)
+                slot_of = np.zeros((P,), np.int32)
+                active = np.zeros((P,), bool)
+                last: dict[int, tuple[int, int]] = {}
+                for j, (slot, toks, start, _) in enumerate(group):
+                    k = t - t_act[j]
+                    if k < 0 or k >= n_chunks[j]:
+                        continue
+                    off = start + k * chunk
+                    real = min(chunk, len(toks) - off)
+                    tok_blk[j, :real] = toks[off:off + real]
+                    pos[j], slot_of[j], active[j] = off, slot, True
+                    if k == n_chunks[j] - 1:
+                        last[j] = (slot, real - 1)
+                if not active.any():
+                    continue            # a hole in the lockstep schedule
+                # idle rows read a sentinel table row: writes dropped, the
+                # garbage gather masked by pos, outputs discarded below
+                bt_rows = jnp.where(jnp.asarray(active)[:, None],
+                                    cache["block_table"][jnp.asarray(slot_of)],
+                                    sentinel)
+                kv = {"layers": cache["layers"]}
+                if "dense" in cache:
+                    kv["dense"] = cache["dense"]
+                logits, new_kv = fn(self.params, kv, bt_rows,
+                                    jnp.asarray(pos), jnp.asarray(tok_blk))
+                cache = {**cache, **new_kv}
+                self.chunk_prefill_calls += int(active.sum())
+                self.prefill_steps += 1
+                for j, (slot, r) in last.items():
+                    finals[slot] = logits[j, r]
+        return cache, finals

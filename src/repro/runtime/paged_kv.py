@@ -22,11 +22,13 @@ with a pool of fixed-size PAGES shared by all slots:
     to the last page, whose rows the per-slot position mask discards.
 
 Prefix cache + copy-on-write contract: every page carries a REFCOUNT and
-full pages are indexed by their page-aligned token prefix (the key for page
-i is the sha256 chain digest of page i's tokens onto page i-1's key, so a
-key identifies the full (i+1)*32-token prefix in O(1) bytes — see
-``ContinuousBatcher._prefix_keys``). A request whose prompt shares a
-32-token-aligned prefix with a
+full pages are indexed by their page-aligned token prefix. This base class
+keeps the original EXACT-CHAIN index (the key for page i is the sha256
+chain digest of page i's tokens onto page i-1's key, so a key identifies
+the full (i+1)*32-token prefix in O(1) bytes); the serving engine uses
+``runtime.kv_manager.KVCacheManager``, which extends this class with a
+RADIX TREE over page-granular token chunks plus LRU retention of retired
+pages. A request whose prompt shares a 32-token-aligned prefix with a
 RESIDENT sequence maps the matching pages into its block table
 (``match_prefix`` -> ``admit(shared=...)``) instead of recomputing and
 re-storing them; because a page is exactly one BBFP quantisation block and
@@ -74,6 +76,13 @@ import jax.numpy as jnp
 from repro.core import bbfp
 
 PAGE_SIZE = bbfp.DEFAULT_BLOCK   # 32 KV rows — quantisation-block aligned
+
+
+class PoolExhausted(RuntimeError):
+    """No physical page is available (free list empty and nothing
+    reclaimable). Never raised under the strict reservation contract —
+    the relaxed-capacity engine mode (runtime/kv_manager.py) catches it
+    and preempts a running sequence instead."""
 
 
 def pages_for(rows: int, page: int = PAGE_SIZE) -> int:
@@ -137,6 +146,25 @@ class PagedKVAllocator:
         """Free pages already promised to live slots' future appends."""
         return sum(max(r - len(p), 0) for r, p in zip(self.reserve, self.pages))
 
+    # -- page acquisition/return seam (KVCacheManager overrides these to
+    #    add LRU retention of retired-but-still-indexed pages) --------------
+
+    def _take_page(self) -> int:
+        """Pop one physical page. Raises PoolExhausted when none is left."""
+        if not self.free:
+            raise PoolExhausted("page pool exhausted")
+        return self.free.pop()
+
+    def _retire_page(self, pid: int) -> bool:
+        """A page just hit refcount zero on release. Returns True when the
+        page went back to the free list (the base allocator always frees;
+        KVCacheManager may instead retain indexed pages in its LRU)."""
+        self.free.append(pid)
+        key = self._page_key.pop(pid, None)
+        if key is not None:
+            self._prefix_index.pop(key, None)
+        return True
+
     def can_admit(self, total_rows: int, n_shared: int = 0) -> bool:
         """Pool covers the request's NEWLY allocated worst case: its total
         page count minus the `n_shared` prefix-cache hits it maps in."""
@@ -169,6 +197,13 @@ class PagedKVAllocator:
             new += 1
         return new
 
+    def _check_admit(self, prompt_rows: int, total_rows: int, shared):
+        """Capacity-policy hook admit() runs before allocating: the base
+        allocator demands the strict worst case; KVCacheManager swaps in
+        its mode-aware check."""
+        assert self.can_admit(total_rows, n_shared=len(shared)), \
+            "admit() without can_admit()"
+
     def admit(self, slot: int, prompt_rows: int, total_rows: int,
               shared: list[int] | tuple = ()) -> list[int]:
         """Reserve `total_rows` worst-case, map in the `shared` prefix pages
@@ -176,18 +211,23 @@ class PagedKVAllocator:
         assert not self.pages[slot], f"slot {slot} already holds pages"
         n_prompt = pages_for(prompt_rows, self.page)
         assert len(shared) <= n_prompt, (len(shared), n_prompt)
-        assert self.can_admit(total_rows, n_shared=len(shared)), \
-            "admit() without can_admit()"
+        self._check_admit(prompt_rows, total_rows, shared)
         self.reserve[slot] = pages_for(total_rows, self.page)
         for pid in shared:
-            assert self.refcount[pid] >= 1, f"shared page {pid} is not resident"
-            self.refcount[pid] += 1
+            self._revive_page(pid)
             self.pages[slot].append(pid)
         for _ in range(n_prompt - len(shared)):
-            pid = self.free.pop()
+            pid = self._take_page()
             self.refcount[pid] = 1
             self.pages[slot].append(pid)
         return list(self.pages[slot])
+
+    def _revive_page(self, pid: int):
+        """Map a shared page into one more block table (refcount++). The
+        base allocator requires the page to be actively held; KVCacheManager
+        also revives refcount-zero pages out of its retired-LRU."""
+        assert self.refcount[pid] >= 1, f"shared page {pid} is not resident"
+        self.refcount[pid] += 1
 
     def ensure_row(self, slot: int, row: int) -> tuple[int, int] | None:
         """Make the page holding `row` exist; returns (slot_page_index,
@@ -198,7 +238,7 @@ class PagedKVAllocator:
             return None
         assert idx == len(self.pages[slot]), (slot, row, self.pages[slot])
         assert idx < self.reserve[slot], f"append past slot {slot} reservation"
-        pid = self.free.pop()      # infallible: covered by `committed`
+        pid = self._take_page()    # infallible under strict reservations
         self.refcount[pid] = 1
         self.pages[slot].append(pid)
         return idx, pid
@@ -209,19 +249,17 @@ class PagedKVAllocator:
         returned (for block-table reset). Shared pages survive until their
         last reader retires — either retire order of a sharing pair leaves
         the pool fully free."""
-        freed = []
+        dropped = []
         for pid in self.pages[slot]:
             self.refcount[pid] -= 1
             assert self.refcount[pid] >= 0, f"page {pid} over-released"
             if self.refcount[pid] == 0:
-                freed.append(pid)
-                key = self._page_key.pop(pid, None)
-                if key is not None:
-                    self._prefix_index.pop(key, None)
+                dropped.append(pid)
         self.pages[slot] = []
-        self.free.extend(reversed(freed))
+        for pid in reversed(dropped):  # keeps the base free-list pop order
+            self._retire_page(pid)
         self.reserve[slot] = 0
-        return freed
+        return dropped
 
 
 def init_block_table(n_slots: int, max_pages: int, sentinel: int) -> jnp.ndarray:

@@ -1,0 +1,266 @@
+"""Scheduler: admission order, seating, and preemption policy of the engine.
+
+One of the three engine layers (Scheduler / KVCacheManager / ModelRunner —
+see runtime/__init__.py for the contract). The scheduler is PURE HOST
+PYTHON: it never touches jax, params, or the device cache, so its whole
+policy surface is unit-testable with a mock runner (tests/test_engine.py).
+It owns:
+
+  * the WAIT QUEUE, kept sorted by rank — ``(priority desc, arrival asc)``;
+    equal-priority traffic is FIFO, and a preempted request re-enters at
+    the position its original arrival earns, not at the back;
+  * SEATING: ``slot_req`` maps decode slots to running requests and
+    ``rows`` mirrors each slot's written-KV height (the facade syncs the
+    device ``cache["pos"]`` from it);
+  * the PREEMPTION POLICY (``preempt=True``; requires a relaxed-capacity
+    ``KVCacheManager``). Two triggers:
+      - ADMISSION-BLOCKED: the queue head outranks a running sequence but
+        the pool cannot admit it -> evict the lowest-ranked running
+        sequence and retry. Because rank falls back to arrival order, plain
+        FIFO traffic never admission-preempts (the head arrived last); a
+        higher ``Request.priority`` or an earlier-arrived readmission does.
+      - APPEND-EXHAUSTED: a decode-time page append finds the pool empty
+        (relaxed mode reserves prompt pages only, so the pool may be
+        oversubscribed) -> evict the lowest-ranked running sequence —
+        possibly the appender itself — until the append succeeds.
+    Eviction releases the victim's pages (shared pages survive via
+    refcounts; indexed pages stay radix-reachable in the manager's retired
+    LRU) and requeues the request with its generated tokens: on readmission
+    the victim's KV is RECOMPUTED by chunk-prefilling
+    ``prompt + out_tokens[:-1]`` (minus whatever prefix the radix tree
+    still holds), and decoding resumes from its last generated token —
+    greedy decode makes the result bit-identical to an uninterrupted run.
+
+The facade (``runtime.batcher.ContinuousBatcher``) drives the tick:
+``schedule()`` -> run the planned admissions through the ModelRunner ->
+``seat``/``retire`` -> ``secure_appends()`` -> decode -> ``note_decoded``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.runtime import paged_kv as PK
+
+
+def kv_rows_needed(p_len: int, max_new: int) -> int:
+    """Worst-case KV rows a request ever occupies. The first generated
+    token comes from prefill and the LAST generated token is never written
+    back, so a request needs prompt + max_new - 1 rows (max_new >= 1 — a
+    request that generates nothing is not a request). The single source of
+    the footprint rule: submit-time validation (batcher) and admission-time
+    reservation (schedule) both use it."""
+    if max_new < 1:
+        raise ValueError(f"max_new must be >= 1, got {max_new}")
+    return p_len + max_new - 1
+
+
+@dataclasses.dataclass
+class Admission:
+    """One planned admission: the facade prefills `tokens[start_row:]` into
+    `page_ids` and then seats (or, for `resume`, re-seats) the request."""
+    slot: int
+    req: object
+    tokens: list                # rows resident after prefill (prompt/resume)
+    page_ids: list
+    n_shared: int               # leading pages served by the radix index
+    start_row: int              # first row chunk-prefill must compute
+    resume: bool                # readmission of a preempted request
+
+
+class Scheduler:
+    """Admission + preemption policy over a KVCacheManager (or None for the
+    dense slab layout, where the per-slot slab is the only capacity)."""
+
+    def __init__(self, kv, n_slots: int, *, page_size: int = PK.PAGE_SIZE,
+                 preempt: bool = False, prefix_cache: bool = True):
+        assert not (preempt and kv is None), "preemption requires paged KV"
+        assert kv is None or not (preempt and kv.strict_reserve), \
+            "preemption requires a relaxed-capacity KVCacheManager"
+        self.kv = kv
+        self.n_slots, self.page = n_slots, page_size
+        self.preempt_enabled = preempt
+        self.prefix_cache = prefix_cache and kv is not None
+        self.queue: collections.deque = collections.deque()
+        self.slot_req: list = [None] * n_slots
+        self.rows: list[int] = [0] * n_slots    # written KV rows per slot
+        self.preemptions = 0
+        self.recomputed_tokens = 0              # rows re-prefilled on readmit
+        self._arrivals = 0
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, req, tokens):
+        """Enqueue `req` with its host-side prompt tokens."""
+        req._tokens = np.asarray(tokens, np.int32)
+        req._arrival = self._arrivals
+        req._resume = None
+        req._toklist = None
+        self._arrivals += 1
+        self._enqueue(req)
+
+    def _host_tokens(self, req) -> list:
+        """The request's resident-token sequence (resume tokens once
+        preempted) as a python int list, cached on the request — a
+        pool-blocked head is re-matched against the radix tree every tick
+        and must not re-convert its whole prompt each time (``submit`` and
+        ``preempt`` invalidate the cache)."""
+        lst = req._toklist
+        if lst is None:
+            src = req._resume if req._resume is not None else req._tokens
+            lst = req._toklist = [int(t) for t in src]
+        return lst
+
+    def _rank(self, req):
+        """Higher tuple = more important. Ties break to earlier arrival."""
+        return (getattr(req, "priority", 0), -req._arrival)
+
+    def _enqueue(self, req):
+        """Insert keeping the queue sorted best-rank-first (stable FIFO for
+        equal priorities; readmissions resume their arrival position)."""
+        i = len(self.queue)
+        while i > 0 and self._rank(self.queue[i - 1]) < self._rank(req):
+            i -= 1
+        self.queue.insert(i, req)
+
+    def _live(self) -> list[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is not None]
+
+    def _lowest_rank_live(self) -> int | None:
+        live = self._live()
+        if not live:
+            return None
+        return min(live, key=lambda s: self._rank(self.slot_req[s]))
+
+    # -- admission ---------------------------------------------------------
+
+    def schedule(self) -> tuple[list[Admission], list[int]]:
+        """Plan this tick's admissions (head-of-line order). Returns
+        (admissions, evicted slots). Paged: pages are allocated and radix-
+        registered here; the facade runs the prefill and seats. Under
+        ``preempt=True`` an admission-blocked head may evict strictly
+        lower-ranked running sequences."""
+        admissions: list[Admission] = []
+        evicted: list[int] = []
+        while self.queue:
+            slot = next((s for s, r in enumerate(self.slot_req)
+                         if r is None), None)
+            if slot is None:
+                break
+            req = self.queue[0]
+            if self.kv is None:                 # dense slab: always admits
+                self.queue.popleft()
+                self.slot_req[slot] = req
+                admissions.append(Admission(slot, req, req._tokens,
+                                            [], 0, 0, False))
+                continue
+            toks = self._host_tokens(req)
+            n = len(toks)
+            total = kv_rows_needed(len(req._tokens), req.max_new)
+            shared = self.kv.match_tokens(toks, (n - 1) // self.page) \
+                if self.prefix_cache else []
+            if not self.kv.can_admit_rows(n, total, shared):
+                victim = self._lowest_rank_live()
+                if self.preempt_enabled and victim is not None and \
+                        self._rank(self.slot_req[victim]) < self._rank(req):
+                    evicted.append(self.preempt(victim))
+                    continue                    # retry the head (re-match)
+                if self.preempt_enabled and victim is None and \
+                        self.kv.used_count == 0:
+                    # nothing is live and the whole pool is reclaimable,
+                    # yet the head still does not fit: it can NEVER admit
+                    # (a preempted sequence that outgrew the pool mid-life)
+                    raise RuntimeError(
+                        f"request {req.rid} can never be admitted: its "
+                        f"resident footprint needs more than the whole "
+                        f"page pool ({self.kv.n_pages} pages) and no eos "
+                        f"arrived before it outgrew it")
+                break                           # head-of-line: wait
+            self.queue.popleft()
+            pids = self.kv.admit(slot, n, total, shared=shared)
+            if self.prefix_cache:
+                self.kv.register_tokens(toks, pids)
+            self.slot_req[slot] = req
+            self.rows[slot] = 0                 # set by seat() after prefill
+            start = len(shared) * self.page
+            resume = req._resume is not None
+            if resume:
+                self.recomputed_tokens += max(0, n - start)
+            admissions.append(Admission(slot, req, toks, pids,
+                                        len(shared), start, resume))
+        return admissions, evicted
+
+    def seat(self, slot: int, n_rows: int):
+        """Prefill done: record the slot's resident KV height."""
+        self.rows[slot] = n_rows
+
+    def retire(self, slot: int):
+        """Release a finished (or prefill-retired) slot."""
+        if self.kv is not None:
+            self.kv.release(slot)
+        self.slot_req[slot] = None
+        self.rows[slot] = 0
+
+    def note_decoded(self):
+        """One decode tick happened: every live slot wrote one KV row."""
+        for s in self._live():
+            self.rows[s] += 1
+
+    # -- preemption --------------------------------------------------------
+
+    def preempt(self, slot: int) -> int:
+        """Evict `slot`: requeue its request with the generated tokens so a
+        readmission recomputes ``prompt + out_tokens[:-1]`` (the last token
+        is not yet in KV — it becomes the resumed ``cur_tok``)."""
+        req = self.slot_req[slot]
+        assert req is not None and req.out_tokens, "preempting an empty slot"
+        resume = np.concatenate(
+            [req._tokens, np.asarray(req.out_tokens[:-1], np.int32)])
+        assert len(resume) == self.rows[slot], (len(resume), self.rows[slot])
+        req._resume = resume
+        req._toklist = None            # the resident-token cache is stale
+        if self.kv is not None:
+            self.kv.preempt_release(slot, resume)
+        self.slot_req[slot] = None
+        self.rows[slot] = 0
+        self.preemptions += 1
+        self._enqueue(req)
+        return slot
+
+    def secure_appends(self) -> tuple[list[tuple], list[int]]:
+        """Pre-decode page appends for every live slot, best rank first.
+        Strict mode never fails (reservation invariant). Relaxed mode
+        preempts the lowest-ranked live sequence on PoolExhausted — the
+        appender itself when it ranks lowest — until the append lands.
+        Returns (grown [(slot, page_index, page_id)], evicted slots)."""
+        grown: list[tuple] = []
+        evicted: list[int] = []
+        order = sorted(self._live(),
+                       key=lambda s: self._rank(self.slot_req[s]),
+                       reverse=True)
+        for slot in order:
+            if self.slot_req[slot] is None:
+                continue                        # evicted by an earlier append
+            while True:
+                try:
+                    res = self.kv.ensure_row(slot, self.rows[slot])
+                    if res is not None:
+                        grown.append((slot, *res))
+                    break
+                except PK.PoolExhausted:
+                    if not self.preempt_enabled:
+                        raise
+                    victim = self._lowest_rank_live()
+                    if victim == slot and len(self._live()) == 1:
+                        raise RuntimeError(
+                            f"request {self.slot_req[slot].rid} cannot make "
+                            f"progress: it holds the whole page pool "
+                            f"({self.kv.n_pages} pages) and still needs to "
+                            f"append — its worst case does not fit the pool "
+                            f"and no eos arrived") from None
+                    evicted.append(self.preempt(victim))
+                    if victim == slot:
+                        break                   # the appender was the victim
+        return grown, evicted

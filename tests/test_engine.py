@@ -1,0 +1,333 @@
+"""Engine layering: Scheduler policy (mock runner), batched multi-slot
+chunked prefill, and preemption + recompute end-to-end.
+
+Acceptance criteria of the engine split (Scheduler / KVCacheManager /
+ModelRunner behind the ContinuousBatcher façade):
+  * the Scheduler is pure host Python — its whole admission/preemption
+    policy runs here against a MOCK runner (no jax, no params);
+  * batched multi-slot chunked prefill keeps ONE compiled prefill shape
+    while running a multi-request burst in max-chunks lockstep steps
+    instead of sum-of-chunks sequential calls — and stays token-identical
+    to sequential decoding;
+  * an oversubscribed page pool completes every request via preemption +
+    recompute, bit-exact vs an unconstrained run, with shared pages
+    surviving the eviction of one of their readers (refcount > 0);
+  * a request the strict batcher rejects at submit (worst case > pool)
+    is accepted under preempt=True and completes when eos lands early.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import paged_kv as PK
+from repro.runtime.kv_manager import KVCacheManager
+from repro.runtime.scheduler import Scheduler
+
+
+class FakeReq:
+    """Host-only request for mock-runner scheduler tests (no jax arrays)."""
+
+    def __init__(self, rid, n_prompt, max_new, priority=0):
+        self.rid = rid
+        self.prompt = np.arange(n_prompt, dtype=np.int32) + 100 * rid
+        self.max_new = max_new
+        self.priority = priority
+        self.out_tokens: list[int] = []
+        self.done = False
+
+
+class MockRunner:
+    """Stand-in execution layer: 'prefills' and 'decodes' deterministic
+    tokens with no model, so the tick protocol (schedule -> seat ->
+    secure_appends -> decode -> note_decoded/retire) runs at full speed
+    and the Scheduler's policy is observable in isolation."""
+
+    def __init__(self):
+        self.prefills = []                   # (rid, start_row, n_rows)
+
+    def prefill(self, adm) -> int:
+        self.prefills.append((adm.req.rid, adm.start_row, len(adm.tokens)))
+        return 1000 + adm.req.rid
+
+    def decode(self, req) -> int:
+        return 2000 + req.rid * 10 + len(req.out_tokens)
+
+
+def drive_tick(sched: Scheduler, runner: MockRunner, finished: list):
+    """One façade tick against the mock runner."""
+    admissions, _ = sched.schedule()
+    for adm in admissions:
+        if adm.resume:
+            sched.seat(adm.slot, len(adm.tokens))
+            continue
+        tok = runner.prefill(adm)
+        adm.req.out_tokens.append(tok)
+        if len(adm.req.out_tokens) >= adm.req.max_new:
+            adm.req.done = True
+            finished.append(adm.req)
+            sched.retire(adm.slot)
+        else:
+            sched.seat(adm.slot, len(adm.tokens))
+    if not sched._live():
+        return
+    sched.secure_appends()
+    retired = []
+    for s in sched._live():
+        req = sched.slot_req[s]
+        req.out_tokens.append(runner.decode(req))
+        if len(req.out_tokens) >= req.max_new:
+            req.done = True
+            finished.append(req)
+            retired.append(s)
+    sched.note_decoded()
+    for s in retired:
+        sched.retire(s)
+
+
+def drive(sched, runner, max_ticks=300):
+    finished = []
+    ticks = 0
+    while (sched.queue or sched._live()) and ticks < max_ticks:
+        drive_tick(sched, runner, finished)
+        ticks += 1
+    return finished, ticks
+
+
+def _engine(n_pages, n_slots, *, page=4, preempt=True, prefix=True):
+    kv = KVCacheManager(n_pages, page, n_slots,
+                        strict_reserve=not preempt, retain=prefix)
+    return kv, Scheduler(kv, n_slots, page_size=page, preempt=preempt,
+                         prefix_cache=prefix)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy with a mock runner (pure host, no jax)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fifo_admission_and_retire():
+    kv, sched = _engine(n_pages=16, n_slots=2, preempt=False)
+    runner = MockRunner()
+    for i in range(4):
+        req = FakeReq(i, n_prompt=6, max_new=3)
+        sched.submit(req, req.prompt)
+    finished, _ = drive(sched, runner)
+    assert [r.rid for r in finished] == [0, 1, 2, 3]     # FIFO order
+    assert all(len(r.out_tokens) == 3 for r in finished)
+    assert kv.used_count == 0                            # everything drained
+    assert [p[0] for p in runner.prefills] == [0, 1, 2, 3]
+
+
+def test_scheduler_append_exhaustion_preempts_latest_arrival():
+    """Relaxed capacity oversubscribes the pool: admission charges only
+    prompt pages, so when both slots need a decode append and the pool is
+    dry the LATEST-arrived sequence is evicted, requeued with its generated
+    tokens, and readmitted (recompute) once pages free up."""
+    # page=4; prompts of 7 rows = 2 pages each; pool of 4 admits both.
+    # max_new=8 -> rows grow to 14 -> each needs a 3rd and 4th page.
+    kv, sched = _engine(n_pages=4, n_slots=2)
+    runner = MockRunner()
+    a, b = FakeReq(0, 7, 8), FakeReq(1, 7, 8)
+    sched.submit(a, a.prompt)
+    sched.submit(b, b.prompt)
+    finished, _ = drive(sched, runner)
+    assert {r.rid for r in finished} == {0, 1}
+    assert all(len(r.out_tokens) == 8 for r in finished)
+    assert sched.preemptions >= 1
+    assert sched.recomputed_tokens > 0
+    # the victim was the later arrival (rid 1): rid 0 never re-prefilled
+    starts = [(rid, start) for rid, start, _ in runner.prefills]
+    assert starts[0] == (0, 0) and starts[1] == (1, 0)
+    assert all(rid == 1 for rid, _ in starts[2:] if _ is not None)
+    assert kv.used_count == 0
+
+
+def test_scheduler_priority_preempts_admission_blocked_head():
+    """A higher-priority head evicts the lowest-ranked running sequence
+    when the pool cannot admit it; equal-priority FIFO traffic never
+    admission-preempts (the head arrived last)."""
+    kv, sched = _engine(n_pages=4, n_slots=2)
+    runner = MockRunner()
+    lo = FakeReq(0, 14, 4)                     # 4 pages: fills the pool
+    sched.submit(lo, lo.prompt)
+    drive_tick(sched, runner, [])
+    assert sched.slot_req[0] is lo
+    # same-priority head waits (no admission preemption for FIFO traffic)
+    peer = FakeReq(1, 8, 4)
+    sched.submit(peer, peer.prompt)
+    admissions, evicted = sched.schedule()
+    assert admissions == [] and evicted == [] and sched.slot_req[0] is lo
+    # a higher-priority head evicts the running low-priority sequence
+    hi = FakeReq(2, 8, 4, priority=5)
+    sched.submit(hi, hi.prompt)
+    admissions, evicted = sched.schedule()
+    assert evicted == [0] and sched.preemptions == 1
+    assert [a.req.rid for a in admissions] == [2]
+    assert lo._resume is not None              # requeued for recompute
+    # the victim re-enters the queue ahead of the equal-priority peer
+    # that arrived after it
+    assert [r.rid for r in sched.queue] == [0, 1]
+
+
+def test_preempted_resume_tokens_are_prompt_plus_generated():
+    """The readmission prompt is prompt + out_tokens[:-1]: the last token
+    was never written to KV and becomes the resumed cur_tok."""
+    kv, sched = _engine(n_pages=4, n_slots=1, page=4)
+    runner = MockRunner()
+    req = FakeReq(7, 6, 5)
+    sched.submit(req, req.prompt)
+    finished = []
+    drive_tick(sched, runner, finished)        # prefill + first decode
+    drive_tick(sched, runner, finished)        # second decode
+    assert len(req.out_tokens) == 3
+    sched.preempt(0)
+    assert req._resume.tolist() == \
+        req.prompt.tolist() + req.out_tokens[:-1]
+    assert len(req._resume) == 6 + 3 - 1
+    finished, _ = drive(sched, runner)
+    assert len(finished) == 1 and len(req.out_tokens) == 5
+
+
+def test_sole_runner_that_cannot_append_fails_loudly():
+    """preempt mode admits requests whose worst case exceeds the pool (an
+    early eos may complete them); if no eos arrives the engine must fail
+    the no-progress case instead of preempt-thrashing forever."""
+    kv, sched = _engine(n_pages=2, n_slots=1, page=4)
+    runner = MockRunner()
+    req = FakeReq(0, 4, 9)                     # worst case 12 rows = 3 pages
+    sched.submit(req, req.prompt)              # accepted: prompt+1 fits
+    with pytest.raises(RuntimeError,
+                       match="cannot make progress|can never be admitted"):
+        drive(sched, runner)
+
+
+def test_scheduler_rejects_preempt_with_strict_kv():
+    kv = KVCacheManager(4, 4, 1, strict_reserve=True)
+    with pytest.raises(AssertionError, match="relaxed-capacity"):
+        Scheduler(kv, 1, preempt=True)
+    with pytest.raises(AssertionError, match="paged"):
+        Scheduler(None, 1, preempt=True)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-slot chunked prefill + preemption, end-to-end (real model)
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.serve import generate  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.quant import linear as Q  # noqa: E402
+from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: E402
+
+KEY = jax.random.PRNGKey(31)
+PAGE = PK.PAGE_SIZE
+
+
+def test_batched_prefill_compresses_a_burst():
+    """A 4-request burst admits through lockstep batched prefill: ONE
+    compiled shape, per-request chunk work unchanged, but the number of
+    compiled-call launches is the max chunk count, not the sum — and
+    tokens stay identical to sequential decoding."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    lens = [40, 50, 60, 70]                    # 2..3 chunks each at chunk=32
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, i), (n,), 0,
+                                  cfg.vocab) for i, n in enumerate(lens)]
+    gen = 4
+    refs = [generate(cfg, params, p[None, :], Q.FP, gen_len=gen)[0].tolist()
+            for p in prompts]
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=4, max_len=128)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    assert bat.step()                          # the whole burst admits here
+    per_req = [-(-n // 32) for n in lens]      # ceil(p_len / chunk)
+    assert bat.chunk_prefill_calls == sum(per_req)      # work items kept
+    assert bat.prefill_steps == max(per_req)   # but launched in lockstep
+    assert bat.prefill_steps < bat.chunk_prefill_calls  # burst really batched
+    assert bat.prefill_traces == 1             # ONE compiled prefill shape
+    finished, _ = bat.run()
+    got = {r.rid: r.out_tokens[:gen] for r in finished}
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, (i, got[i], ref)
+
+
+@pytest.mark.parametrize("storage", ["fp", "packed"])
+def test_oversubscribed_pool_completes_via_preemption(storage):
+    """The tentpole capability: a pool holding fewer pages than the
+    workload's worst case completes EVERY request via preemption +
+    recompute, token-identical to an unconstrained run, and pages shared
+    with a preempted reader survive its eviction (refcount > 0)."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    shared = jax.random.randint(jax.random.fold_in(KEY, 99), (PAGE,), 0,
+                                cfg.vocab)
+    prompts = [jnp.concatenate([shared, jax.random.randint(
+        jax.random.fold_in(KEY, i), (n,), 0, cfg.vocab)])
+        for i, n in enumerate([7, 11, 15])]    # 39..47 rows: 2 pages each
+    gen = 30                                   # grows every request past 64
+    outs = {}
+    for n_pages in (None, 6):                  # unconstrained, then starved
+        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=3, max_len=128,
+                                n_pages=n_pages, kv_storage=storage,
+                                preempt=True)
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=gen))
+        shared_alive = []
+        ticks = 0
+        while (bat.queue or any(r is not None for r in bat.slot_req)) \
+                and ticks < 400:
+            bat.step()
+            ticks += 1
+            if n_pages == 6 and bat.preemptions:
+                # the shared prefix page must survive its readers' eviction
+                live = [s for s, r in enumerate(bat.slot_req)
+                        if r is not None]
+                for s in live:
+                    pid = bat.alloc.pages[s][0]
+                    shared_alive.append(bat.alloc.refcount[pid] >= 1)
+        assert len(bat.finished) == 3
+        assert all(len(r.out_tokens) == gen for r in bat.finished)
+        outs[n_pages] = {r.rid: r.out_tokens for r in bat.finished}
+        if n_pages == 6:
+            assert bat.preemptions >= 1, "starved pool must have preempted"
+            assert bat.recomputed_tokens > 0
+            assert all(shared_alive) and shared_alive
+            assert bat.kv_stats()["preemptions"] == bat.preemptions
+        assert bat.alloc.used_count == 0       # fully drained either way
+    assert outs[None] == outs[6], storage      # preemption is bit-exact
+
+
+def test_strict_submit_reject_completes_under_preempt():
+    """A request whose worst case exceeds the whole pool is rejected at
+    submit by the strict batcher; preempt mode admits it optimistically
+    and completes it bit-exact when eos lands before the pool runs out."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prompt = jax.random.randint(KEY, (8,), 0, cfg.vocab)
+    probe = generate(cfg, params, prompt[None, :], Q.FP, gen_len=12)[0]
+    eos = int(probe[6])                        # greedy decode WILL emit this
+    big = 120                                  # worst case 127 rows = 4 pages
+    strict = ContinuousBatcher(cfg, params, Q.FP, n_slots=1, max_len=128,
+                               n_pages=2)
+    with pytest.raises(ValueError, match="page pool budget"):
+        strict.submit(Request(rid=0, prompt=prompt, max_new=big))
+    ref = ContinuousBatcher(cfg, params, Q.FP, n_slots=1, max_len=128,
+                            eos_id=eos)        # unconstrained reference
+    ref.submit(Request(rid=0, prompt=prompt, max_new=big))
+    ref_out = ref.run()[0][0].out_tokens
+    assert ref_out[-1] == eos and len(ref_out) <= 8   # eos really fired
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=1, max_len=128,
+                            n_pages=2, eos_id=eos, preempt=True)
+    bat.submit(Request(rid=0, prompt=prompt, max_new=big))   # accepted now
+    finished, _ = bat.run()
+    assert len(finished) == 1
+    assert finished[0].out_tokens == ref_out   # bit-exact completion
+
+
+def test_preempt_requires_paged_layout():
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatcher(cfg, params, Q.FP, kv_layout="dense", preempt=True)

@@ -1,0 +1,289 @@
+"""Radix prefix tree + LRU retention (runtime/kv_manager.KVCacheManager).
+
+Acceptance criteria of the radix upgrade over the exact-chain hash index:
+  * longest-common-prefix matches BEAT the old exact-chain index on
+    divergent-suffix workloads — in particular, a sequence that already
+    RETIRED still serves its prefix pages (the old index evicted the entry
+    the moment the pages were freed);
+  * refcount / LRU / radix invariants hold under random admit / decode /
+    retire / preempt schedules (hypothesis property sweep with the same
+    deterministic fallback as test_bbfp_format.py / test_prefix_cache.py);
+  * preempted-then-readmitted sequences decode token-identically to
+    uninterrupted runs (fp AND packed GQA) — recompute plus whatever the
+    LRU still holds is bit-exact because pages are whole BBFP quant blocks.
+"""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    def seeds(n):
+        return settings(max_examples=n, deadline=None)(
+            given(st.integers(0, 2**32 - 1)))
+except ModuleNotFoundError:
+    # bare containers (no network) fall back to a deterministic seed sweep
+    def seeds(n):
+        return pytest.mark.parametrize("seed", [13 * i + 5 for i in range(n)])
+
+from repro.runtime import paged_kv as PK
+from repro.runtime.kv_manager import KVCacheManager
+
+
+def _chain_keys(tokens, page):
+    """Exact-chain keys as the PRE-radix index derived them."""
+    return [tuple(tokens[:(i + 1) * page]) for i in range(len(tokens) // page)]
+
+
+# ---------------------------------------------------------------------------
+# radix vs the old exact-chain index (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_radix_beats_exact_chain_after_retirement():
+    """The old index dropped a prefix the moment its pages hit refcount 0;
+    the radix LRU keeps them resident until the pool actually reclaims
+    them, so a follower arriving AFTER its prefix-mate retired still hits."""
+    page, toks = 4, list(range(12))
+    old = PK.PagedKVAllocator(n_pages=8, page=page, n_slots=2)
+    pids = old.admit(0, 12, 12)
+    old.register_prefix(_chain_keys(toks, page), pids)
+    old.release(0)                              # retire -> index evicted
+    assert old.match_prefix(_chain_keys(toks, page)) == []
+
+    kv = KVCacheManager(n_pages=8, page=page, n_slots=2)
+    pids = kv.admit(0, 12, 12)
+    kv.register_tokens(toks, pids)
+    kv.release(0)                               # retire -> pages CACHED
+    assert kv.used_count == 0 and kv.cached_count == 3
+    hit = kv.match_tokens(toks + [77, 78, 79, 80], max_pages=3)
+    assert hit == pids                          # retired prefix still serves
+    got = kv.admit(1, 16, 16, shared=hit)       # revival: cached -> active
+    assert got[:3] == pids and kv.revivals == 3
+    assert kv.cached_count == 0 and [kv.refcount[p] for p in pids] == [1, 1, 1]
+
+
+def test_radix_longest_common_prefix_on_divergent_suffixes():
+    """Divergent suffixes share exactly their common page-aligned head,
+    and each divergent branch is indexed under its own radix path."""
+    page = 4
+    kv = KVCacheManager(n_pages=12, page=page, n_slots=3)
+    a = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]          # pages (0..3), (4..7)
+    b = [0, 1, 2, 3, 9, 9, 9, 9, 1, 2]          # diverges at page 1
+    pa = kv.admit(0, len(a), len(a))
+    kv.register_tokens(a, pa)
+    hit_b = kv.match_tokens(b, max_pages=2)
+    assert hit_b == pa[:1]                      # common head only
+    pb = kv.admit(1, len(b), len(b), shared=hit_b)
+    kv.register_tokens(b, pb)
+    assert kv.refcount[pa[0]] == 2 and pb[0] == pa[0]
+    # a third prompt following b's branch matches b's chain, not a's
+    c = b[:8] + [5, 5, 5]
+    assert kv.match_tokens(c, max_pages=2) == pb[:2]
+    assert kv.radix_size == 3                   # shared head + 2 branches
+
+
+def test_lru_evicts_leaf_up_and_only_when_needed():
+    """Zero-refcount entries stay indexed until the pool must reclaim
+    them; eviction takes the oldest CHILDLESS node so a cached chain is
+    reclaimed leaf-up and a revived prefix is never left parentless."""
+    page = 4
+    kv = KVCacheManager(n_pages=4, page=page, n_slots=2)
+    toks = list(range(12))
+    pids = kv.admit(0, 12, 12)                  # 3 pages
+    kv.register_tokens(toks, pids)
+    kv.release(0)
+    assert kv.cached_count == 3 and kv.evictions == 0
+    # one free page left: a 2-page admission must evict exactly one cached
+    # page, and it must be the LEAF of the chain (deepest page), keeping
+    # the head of the chain matchable
+    other = [50, 51, 52, 53, 54, 55]
+    got = kv.admit(1, len(other), len(other))
+    assert kv.evictions == 1
+    assert kv.match_tokens(toks, max_pages=3) == pids[:2]   # leaf evicted
+    assert pids[2] in got                        # the reclaimed page
+    kv.release(1)
+    # draining everything leaves free + cached partitioning the pool
+    assert kv.used_count == 0
+    assert len(kv.free) + kv.cached_count == kv.n_pages
+
+
+def test_retention_disabled_frees_immediately():
+    kv = KVCacheManager(n_pages=4, page=4, n_slots=1, retain=False)
+    pids = kv.admit(0, 8, 8)
+    kv.register_tokens(list(range(8)), pids)
+    kv.release(0)
+    assert kv.cached_count == 0 and kv.free_count == 4
+    assert kv.match_tokens(list(range(8)), max_pages=2) == []
+    assert kv.radix_size == 0
+
+
+# ---------------------------------------------------------------------------
+# property sweep: random admit/decode/retire/preempt schedules
+# ---------------------------------------------------------------------------
+
+@seeds(25)
+def test_radix_invariants_random_schedules(seed):
+    """Random schedules over a relaxed-capacity manager (the preemption
+    configuration) keep the books consistent: refcounts match the slot
+    page lists, free/cached/active partition the pool, every radix node
+    points at a resident page, active pages pin their whole radix path,
+    and draining every slot returns the pool to free+cached."""
+    rng = random.Random(seed)
+    page, n_slots = 4, 3
+    n_pages = rng.randrange(6, 14)
+    kv = KVCacheManager(n_pages, page, n_slots, strict_reserve=False)
+    live = {}                                   # slot -> [tokens, rows, total]
+
+    def walk(node, out):
+        for child in node.children.values():
+            out.append(child)
+            walk(child, out)
+        return out
+
+    def check():
+        held = [p for ps in kv.pages for p in ps]
+        assert kv.used_count == len(set(held))
+        assert sorted(set(kv.free)) == sorted(kv.free)
+        assert not set(kv.free) & set(held)
+        assert not set(kv.free) & set(kv._lru)
+        assert not set(kv._lru) & set(held)
+        for pid in range(n_pages):
+            assert kv.refcount[pid] == held.count(pid)
+            assert (pid in kv.free) == (kv.refcount[pid] == 0
+                                        and pid not in kv._lru)
+        nodes = walk(kv.root, [])
+        assert len(nodes) == len(kv._node_of_page) == kv.radix_size
+        for node in nodes:
+            pid = node.page_id
+            assert kv._node_of_page[pid] is node
+            assert pid not in kv.free            # indexed => resident
+            if kv.refcount[pid] >= 1:            # active pins its path
+                anc = node.parent
+                while anc is not kv.root:
+                    assert kv.refcount[anc.page_id] >= 1, "stranded subtree"
+                    anc = anc.parent
+        for pid, node in kv._lru.items():
+            assert kv.refcount[pid] == 0 and kv._node_of_page[pid] is node
+        assert kv.allocatable == len(kv.free) + kv.cached_count
+        assert kv.used_count + kv.cached_count + len(kv.free) == n_pages
+
+    for _ in range(60):
+        op = rng.randrange(4)
+        free_slots = [s for s in range(n_slots) if s not in live]
+        if op == 0 and free_slots:
+            slot = rng.choice(free_slots)
+            p_len = rng.randrange(1, 3 * page + 2)
+            toks = [rng.randrange(3) for _ in range(p_len)]   # tiny alphabet
+            max_new = rng.randrange(1, page + 2)
+            total = p_len + max_new - 1
+            hit = kv.match_tokens(toks, (p_len - 1) // page)
+            if kv.can_admit_rows(p_len, total, hit):
+                pids = kv.admit(slot, p_len, total, shared=hit)
+                kv.register_tokens(toks, pids)
+                live[slot] = [toks, p_len, total]
+        elif op == 1 and live:                   # decode append
+            slot = rng.choice(list(live))
+            toks, rows, total = live[slot]
+            if rows < total:
+                try:
+                    kv.ensure_row(slot, rows)
+                    toks.append(rng.randrange(3))
+                    live[slot][1] = rows + 1
+                except PK.PoolExhausted:
+                    pass                         # engine would preempt here
+        elif op == 2 and live:                   # retire
+            kv.release(rng.choice(list(live)))
+            live = {s: v for s, v in live.items() if kv.pages[s]}
+        elif op == 3 and live:                   # preempt (register+release)
+            slot = rng.choice(list(live))
+            toks, rows, _ = live[slot]
+            kv.preempt_release(slot, toks[:rows])
+            del live[slot]
+        check()
+    for slot in list(live):
+        kv.release(slot)
+        check()
+    assert kv.used_count == 0
+    assert len(kv.free) + kv.cached_count == n_pages
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: retired-prefix reuse + preempt/readmit parity (real model)
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.serve import generate  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.quant import linear as Q  # noqa: E402
+from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: E402
+
+KEY = jax.random.PRNGKey(41)
+PAGE = PK.PAGE_SIZE
+
+
+def test_follower_after_retirement_still_hits_and_matches():
+    """A follower submitted AFTER its prefix-mate fully retired still maps
+    the shared pages out of the radix LRU (the pre-radix engine recomputed
+    and re-stored them) and decodes token-identically to sequential."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    prefix = jax.random.randint(jax.random.fold_in(KEY, 1), (2 * PAGE,), 0,
+                                cfg.vocab)
+    lead = jnp.concatenate([prefix, jax.random.randint(
+        jax.random.fold_in(KEY, 2), (5,), 0, cfg.vocab)])
+    follow = jnp.concatenate([prefix, jax.random.randint(
+        jax.random.fold_in(KEY, 3), (9,), 0, cfg.vocab)])
+    gen = 4
+    ref = generate(cfg, params, follow[None, :], Q.FP, gen_len=gen)[0].tolist()
+    bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=2, max_len=128)
+    bat.submit(Request(rid=0, prompt=lead, max_new=gen))
+    finished, _ = bat.run()                     # leader fully retires...
+    assert len(finished) == 1 and bat.alloc.used_count == 0
+    assert bat.alloc.cached_count >= 2          # ...but its pages remain
+    bat.submit(Request(rid=1, prompt=follow, max_new=gen))
+    hits_before = bat.prefix_hit_pages
+    finished, _ = bat.run()
+    assert bat.prefix_hit_pages - hits_before == 2   # retired pages served
+    assert bat.alloc.revivals >= 2
+    got = next(r for r in finished if r.rid == 1).out_tokens[:gen]
+    assert got == ref
+
+
+@pytest.mark.parametrize("storage", ["fp", "packed"])
+def test_preempted_then_readmitted_matches_uninterrupted(storage):
+    """Force a mid-flight preemption of a specific request and compare with
+    the identical engine run without the forced eviction: recompute-on-
+    readmit (plus surviving radix pages) must be token-identical for fp
+    AND packed GQA pools."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, 10 + i), (n,), 0,
+                                  cfg.vocab) for i, n in enumerate([36, 44])]
+    gen = 8
+    outs = {}
+    for force in (False, True):
+        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=96,
+                                kv_storage=storage, preempt=True)
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=gen))
+        ticks = 0
+        while (bat.queue or any(r is not None for r in bat.slot_req)) \
+                and ticks < 100:
+            bat.step()
+            ticks += 1
+            if force and ticks == 3:
+                victim = next(s for s, r in enumerate(bat.slot_req)
+                              if r is not None and r.rid == 1)
+                bat.sched.preempt(victim)
+                bat._clear_slots([victim])
+        assert len(bat.finished) == 2
+        outs[force] = {r.rid: r.out_tokens for r in bat.finished}
+        if force:
+            assert bat.preemptions == 1 and bat.recomputed_tokens > 0
+    assert outs[True] == outs[False], storage
