@@ -1,0 +1,188 @@
+"""Deterministic regression gates over BENCH_*.json artifacts.
+
+This script owns EVERY bench gate that CI asserts (previously an inline
+heredoc in .github/workflows/ci.yml); it runs identically in CI and
+locally:
+
+  PYTHONPATH=src python benchmarks/check_bench_gates.py \
+      --json BENCH_kernel_abc.json --json BENCH_serving_abc.json
+
+Every gate reads only DETERMINISTIC derived counters (byte accounting,
+page dedup ratios, host-side engine counters, token-parity booleans) —
+never wall-clock timings — so a gate failure is always a real
+regression, not shared-runner noise.
+
+Gates are keyed by row presence: a gate runs iff its rows appear in the
+artifact, so one script checks both the kernel bench and the serving
+bench. A file that triggers NO gate fails loudly (schema drift must not
+silently disable gating).
+
+Stdlib-only on purpose: the gate-logic unit tests (tests/
+test_bench_gates.py) exercise synthetic pass/fail fixtures without
+importing jax or the repro package.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+class GateFailure(AssertionError):
+    """A deterministic bench invariant regressed."""
+
+
+def _require(cond: bool, msg: str):
+    if not cond:
+        raise GateFailure(msg)
+
+
+def _derived(s: str) -> dict:
+    """The derived column's ``k=v`` tokens (same format benchmarks.common
+    emits; free-text tokens are ignored)."""
+    return dict(kv.split("=", 1) for kv in s.split() if "=" in kv)
+
+
+def load_rows(path: str):
+    """-> (values: name->us_per_call, derived: name->{k: v})."""
+    with open(path) as f:
+        payload = json.load(f)
+    vals = {r["name"]: r["us_per_call"] for r in payload["rows"]}
+    der = {r["name"]: _derived(r.get("derived", "")) for r in payload["rows"]}
+    return vals, der
+
+
+# -- kernel-bench gates ------------------------------------------------------
+
+def gate_packed_kv(vals, der):
+    """Packed-KV byte accounting: int8 codes + int8 per-32-block exponents
+    vs bf16 pages floors at 8.25/16 ~ 0.52 (0.53 at the smoke head_dim);
+    the packing must never silently regress past 0.55x of the fp store."""
+    fp = vals["serve/kv_bytes_per_slot_paged"]
+    pk = vals["serve/kv_bytes_per_slot_packed"]
+    ratio = pk / fp
+    print(f"  packed/fp KV bytes per slot: {pk:.0f}/{fp:.0f} = {ratio:.4f}")
+    _require(ratio <= 0.55, f"packed KV regressed: {ratio:.4f} > 0.55")
+
+
+def gate_prefix_cache(vals, der):
+    """A 4-request workload sharing a 64-token (2-page) prefix must store
+    each shared page exactly once — 3 followers x 2 pages deduped out of
+    12 logical prompt pages puts physical/logical at 50% (no-sharing
+    baseline = 100) and the page hit rate at 50%."""
+    dedup = vals["serve/kv_bytes_logical_vs_physical"]
+    hits = vals["serve/prefix_hit_rate"]
+    print(f"  prefix cache: physical/logical = {dedup:.1f}%, "
+          f"hit rate = {hits:.1f}%")
+    _require(dedup <= 60.0,
+             f"shared pages not deduped: physical/logical {dedup:.1f}% > 60%")
+    _require(hits >= 45.0, f"prefix hit rate regressed: {hits:.1f}% < 45%")
+
+
+def gate_batched_prefill(vals, der):
+    """Batched multi-slot chunked prefill must keep ONE compiled prefill
+    shape while launching fewer lockstep steps than per-request chunks."""
+    bp = der["serve/batched_prefill_tick"]
+    print(f"  batched prefill: steps={bp['steps']} chunks={bp['chunks']} "
+          f"traces={bp['traces']}")
+    _require(int(bp["traces"]) == 1,
+             f"batched prefill retraced: {bp['traces']} shapes")
+    _require(int(bp["steps"]) < int(bp["chunks"]),
+             f"burst not batched: {bp['steps']} steps for "
+             f"{bp['chunks']} chunks")
+
+
+def gate_preemption(vals, der):
+    """The oversubscribed 6-page workload must complete every request with
+    at least one preemption (recompute-on-readmit actually exercised)."""
+    pr = der["serve/preemption_recovery_tick"]
+    print(f"  preemption recovery: preempted={pr['preempted']} "
+          f"completed={pr['completed']}/{pr['of']}")
+    _require(int(pr["preempted"]) >= 1, "oversubscribed pool never preempted")
+    _require(pr["completed"] == pr["of"],
+             f"preemption lost requests: {pr['completed']} of {pr['of']}")
+
+
+# -- serving-bench gates -----------------------------------------------------
+
+def gate_overlap_parity(vals, der):
+    """The overlapped engine loop must be token-identical to the
+    synchronous step() path under greedy decode AND must actually overlap
+    (at least one tick planned host work while a decode was in flight)."""
+    op = der["serve/overlap_parity"]
+    print(f"  overlap parity: tokens_match={op['tokens_match']} "
+          f"overlapped_ticks={op['overlapped_ticks']} "
+          f"host_idle_ticks={op['host_idle_ticks']}")
+    _require(op["tokens_match"] == "True",
+             "overlapped loop diverged from synchronous decode")
+    _require(int(op["overlapped_ticks"]) >= 1,
+             "engine loop never overlapped host planning with device decode")
+
+
+def gate_async_completion(vals, der):
+    """Every stream accepted by the async server on the oversubscribed
+    workload must run to completion, and the graceful drain must leave
+    zero open streams."""
+    ac = der["serve/async_completion"]
+    print(f"  async completion: completed={ac['completed']}/{ac['of']} "
+          f"drained={ac['drained']}")
+    _require(ac["completed"] == ac["of"],
+             f"streams lost: {ac['completed']} of {ac['of']} completed")
+    _require(ac["drained"] == "True",
+             "graceful drain left streams open")
+
+
+# gate -> the rows whose presence makes it applicable
+GATES = [
+    (gate_packed_kv, ("serve/kv_bytes_per_slot_paged",
+                      "serve/kv_bytes_per_slot_packed")),
+    (gate_prefix_cache, ("serve/kv_bytes_logical_vs_physical",
+                         "serve/prefix_hit_rate")),
+    (gate_batched_prefill, ("serve/batched_prefill_tick",)),
+    (gate_preemption, ("serve/preemption_recovery_tick",)),
+    (gate_overlap_parity, ("serve/overlap_parity",)),
+    (gate_async_completion, ("serve/async_completion",)),
+]
+
+
+def check_file(path: str) -> list[str]:
+    """Run every applicable gate over one artifact; -> failure messages."""
+    vals, der = load_rows(path)
+    print(f"{path}:")
+    failures, ran = [], 0
+    for fn, needed in GATES:
+        if not all(n in vals for n in needed):
+            continue
+        ran += 1
+        try:
+            fn(vals, der)
+        except GateFailure as e:
+            failures.append(f"{path}: {fn.__name__}: {e}")
+            print(f"  FAIL: {e}")
+    if ran == 0:
+        failures.append(f"{path}: no gate matched any row — schema drift? "
+                        f"(rows: {sorted(vals)[:5]}...)")
+    else:
+        print(f"  {ran} gate(s) ran, {len(failures)} failed")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="append", required=True, metavar="PATH",
+                    help="BENCH_*.json artifact to gate (repeatable)")
+    args = ap.parse_args(argv)
+    failures = []
+    for path in args.json:
+        failures += check_file(path)
+    if failures:
+        print(f"\n{len(failures)} gate failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("all bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -122,3 +122,27 @@ def time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us: float, derived) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def parse_derived(derived: str) -> dict:
+    """Split a row's derived column into its ``k=v`` tokens (the format
+    the CI gate script asserts on; free-text tokens are ignored)."""
+    return dict(kv.split("=", 1) for kv in derived.split() if "=" in kv)
+
+
+def write_bench_json(rows: list[str], path: str, tiny: bool):
+    """Write bench rows as a BENCH_*.json artifact (one per commit; the
+    perf-trajectory schema shared by every bench CLI). Row names may carry
+    commas ("BBFP(4,2)") — fields split from the right."""
+    import json
+
+    recs = []
+    for r in rows:
+        name, us, derived = r.rsplit(",", 2)
+        recs.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    payload = {"commit": os.environ.get("GITHUB_SHA", ""),
+               "tiny": tiny, "rows": recs}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")

@@ -245,8 +245,8 @@ def engine_rows(cfg, params, tiny: bool = False):
 
 def main(argv=None):
     import argparse
-    import json
-    import os
+
+    from benchmarks.common import write_bench_json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
@@ -259,16 +259,7 @@ def main(argv=None):
     for r in rows:
         print(r, flush=True)
     if args.json:
-        recs = []
-        for r in rows:
-            # format names carry commas ("BBFP(4,2)") — split from the right
-            name, us, derived = r.rsplit(",", 2)
-            recs.append({"name": name, "us_per_call": float(us), "derived": derived})
-        payload = {"commit": os.environ.get("GITHUB_SHA", ""),
-                   "tiny": args.tiny, "rows": recs}
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {args.json}")
+        write_bench_json(rows, args.json, args.tiny)
 
 
 if __name__ == "__main__":

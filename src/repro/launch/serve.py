@@ -32,6 +32,19 @@ recompute counters:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
       --preempt-demo --slots 4 --batch 6
+
+Async serving front door (--serve; implies --continuous, paged layout
+only): requests arrive through the asyncio server in launch/server.py at
+a seeded Poisson rate (--rate req/s), stream their tokens back as they
+decode, and the engine runs the OVERLAPPED loop — host scheduling/radix
+work for tick N+1 while tick N's decode is in flight, blocking only at
+the stream edge. --serve-slo assigns SLO classes (mapped onto scheduler
+priority), --deadline-ms sets the per-request latency budget that the
+goodput accounting checks. Prints TTFT/TPOT p50/p95, goodput, and the
+overlap counters:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
+      --serve --batch 8 --slots 4 --rate 16 --deadline-ms 60000
 """
 from __future__ import annotations
 
@@ -74,6 +87,55 @@ def generate(cfg, params, prompts, qcfg, gen_len: int, extras=None):
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+def _serve_async(args, bat, prompts, gen: int, mesh):
+    """--serve mode: run the asyncio front door over the overlapped engine
+    loop with seeded Poisson arrivals; print latency percentiles, goodput,
+    and the overlap counters."""
+    import asyncio
+
+    from repro.launch.server import (
+        AsyncServer, WorkItem, closed_loop, percentile_rows,
+    )
+
+    slos = ["interactive", "standard", "batch"]
+    slo = args.serve_slo or "mix"
+    work = [WorkItem(prompt=p, max_new=gen,
+                     slo=slos[i % 3] if slo == "mix" else slo,
+                     deadline_s=args.deadline_ms / 1e3
+                     if args.deadline_ms is not None else None)
+            for i, p in enumerate(prompts)]
+    rate = args.rate if args.rate is not None else 8.0
+
+    async def go():
+        srv = AsyncServer(bat)
+        await srv.start()
+        mets = await closed_loop(srv, work, rate=rate, seed=args.seed)
+        await srv.shutdown(drain=True)
+        return srv, mets
+
+    with PT.activation_sharding(mesh, PT.SERVE_RULES):
+        t0 = time.perf_counter()
+        srv, mets = asyncio.run(go())
+        dt = time.perf_counter() - t0
+    n_new = sum(m.n_tokens for m in mets)
+    pr = percentile_rows(mets)
+    ctr = srv.counters()
+    print(f"arch={bat.cfg.name} serve=async rate={rate}/s slo={slo} "
+          f"requests={len(work)}")
+    print(f"served {len(mets)} streams / {n_new} tokens in {dt:.2f}s "
+          f"({ctr['decode_calls']} decode calls)")
+    print(f"ttft p50/p95 = {pr['ttft_p50_us'] / 1e3:.1f}/"
+          f"{pr['ttft_p95_us'] / 1e3:.1f} ms   "
+          f"tpot p50/p95 = {pr['tpot_p50_us'] / 1e3:.2f}/"
+          f"{pr['tpot_p95_us'] / 1e3:.2f} ms   "
+          f"goodput = {pr['goodput_rps']:.2f} req/s "
+          f"({pr['good']}/{pr['of']} in deadline)")
+    print(f"overlap: {ctr['overlapped_ticks']} overlapped ticks, "
+          f"{ctr['host_idle_ticks']} host-idle ticks, "
+          f"{ctr['preemptions']} preemptions")
+    return mets
 
 
 def main(argv=None):
@@ -125,8 +187,41 @@ def main(argv=None):
                    help="canned oversubscribed mixed-length workload; "
                         "implies --continuous --preempt and prints the "
                         "preemption/recompute counters")
+    # async front-door mode (launch/server.py)
+    p.add_argument("--serve", action="store_true",
+                   help="run the asyncio streaming front door over the "
+                        "overlapped engine loop (implies --continuous; "
+                        "paged layout only)")
+    p.add_argument("--rate", type=float, default=None,
+                   help="Poisson arrival rate in requests/s for --serve "
+                        "(default 8.0; seeded, deterministic schedule)")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request end-to-end deadline for --serve's "
+                        "goodput accounting (default: none)")
+    p.add_argument("--serve-slo",
+                   choices=["interactive", "standard", "batch", "mix"],
+                   default=None,
+                   help="SLO class for --serve requests (mapped onto the "
+                        "scheduler's priority field); 'mix' round-robins "
+                        "the three classes (default)")
     args = p.parse_args(argv)
 
+    if args.preempt_demo and args.serve:
+        # the demo drives the batcher synchronously to print its canned
+        # counters; the async server owns the loop — the two can't share it
+        p.error("--serve and --preempt-demo are mutually exclusive")
+    for flag, name in ((args.rate, "--rate"),
+                       (args.deadline_ms, "--deadline-ms"),
+                       (args.serve_slo, "--serve-slo")):
+        if flag is not None and not args.serve:
+            p.error(f"{name} requires --serve")
+    if args.serve:
+        args.continuous = True
+        if args.kv_layout == "dense":
+            # the front door drives step_overlapped, which pipelines the
+            # paged engine; the dense slab has no overlapped path
+            p.error("--serve requires --kv-layout paged "
+                    "(the overlapped engine loop pipelines the paged engine)")
     if args.preempt_demo:
         args.continuous = args.preempt = True
     if args.preempt and not args.continuous:
@@ -197,11 +292,16 @@ def main(argv=None):
                                 preempt=args.preempt)
         shared = jax.random.randint(jax.random.fold_in(key, 999),
                                     (args.shared_prefix,), 0, cfg.vocab)
+        prompt_list = []
         for i, p_len in enumerate(p_lens):   # ragged mix
             prompt = jax.random.randint(jax.random.fold_in(key, i),
                                         (p_len,), 0, cfg.vocab)
             if args.shared_prefix:    # shared-system-prompt workload
                 prompt = jnp.concatenate([shared, prompt])
+            prompt_list.append(prompt)
+        if args.serve:
+            return _serve_async(args, bat, prompt_list, gen, mesh)
+        for i, prompt in enumerate(prompt_list):
             bat.submit(Request(rid=i, prompt=prompt, max_new=gen))
         with PT.activation_sharding(mesh, PT.SERVE_RULES):
             t0 = time.perf_counter()

@@ -1,0 +1,307 @@
+"""Asyncio serving front door over the continuous-batching engine.
+
+``AsyncServer`` turns the PR-5 engine (Scheduler / KVCacheManager /
+ModelRunner behind ``ContinuousBatcher``) into a process-shaped service:
+
+  * PER-REQUEST STREAMING — ``submit`` returns a ``TokenStream`` (an async
+    iterator); each engine tick's freshly decoded tokens land in the
+    request's own ``asyncio.Queue`` the moment the stream edge produces
+    them, so callers consume tokens while the request is still decoding.
+  * SLO CLASSES AND DEADLINES — ``slo`` maps onto the Scheduler's existing
+    ``Request.priority`` field through ``SLO_PRIORITY`` (interactive >
+    standard > batch), so admission order and preemption-victim selection
+    need NO new policy code. ``deadline_s`` is the request's end-to-end
+    latency budget; it does not change scheduling, it feeds the goodput
+    accounting (a request is "good" iff it finished within its budget).
+  * OVERLAPPED ENGINE LOOP — the engine advances via
+    ``ContinuousBatcher.step_overlapped``: the host plans tick N+1's
+    admissions (queue policy, radix matching, page allocation, prefill
+    dispatch) while tick N's decode is in flight on the device, and blocks
+    only at the stream edge (``ModelRunner.decode_collect``). Each tick
+    runs in a thread-pool executor so the asyncio event loop keeps
+    accepting submissions mid-tick; ALL engine state is touched only from
+    inside ``_tick`` (one in flight at a time), so the engine needs no
+    locks.
+  * GRACEFUL DRAIN — ``shutdown(drain=True)`` stops accepting new
+    requests, keeps ticking until the queue, the slots, and the in-flight
+    decode are all empty (every accepted stream gets its end-of-stream
+    sentinel), then stops the loop. ``drain=False`` cancels the loop and
+    fails every open stream with ``ServerClosed``.
+
+The closed-loop latency driver (``closed_loop``) lives here too so the
+``--serve`` CLI mode and ``benchmarks/serving_latency.py`` share one
+arrival process: seeded Poisson arrivals (deterministic inter-arrival
+gaps), per-request TTFT / TPOT / deadline bookkeeping server-side.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.runtime.batcher import Request
+
+# SLO class -> Scheduler priority (higher admits first and preempts lower;
+# the scheduler breaks ties by arrival, so same-class traffic stays FIFO)
+SLO_PRIORITY = {"batch": 0, "standard": 1, "interactive": 2}
+
+
+class ServerClosed(RuntimeError):
+    """Raised to submitters after shutdown and into non-drained streams."""
+
+
+@dataclasses.dataclass
+class _Stream:
+    """Server-side record of one streaming request."""
+    req: Request
+    queue: asyncio.Queue
+    slo: str
+    deadline_s: float | None
+    t_submit: float
+    t_first: float | None = None     # first token emission (TTFT edge)
+    t_done: float | None = None
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Per-request latency record (seconds; populated after completion)."""
+    rid: int
+    slo: str
+    n_tokens: int
+    ttft_s: float                    # submit -> first streamed token
+    tpot_s: float                    # mean inter-token time after the first
+    latency_s: float                 # submit -> stream end
+    deadline_s: float | None
+    ok: bool                         # finished within its deadline (goodput)
+    t_submit_s: float = 0.0          # absolute (perf_counter) submit time
+    t_done_s: float = 0.0            # absolute (perf_counter) completion
+
+
+class TokenStream:
+    """Async iterator over one request's streamed token ids."""
+
+    def __init__(self, rec: _Stream):
+        self._rec = rec
+
+    @property
+    def request(self) -> Request:
+        return self._rec.req
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> int:
+        item = await self._rec.queue.get()
+        if item is None:
+            raise StopAsyncIteration
+        if isinstance(item, BaseException):
+            raise item
+        return item
+
+
+class AsyncServer:
+    """Asyncio front door over a paged-layout ``ContinuousBatcher``."""
+
+    def __init__(self, batcher, *, idle_poll_s: float = 0.02):
+        assert batcher.paged, "AsyncServer requires kv_layout='paged' " \
+            "(the overlapped loop pipelines the paged engine)"
+        self.bat = batcher
+        self.idle_poll_s = idle_poll_s
+        self._staged: collections.deque = collections.deque()
+        self._streams: dict[int, _Stream] = {}
+        self._done: list[_Stream] = []
+        self._wake = asyncio.Event()
+        self._closing = False
+        self._task: asyncio.Task | None = None
+        self._next_rid = 0
+
+    # -- client surface ----------------------------------------------------
+
+    async def start(self):
+        assert self._task is None, "server already started"
+        self._task = asyncio.create_task(self._engine_loop())
+
+    def submit(self, prompt, max_new: int, *, slo: str = "standard",
+               deadline_s: float | None = None,
+               priority: int | None = None) -> TokenStream:
+        """Accept one request and return its token stream. `slo` picks the
+        scheduler priority (see SLO_PRIORITY); an explicit `priority`
+        overrides it. `deadline_s` is the end-to-end budget used by the
+        goodput accounting only."""
+        if self._closing:
+            raise ServerClosed("server is shutting down; request rejected")
+        if slo not in SLO_PRIORITY:
+            raise ValueError(f"unknown SLO class {slo!r}; "
+                             f"one of {sorted(SLO_PRIORITY)}")
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      priority=SLO_PRIORITY[slo] if priority is None
+                      else priority)
+        rec = _Stream(req=req, queue=asyncio.Queue(), slo=slo,
+                      deadline_s=deadline_s, t_submit=time.perf_counter())
+        self._streams[rid] = rec
+        self._staged.append(req)
+        self._wake.set()
+        return TokenStream(rec)
+
+    async def shutdown(self, drain: bool = True):
+        """Stop the engine loop. ``drain=True`` serves everything already
+        accepted first (graceful); ``drain=False`` cancels immediately and
+        fails open streams with ``ServerClosed``."""
+        self._closing = True
+        self._wake.set()
+        if self._task is None:
+            return
+        if drain:
+            await self._task
+        else:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._fail_open_streams(ServerClosed("server shut down "
+                                                 "without drain"))
+        self._task = None
+
+    # -- engine loop -------------------------------------------------------
+
+    def _has_engine_work(self) -> bool:
+        return bool(self._staged) or self.bat._inflight is not None \
+            or self.bat.sched.outstanding() > 0
+
+    def _tick(self):
+        """One engine advance — runs in the executor thread. The ONLY code
+        that touches the batcher, so the engine sees strictly serial calls
+        (at most one _tick is in flight at any moment)."""
+        while self._staged:
+            self.bat.submit(self._staged.popleft())
+        _, events = self.bat.step_overlapped()
+        return events
+
+    def _dispatch_events(self, events):
+        now = time.perf_counter()
+        for req, toks, done in events:
+            rec = self._streams.get(req.rid)
+            if rec is None:
+                continue
+            if rec.t_first is None:
+                rec.t_first = now
+            for t in toks:
+                rec.queue.put_nowait(t)
+            if done:
+                rec.t_done = now
+                rec.queue.put_nowait(None)          # end-of-stream sentinel
+                self._done.append(self._streams.pop(req.rid))
+
+    def _fail_open_streams(self, exc: BaseException):
+        for rec in self._streams.values():
+            if rec.t_done is None:
+                rec.queue.put_nowait(exc)
+        self._streams.clear()
+
+    async def _engine_loop(self):
+        loop = asyncio.get_running_loop()
+        while True:
+            if not self._has_engine_work():
+                if self._closing:
+                    return                           # drained: graceful stop
+                self._wake.clear()
+                if self._has_engine_work():          # raced a submit
+                    continue
+                try:
+                    await asyncio.wait_for(self._wake.wait(),
+                                           timeout=self.idle_poll_s)
+                except asyncio.TimeoutError:
+                    pass
+                continue
+            try:
+                events = await loop.run_in_executor(None, self._tick)
+            except Exception as e:                   # engine failure: fail
+                self._fail_open_streams(e)           # open streams loudly
+                raise
+            self._dispatch_events(events)
+
+    # -- introspection -----------------------------------------------------
+
+    def metrics(self) -> list[RequestMetrics]:
+        """Latency records of every COMPLETED request, completion order."""
+        out = []
+        for rec in self._done:
+            n = len(rec.req.out_tokens)
+            lat = rec.t_done - rec.t_submit
+            out.append(RequestMetrics(
+                rid=rec.req.rid, slo=rec.slo, n_tokens=n,
+                ttft_s=rec.t_first - rec.t_submit,
+                tpot_s=(rec.t_done - rec.t_first) / max(n - 1, 1),
+                latency_s=lat, deadline_s=rec.deadline_s,
+                ok=rec.deadline_s is None or lat <= rec.deadline_s,
+                t_submit_s=rec.t_submit, t_done_s=rec.t_done))
+        return out
+
+    def counters(self) -> dict:
+        """Engine-loop counters: the overlap proof plus serving stats."""
+        b = self.bat
+        return {"overlapped_ticks": b.overlapped_ticks,
+                "host_idle_ticks": b.host_idle_ticks,
+                "decode_calls": b.decode_calls,
+                "prefill_steps": b.prefill_steps,
+                "preemptions": b.preemptions,
+                "completed": len(self._done),
+                "open_streams": len(self._streams)}
+
+
+# -- closed-loop latency driver --------------------------------------------
+
+@dataclasses.dataclass
+class WorkItem:
+    """One request of a closed-loop workload."""
+    prompt: object                   # (P,) int32 token array
+    max_new: int
+    slo: str = "standard"
+    deadline_s: float | None = None
+
+
+async def closed_loop(server: AsyncServer, workload: list[WorkItem], *,
+                      rate: float, seed: int = 0,
+                      timeout_s: float = 300.0) -> list[RequestMetrics]:
+    """Drive `server` with seeded Poisson arrivals at `rate` requests/s
+    and wait for every stream to finish (closed loop: the call returns
+    only when the workload has fully drained, so a sweep's rates never
+    overlap). Inter-arrival gaps come from a seeded rng — the arrival
+    schedule is deterministic for a given (seed, rate, len(workload))."""
+    gaps = np.random.default_rng(seed).exponential(1.0 / rate,
+                                                   size=len(workload))
+    arrivals = np.cumsum(gaps)
+
+    async def client(delay: float, item: WorkItem):
+        await asyncio.sleep(delay)
+        stream = server.submit(item.prompt, item.max_new, slo=item.slo,
+                               deadline_s=item.deadline_s)
+        return [t async for t in stream]
+
+    await asyncio.wait_for(
+        asyncio.gather(*[client(float(arrivals[i]), w)
+                         for i, w in enumerate(workload)]),
+        timeout=timeout_s)
+    return server.metrics()
+
+
+def percentile_rows(metrics: list[RequestMetrics]) -> dict:
+    """TTFT/TPOT p50/p95 (microseconds) + goodput over a metrics batch.
+    Goodput = deadline-meeting completed requests per second of makespan
+    (first submit to last completion)."""
+    ttft = np.asarray([m.ttft_s for m in metrics])
+    tpot = np.asarray([m.tpot_s for m in metrics])
+    span = (max(m.t_done_s for m in metrics)
+            - min(m.t_submit_s for m in metrics)) if metrics else 0.0
+    good = sum(m.ok for m in metrics)
+    return {"ttft_p50_us": float(np.percentile(ttft, 50)) * 1e6,
+            "ttft_p95_us": float(np.percentile(ttft, 95)) * 1e6,
+            "tpot_p50_us": float(np.percentile(tpot, 50)) * 1e6,
+            "tpot_p95_us": float(np.percentile(tpot, 95)) * 1e6,
+            "goodput_rps": good / span if span > 0 else 0.0,
+            "good": good, "of": len(metrics)}

@@ -42,6 +42,33 @@ recompute-on-readmit — chunk prefill of ``prompt + out_tokens[:-1]``
 Greedy decode makes the interrupted run token-identical to an
 uninterrupted one. ``kv_stats`` reports ``preemptions``,
 ``recomputed_tokens``, and the radix index size.
+
+OVERLAPPED ENGINE LOOP (``step_overlapped`` / ``run_overlapped``; paged
+layout). The synchronous ``step`` serialises host and device: it blocks on
+the decode's tokens before planning the next tick. The overlapped tick
+reorders the same work into three phases so the host runs tick N+1's
+policy while tick N's decode is still executing on the device:
+
+  A. PLAN (host, device busy): one scheduling round — queue policy, radix
+     matching, page allocation, block-table writes — and the batched
+     chunk-prefill DISPATCH. Everything here is host Python or an
+     asynchronous jax dispatch; the prefill's final-row logits stay
+     device futures.
+  B. STREAM EDGE: the only blocking point (``ModelRunner.decode_collect``
+     → ``jax.block_until_ready``). The in-flight decode's tokens are
+     applied — but ONLY to slots whose occupant is unchanged since
+     dispatch: a slot preempted (and possibly re-seated) during phase A
+     discards its in-flight token, which the victim re-generates after
+     readmission, keeping greedy output token-identical to the
+     synchronous path. Then the pending admissions' finals resolve
+     (seat, or retire-at-prefill).
+  C. APPEND + DISPATCH: page appends for the grown rows, then the next
+     decode is dispatched and the tick returns without waiting for it.
+
+``overlapped_ticks`` counts ticks where phase A actually had policy work
+(a non-empty wait queue or planned admissions) while a decode was in
+flight — evidence the overlap happened; ``host_idle_ticks`` counts ticks
+where the host had nothing to do and went straight to the stream edge.
 """
 from __future__ import annotations
 
@@ -79,7 +106,7 @@ class ContinuousBatcher:
                  n_pages: int | None = None, min_prefill_bucket: int = 16,
                  kv_storage: str = "fp", prefix_cache: bool = True,
                  prefill_chunk: int = 32, prefill_slots: int | None = None,
-                 preempt: bool = False):
+                 preempt: bool = False, runner: ModelRunner | None = None):
         assert cfg.family == "decoder", "batcher targets the decoder family"
         assert kv_layout in ("paged", "dense"), kv_layout
         assert kv_storage in ("fp", "packed"), kv_storage
@@ -122,16 +149,31 @@ class ContinuousBatcher:
             self.cache = M.init_cache(cfg, n_slots, max_len)  # cache["pos"]: (B,)
         self.sched = Scheduler(self.kv, n_slots, page_size=page_size,
                                preempt=preempt, prefix_cache=self.prefix_cache)
-        self.runner = ModelRunner(cfg, params, qcfg,
-                                  prefill_chunk=self.prefill_chunk,
-                                  prefill_slots=prefill_slots or n_slots,
-                                  min_prefill_bucket=min_prefill_bucket)
+        if runner is not None:
+            # a shared runner (one jit-cache across façades — bench sweeps,
+            # server restarts) must execute the same model and formats
+            assert runner.cfg is cfg and runner.params is params, \
+                "shared ModelRunner must hold this façade's cfg/params"
+            assert runner.qcfg == qcfg, "shared ModelRunner qcfg mismatch"
+            self.runner = runner
+            self.prefill_chunk = runner.prefill_chunk
+        else:
+            self.runner = ModelRunner(cfg, params, qcfg,
+                                      prefill_chunk=self.prefill_chunk,
+                                      prefill_slots=prefill_slots or n_slots,
+                                      min_prefill_bucket=min_prefill_bucket)
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self._decode = self.runner.make_decode()
         self.decode_calls = 0          # jitted decode invocations (1 per tick)
         self.prefix_hit_pages = 0      # prompt pages served from the index
         self.prefix_miss_pages = 0     # prompt pages computed by prefill
         self.finished: list[Request] = []
+        # overlapped-loop state: the in-flight decode (logits future + the
+        # slot->request snapshot at dispatch) and the proof counters
+        self._inflight: tuple | None = None
+        self.overlapped_ticks = 0      # ticks with host policy work while a
+        #                                decode was in flight (real overlap)
+        self.host_idle_ticks = 0       # ticks that went straight to the edge
 
     # -- façade surface (delegation) ---------------------------------------
 
@@ -248,10 +290,14 @@ class ContinuousBatcher:
                       "pos": self.cache["pos"].at[slot].set(n_rows)}
         self.sched.seat(slot, n_rows)
 
-    def _admit_paged(self, admissions):
-        """Apply one scheduling round's paged admissions: write the block-
-        table rows, run ONE batched multi-slot chunked prefill over all of
-        them, then seat (or resume) each request."""
+    def _dispatch_admissions(self, admissions) -> list:
+        """DISPATCH half of one scheduling round's paged admissions: write
+        the block-table rows, launch ONE batched multi-slot chunked prefill
+        over all of them (asynchronous — the final-row logits stay device
+        futures), and seat resume admissions immediately (their next token
+        is already known host-side). Returns the pending non-resume
+        admissions as ``[(adm, final_logits_future)]`` for
+        ``_resolve_admissions`` to finish at the stream edge."""
         bt = self.cache["block_table"]
         for adm in admissions:
             bt = bt.at[adm.slot, :len(adm.page_ids)].set(
@@ -268,7 +314,7 @@ class ContinuousBatcher:
                 for adm in admissions]
         self.cache, finals = self.runner.batched_chunk_prefill(
             self.cache, jobs, self.kv.sentinel)
-        cleared = []
+        pending = []
         for adm in admissions:
             self.prefix_hit_pages += adm.n_shared
             self.prefix_miss_pages += \
@@ -279,10 +325,27 @@ class ContinuousBatcher:
                 # generated token — no new token is taken from the prefill
                 self._seat(adm.slot, adm.req, int(adm.req.out_tokens[-1]),
                            len(adm.tokens))
-            elif not self._finish_admission(
-                    adm.slot, adm.req, int(jnp.argmax(finals[adm.slot]))):
+            else:
+                pending.append((adm, finals[adm.slot]))
+        return pending
+
+    def _resolve_admissions(self, pending) -> list:
+        """COLLECT half of an admission round: read each pending prefill's
+        final-row logits (blocking) and seat — or retire-at-prefill — the
+        request. Returns streaming events ``(req, [token], done)``."""
+        cleared, events = [], []
+        for adm, fin in pending:
+            tok = int(jnp.argmax(fin))
+            if not self._finish_admission(adm.slot, adm.req, tok):
                 cleared.append(adm.slot)   # retired at prefill: drop pages
+            events.append((adm.req, [tok], adm.req.done))
         self._clear_slots(cleared)
+        return events
+
+    def _admit_paged(self, admissions):
+        """Synchronous admission (the ``step()`` path): dispatch + resolve
+        back-to-back, exactly the monolith's semantics."""
+        self._resolve_admissions(self._dispatch_admissions(admissions))
 
     def _admit_dense(self, adm):
         """Dense-layout admission: bucketed staging prefill + slab splice."""
@@ -388,6 +451,105 @@ class ContinuousBatcher:
         while (self.queue or any(r is not None for r in self.sched.slot_req)) \
                 and ticks < max_ticks:
             self.step()
+            ticks += 1
+        return self.finished, ticks
+
+    # -- the overlapped tick (host/device pipelining) -----------------------
+
+    def _collect_inflight(self) -> list:
+        """Stream edge for the in-flight decode: block on its logits, then
+        apply each token ONLY to slots whose occupant is unchanged since
+        dispatch (phase-A preemption may have evicted — and re-seated — a
+        slot mid-flight; the victim's token is discarded and re-generated
+        after readmission). Mirrors the synchronous ``step()`` tail:
+        append, note_decoded, retire, cur_tok update, slot clearing.
+        Returns streaming events ``(req, [token], done)``."""
+        if self._inflight is None:
+            return []
+        logits, snapshot, epochs = self._inflight
+        self._inflight = None
+        toks = self.runner.decode_collect(logits)   # the ONLY blocking point
+        consistent = [s for s, r in enumerate(snapshot)
+                      if r is not None and self.sched.slot_req[s] is r
+                      and self.sched.slot_epoch[s] == epochs[s]]
+        events, retired = [], []
+        for s in consistent:
+            req = snapshot[s]
+            tok = int(toks[s])
+            req.out_tokens.append(tok)
+            if len(req.out_tokens) >= req.max_new or \
+                    (self.eos is not None and tok == self.eos):
+                req.done = True
+                self.finished.append(req)
+                retired.append(s)
+            events.append((req, [tok], req.done))
+        self.sched.note_decoded(consistent)
+        for s in retired:
+            self.sched.retire(s)
+        keep = [s for s in consistent if s not in retired]
+        if keep:
+            idx = jnp.asarray(keep, jnp.int32)
+            self.cur_tok = self.cur_tok.at[idx, 0].set(
+                jnp.asarray(toks, jnp.int32)[idx])
+        self._clear_slots(retired)
+        return events
+
+    def step_overlapped(self) -> tuple[bool, list]:
+        """One OVERLAPPED engine tick (paged layout): plan tick N+1's
+        admissions on the host while tick N's decode runs on the device,
+        block only at the stream edge, then dispatch the next decode and
+        return WITHOUT waiting for it. Returns ``(progress, events)``
+        where events are ``(req, [token], done)`` tuples for the streaming
+        front door. Token-identical to the synchronous ``step()`` path
+        under greedy decode (verified by tests and the bench gate)."""
+        assert self.paged, "the overlapped loop requires kv_layout='paged'"
+        # -- phase A: host policy work (device may be busy) ----------------
+        had_queue = bool(self.sched.queue)
+        admissions, evicted = self.sched.schedule()
+        self._clear_slots(evicted)
+        pending = self._dispatch_admissions(admissions) if admissions else []
+        if self._inflight is not None:
+            if had_queue or admissions:
+                self.overlapped_ticks += 1
+            else:
+                self.host_idle_ticks += 1
+        # -- phase B: stream edge ------------------------------------------
+        events = self._collect_inflight()
+        events.extend(self._resolve_admissions(pending))
+        # -- phase C: appends + dispatch the next decode -------------------
+        if all(r is None for r in self.sched.slot_req):
+            return bool(self.queue), events
+        grown, evicted = self.sched.secure_appends()
+        self._clear_slots(evicted)
+        if grown:
+            rows, cols, vals = (jnp.asarray(v, jnp.int32)
+                                for v in zip(*grown))
+            bt = self.cache["block_table"].at[rows, cols].set(vals)
+            self.cache = {**self.cache, "block_table": bt}
+        if all(r is None for r in self.sched.slot_req):
+            return bool(self.queue), events
+        # idle/finished/preempted slots pin back to pos 0 BEFORE dispatch
+        # (the synchronous path pins after collect; here the cache must be
+        # consistent when the decode launches)
+        live = jnp.asarray([r is not None for r in self.sched.slot_req])
+        self.cache = {**self.cache,
+                      "pos": jnp.where(live, self.cache["pos"], 0)}
+        logits, new_cache = self._decode(self.params, self.cache, self.cur_tok)
+        self.decode_calls += 1
+        self.cache = new_cache          # device futures; host keeps planning
+        self._inflight = (logits, list(self.sched.slot_req),
+                          list(self.sched.slot_epoch))
+        return True, events
+
+    def run_overlapped(self, max_ticks: int = 1000):
+        """Drain the queue through the overlapped loop (the synchronous
+        ``run``'s parity twin; the async server drives ``step_overlapped``
+        itself so it can interleave arrivals)."""
+        ticks = 0
+        while ticks < max_ticks and \
+                (self.queue or self._inflight is not None
+                 or any(r is not None for r in self.sched.slot_req)):
+            self.step_overlapped()
             ticks += 1
         return self.finished, ticks
 

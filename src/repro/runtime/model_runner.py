@@ -6,7 +6,15 @@ QuantConfig, and EVERY compiled entry point of the serving path, so the
 other layers stay pure host Python:
 
   * ``make_decode()`` — the one jitted decode step per tick (KV donated so
-    XLA aliases the pool instead of double-buffering it);
+    XLA aliases the pool instead of double-buffering it). The decode is
+    SPLIT INTO DISPATCH/COLLECT HALVES for the overlapped engine loop:
+    ``decode_dispatch`` launches the jitted step and returns device
+    futures immediately (jax dispatch is asynchronous on every backend),
+    so the host can run the NEXT tick's admission policy — scheduling,
+    radix matching, block-table arithmetic, prefill staging — while the
+    device crunches; ``decode_collect`` is the only place the engine
+    blocks (``jax.block_until_ready`` at the stream edge), turning the
+    logits future into host-side token ids;
   * ``dense_prefill`` — the dense-layout reference path: prompt padded to a
     power-of-two BUCKET, one compilation per bucket (O(log max_len) ladder);
   * ``batched_chunk_prefill`` — BATCHED MULTI-SLOT incremental chunked
@@ -49,6 +57,7 @@ class ModelRunner:
         self.min_bucket = max(1, min_prefill_bucket)
         self._prefill_fns: dict[int, object] = {}   # bucket -> jitted prefill
         self._chunk_prefill_fn = None   # the ONE batched chunk-prefill shape
+        self._decode_fn = None          # cached jitted decode (shared facades)
         self.prefill_traces = 0         # distinct prefill shapes compiled
         self.chunk_prefill_calls = 0    # per-request chunk work items
         self.prefill_steps = 0          # batched lockstep steps launched
@@ -58,10 +67,31 @@ class ModelRunner:
     def make_decode(self):
         """The jitted decode step. The pre-call cache is never touched
         after a tick: donate it so XLA aliases the new pool onto the old
-        instead of double-buffering the whole KV store every decode."""
-        cfg, qcfg = self.cfg, self.qcfg
-        return jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
-                       donate_argnums=(1,))
+        instead of double-buffering the whole KV store every decode. The
+        jit object is cached so façades sharing one runner (several
+        batchers, a bench sweeping configurations) reuse the compiled
+        executable instead of retracing per façade."""
+        if self._decode_fn is None:
+            cfg, qcfg = self.cfg, self.qcfg
+            self._decode_fn = jax.jit(
+                lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
+                donate_argnums=(1,))
+        return self._decode_fn
+
+    def decode_dispatch(self, cache, cur_tok):
+        """DISPATCH half of the decode tick: launch the jitted step and
+        return ``(logits, new_cache)`` as device futures WITHOUT blocking.
+        jax dispatches asynchronously, so between this call and
+        ``decode_collect`` the host is free to run the next tick's
+        scheduling/admission work while the device executes."""
+        return self.make_decode()(self.params, cache, cur_tok)
+
+    def decode_collect(self, logits) -> np.ndarray:
+        """COLLECT half: the stream edge. The ONLY blocking point of the
+        overlapped engine loop — ``block_until_ready`` on the in-flight
+        logits, then the greedy argmax as host token ids (B,)."""
+        logits = jax.block_until_ready(logits)
+        return np.asarray(jax.device_get(jnp.argmax(logits, axis=-1)))
 
     # -- dense-layout bucketed prefill (reference path) --------------------
 

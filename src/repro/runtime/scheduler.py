@@ -86,6 +86,11 @@ class Scheduler:
         self.queue: collections.deque = collections.deque()
         self.slot_req: list = [None] * n_slots
         self.rows: list[int] = [0] * n_slots    # written KV rows per slot
+        # bumped on every seat/retire/preempt: the overlapped loop snapshots
+        # it at decode dispatch to detect ANY occupancy change at collect —
+        # request identity alone is fooled by a preempt-then-readmit-into-
+        # the-same-slot round (same req, same slot, pages moved)
+        self.slot_epoch: list[int] = [0] * n_slots
         self.preemptions = 0
         self.recomputed_tokens = 0              # rows re-prefilled on readmit
         self._arrivals = 0
@@ -195,6 +200,7 @@ class Scheduler:
     def seat(self, slot: int, n_rows: int):
         """Prefill done: record the slot's resident KV height."""
         self.rows[slot] = n_rows
+        self.slot_epoch[slot] += 1
 
     def retire(self, slot: int):
         """Release a finished (or prefill-retired) slot."""
@@ -202,11 +208,22 @@ class Scheduler:
             self.kv.release(slot)
         self.slot_req[slot] = None
         self.rows[slot] = 0
+        self.slot_epoch[slot] += 1
 
-    def note_decoded(self):
-        """One decode tick happened: every live slot wrote one KV row."""
-        for s in self._live():
+    def note_decoded(self, slots=None):
+        """One decode tick happened: every live slot wrote one KV row.
+        The overlapped engine loop passes `slots` explicitly — only the
+        slots whose occupant is UNCHANGED since the decode was dispatched
+        wrote a row they keep (a slot preempted or re-seated while the
+        decode was in flight discards that write), so crediting `_live()`
+        would corrupt the row mirror of the new occupant."""
+        for s in (self._live() if slots is None else slots):
             self.rows[s] += 1
+
+    def outstanding(self) -> int:
+        """Queued + running requests — the drain condition of the async
+        front door (zero means a graceful shutdown may stop the loop)."""
+        return len(self.queue) + len(self._live())
 
     # -- preemption --------------------------------------------------------
 
@@ -225,6 +242,7 @@ class Scheduler:
             self.kv.preempt_release(slot, resume)
         self.slot_req[slot] = None
         self.rows[slot] = 0
+        self.slot_epoch[slot] += 1
         self.preemptions += 1
         self._enqueue(req)
         return slot

@@ -1,0 +1,221 @@
+"""Async serving front door + overlapped engine loop.
+
+Acceptance criteria of the PR-6 serving layer:
+  * the overlapped tick (``step_overlapped``: host plans tick N+1 while
+    tick N's decode is in flight, blocking only at the stream edge) is
+    TOKEN-IDENTICAL to the synchronous ``step()`` path under greedy
+    decode — including under preemption + recompute-on-readmit — and the
+    ``overlapped_ticks`` counter proves real host/device overlap;
+  * the ``AsyncServer`` streams every request's tokens as they decode,
+    completes an OVERSUBSCRIBED workload (more streams than slots), and
+    drains gracefully (zero open streams, end-of-stream sentinel on all);
+  * SLO classes map onto the Scheduler's existing priority field, and
+    ``deadline_s`` drives the goodput accounting (not scheduling);
+  * shutdown rejects new submissions (``ServerClosed``) and a non-drained
+    shutdown fails open streams loudly instead of hanging them.
+
+Every await is wrapped in a timeout so a livelocked loop fails the test
+instead of hanging the suite (the CI job also runs pytest-timeout).
+"""
+import asyncio
+import types
+
+import jax
+import pytest
+
+from repro import configs
+from repro.launch.server import (
+    SLO_PRIORITY,
+    AsyncServer,
+    ServerClosed,
+    WorkItem,
+    closed_loop,
+    percentile_rows,
+)
+from repro.models import model as M
+from repro.quant import linear as Q
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.model_runner import ModelRunner
+
+KEY = jax.random.PRNGKey(0)
+WAIT_S = 240.0                      # generous: tiny model, interpret-free
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """One model + ONE ModelRunner for the whole module: the cached jit
+    decode/prefill objects compile once and every batcher façade below
+    reuses them (same n_slots/pool shapes => no retracing)."""
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    runner = ModelRunner(cfg, params, Q.FP, prefill_chunk=32,
+                         prefill_slots=4)
+    return cfg, params, runner
+
+
+def _prompts(cfg, lens, salt=0):
+    return [jax.random.randint(jax.random.fold_in(KEY, salt * 100 + i),
+                               (n,), 0, cfg.vocab)
+            for i, n in enumerate(lens)]
+
+
+def _bat(engine, **kw):
+    cfg, params, runner = engine
+    return ContinuousBatcher(cfg, params, Q.FP, n_slots=4, max_len=128,
+                             runner=runner, **kw)
+
+
+def _submit_all(bat, prompts, gen):
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    return bat
+
+
+def _toks(finished):
+    return {r.rid: list(r.out_tokens) for r in finished}
+
+
+# -- overlapped loop parity --------------------------------------------------
+
+def test_overlapped_loop_matches_sync_and_overlaps(engine):
+    """6 requests onto 4 slots: the queued tail gives phase A real
+    admission planning while decodes are in flight, so the overlap
+    counter must tick — and greedy tokens must equal the sync path's."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [40, 50, 60, 70, 30, 44], salt=1)
+    gen = 6
+    ref = _toks(_submit_all(_bat(engine), prompts, gen).run()[0])
+    ov = _submit_all(_bat(engine), prompts, gen)
+    got = _toks(ov.run_overlapped()[0])
+    assert got == ref
+    assert ov.overlapped_ticks >= 1, "host never planned during a decode"
+    assert len(got) == 6
+
+
+def test_overlapped_loop_parity_under_preemption(engine):
+    """The hard case: a starved pool preempts mid-flight (the victim's
+    in-flight token must be DISCARDED via the slot-epoch check and
+    regenerated after recompute-on-readmit), still token-identical to an
+    unconstrained synchronous run."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [55, 58, 61], salt=2)
+    gen = 10
+    ref = _toks(_submit_all(_bat(engine), prompts, gen).run()[0])
+    ov = _submit_all(_bat(engine, n_pages=6, preempt=True), prompts, gen)
+    got = _toks(ov.run_overlapped()[0])
+    assert ov.preemptions >= 1, "starved pool must have preempted"
+    assert got == ref, "preemption under the overlapped loop diverged"
+    assert all(len(t) == gen for t in got.values())
+
+
+# -- the async front door ----------------------------------------------------
+
+def test_server_streams_oversubscribed_workload(engine):
+    """6 streams onto 4 slots, mixed SLO classes: every stream yields
+    exactly max_new tokens (identical to the sync engine's), the server
+    drains to zero open streams, and the metrics/counters add up."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [40, 50, 60, 70, 30, 44], salt=1)
+    gen = 6
+    ref = _toks(_submit_all(_bat(engine), prompts, gen).run()[0])
+    slos = ["interactive", "standard", "batch"]
+
+    async def go():
+        srv = AsyncServer(_bat(engine))
+        await srv.start()
+        streams = [srv.submit(p, gen, slo=slos[i % 3], deadline_s=WAIT_S)
+                   for i, p in enumerate(prompts)]
+
+        async def collect(s):
+            return [t async for t in s]
+
+        outs = await asyncio.wait_for(
+            asyncio.gather(*[collect(s) for s in streams]), timeout=WAIT_S)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return srv, outs
+
+    srv, outs = asyncio.run(go())
+    assert {i: o for i, o in enumerate(outs)} == ref
+    ctr = srv.counters()
+    assert ctr["completed"] == 6 and ctr["open_streams"] == 0
+    mets = srv.metrics()
+    assert len(mets) == 6
+    assert all(m.n_tokens == gen and m.ttft_s > 0 and m.ok for m in mets)
+    assert all(0 < m.ttft_s <= m.latency_s for m in mets)
+
+
+def test_closed_loop_goodput_counts_deadline_misses(engine):
+    """closed_loop drives seeded Poisson arrivals and percentile_rows
+    computes goodput from the deadline 'ok' bit: an impossible deadline
+    must count as completed-but-not-good."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [16, 20, 24, 28], salt=3)
+    gen = 4
+    work = [WorkItem(prompt=p, max_new=gen,
+                     deadline_s=(1e-9 if i < 2 else WAIT_S))
+            for i, p in enumerate(prompts)]
+
+    async def go():
+        srv = AsyncServer(_bat(engine))
+        await srv.start()
+        mets = await closed_loop(srv, work, rate=50.0, seed=7,
+                                 timeout_s=WAIT_S)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return mets
+
+    mets = asyncio.run(go())
+    assert len(mets) == 4                      # all COMPLETED regardless
+    pr = percentile_rows(mets)
+    assert pr["of"] == 4 and pr["good"] == 2   # 2 missed their deadline
+    assert pr["ttft_p50_us"] > 0 and pr["tpot_p50_us"] > 0
+    assert pr["goodput_rps"] > 0
+
+
+def test_submit_after_shutdown_rejected(engine):
+    cfg, _, _ = engine
+    prompt = _prompts(cfg, [8], salt=4)[0]
+
+    async def go():
+        srv = AsyncServer(_bat(engine))
+        await srv.start()
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        with pytest.raises(ServerClosed):
+            srv.submit(prompt, 4)
+
+    asyncio.run(go())
+
+
+def test_shutdown_without_drain_fails_open_streams(engine):
+    cfg, _, _ = engine
+    prompt = _prompts(cfg, [8], salt=5)[0]
+
+    async def go():
+        srv = AsyncServer(_bat(engine))
+        await srv.start()
+        stream = srv.submit(prompt, max_new=120)   # can't finish in time
+        await asyncio.wait_for(srv.shutdown(drain=False), timeout=WAIT_S)
+        with pytest.raises(ServerClosed):
+            while True:                            # drain any tokens that
+                await asyncio.wait_for(stream.__anext__(),  # did stream,
+                                       timeout=WAIT_S)      # then the exc
+        assert srv.counters()["open_streams"] == 0
+
+    asyncio.run(go())
+
+
+# -- SLO mapping (no engine needed: submit only stages) ----------------------
+
+def test_slo_maps_to_scheduler_priority():
+    srv = AsyncServer(types.SimpleNamespace(paged=True))
+    assert srv.submit([1, 2], 4, slo="interactive").request.priority \
+        == SLO_PRIORITY["interactive"]
+    assert srv.submit([1, 2], 4, slo="batch").request.priority \
+        == SLO_PRIORITY["batch"]
+    assert srv.submit([1, 2], 4).request.priority == SLO_PRIORITY["standard"]
+    # an explicit priority overrides the class mapping
+    assert srv.submit([1, 2], 4, slo="batch", priority=9).request.priority == 9
+    with pytest.raises(ValueError, match="SLO"):
+        srv.submit([1, 2], 4, slo="gold")
+    # server-assigned rids are unique and monotonic
+    rids = [srv.submit([1], 1).request.rid for _ in range(3)]
+    assert rids == sorted(rids) and len(set(rids)) == 3

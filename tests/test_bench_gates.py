@@ -1,0 +1,110 @@
+"""benchmarks/check_bench_gates.py against synthetic pass/fail fixtures.
+
+The gate script is the ONLY place bench regressions are asserted (CI
+runs it verbatim), so its logic gets direct unit coverage: every gate is
+driven through a passing and a failing artifact, plus the schema-drift
+backstop (an artifact matching NO gate must fail, not silently pass).
+
+Stdlib-only on purpose — the script is loaded by file path, so this test
+runs without jax or the repro package installed.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_PATH = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / "check_bench_gates.py")
+_spec = importlib.util.spec_from_file_location("check_bench_gates", _PATH)
+cbg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cbg)
+
+
+def _artifact(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps(
+        {"commit": "deadbeef", "tiny": True,
+         "rows": [{"name": n, "us_per_call": us, "derived": d}
+                  for n, us, d in rows]}))
+    return str(path)
+
+
+# passing fixtures for every gate, keyed by the knob the tests flip
+def _kernel_rows(ratio=0.53, dedup=50.0, hits=50.0, traces=1, steps=3,
+                 chunks=9, preempted=1, completed=3, of=3):
+    return [
+        ("serve/kv_bytes_per_slot_paged", 32768.0, "unit=bytes"),
+        ("serve/kv_bytes_per_slot_packed", 32768.0 * ratio, "unit=bytes"),
+        ("serve/kv_bytes_logical_vs_physical", dedup, "unit=percent"),
+        ("serve/prefix_hit_rate", hits, "unit=percent"),
+        ("serve/batched_prefill_tick", 100.0,
+         f"steps={steps} chunks={chunks} traces={traces}"),
+        ("serve/preemption_recovery_tick", 100.0,
+         f"preempted={preempted} completed={completed} of={of}"),
+    ]
+
+
+def _serving_rows(match=True, overlapped=7, completed=8, of=8, drained=True):
+    return [
+        ("serve/overlap_parity", 100.0,
+         f"tokens_match={match} overlapped_ticks={overlapped} "
+         f"host_idle_ticks=7 decode_calls=14"),
+        ("serve/async_completion", 100.0,
+         f"completed={completed} of={of} drained={drained} "
+         f"overlapped_ticks=7 preemptions=0"),
+    ]
+
+
+def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
+    rc = cbg.main(["--json", _artifact(tmp_path, "k.json", _kernel_rows()),
+                   "--json", _artifact(tmp_path, "s.json", _serving_rows())])
+    assert rc == 0
+    assert "all bench gates passed" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("rows,needle", [
+    (_kernel_rows(ratio=0.60), "packed KV regressed"),
+    (_kernel_rows(dedup=75.0), "not deduped"),
+    (_kernel_rows(hits=30.0), "hit rate regressed"),
+    (_kernel_rows(traces=2), "retraced"),
+    (_kernel_rows(steps=9), "not batched"),
+    (_kernel_rows(preempted=0), "never preempted"),
+    (_kernel_rows(completed=2), "lost requests"),
+    (_serving_rows(match=False), "diverged"),
+    (_serving_rows(overlapped=0), "never overlapped"),
+    (_serving_rows(completed=7), "streams lost"),
+    (_serving_rows(drained=False), "drain left streams open"),
+])
+def test_each_gate_catches_its_regression(tmp_path, capsys, rows, needle):
+    rc = cbg.main(["--json", _artifact(tmp_path, "bad.json", rows)])
+    assert rc == 1
+    out = capsys.readouterr()
+    assert needle in out.out or needle in out.err
+
+
+def test_one_failure_does_not_mask_others(tmp_path, capsys):
+    """Gates keep running after a failure so one CI run reports ALL
+    regressions, not just the first."""
+    rows = _kernel_rows(ratio=0.60, hits=30.0, preempted=0)
+    rc = cbg.main(["--json", _artifact(tmp_path, "bad.json", rows)])
+    assert rc == 1
+    err = capsys.readouterr().err
+    for needle in ("packed KV regressed", "hit rate regressed",
+                   "never preempted"):
+        assert needle in err
+
+
+def test_unrecognised_artifact_fails_loudly(tmp_path, capsys):
+    """Schema drift (renamed rows) must fail the job, not skip gating."""
+    rows = [("serve/renamed_row", 1.0, "k=v")]
+    rc = cbg.main(["--json", _artifact(tmp_path, "drift.json", rows)])
+    assert rc == 1
+    assert "no gate matched" in capsys.readouterr().err
+
+
+def test_gates_are_keyed_by_row_presence(tmp_path):
+    """A file carrying only SOME gate families runs exactly those (the
+    kernel and serving benches write separate artifacts)."""
+    only_serving = _artifact(tmp_path, "s.json", _serving_rows())
+    assert cbg.main(["--json", only_serving]) == 0

@@ -1,0 +1,43 @@
+"""CLI guard matrix for repro.launch.serve.
+
+Every invalid flag combination must be rejected at argparse time
+(SystemExit from parser.error) with a message naming the conflict —
+BEFORE any model work — so a bad launch fails in milliseconds, not after
+a compile. Covers the pre-existing guards plus the new --serve family.
+"""
+import pytest
+
+from repro.launch import serve
+
+
+@pytest.mark.parametrize("argv,needle", [
+    # packed KV pages live in the ContinuousBatcher's paged pool
+    (["--kv-storage", "packed"], "requires --continuous"),
+    # preemption is a property of the page pool
+    (["--preempt"], "requires --continuous"),
+    # the dense slab has no pages to evict
+    (["--continuous", "--preempt", "--kv-layout", "dense"],
+     "paged"),
+    # packed storage IS a KV format; 'none' would store nothing
+    (["--continuous", "--kv-storage", "packed", "--kv-quant", "none"],
+     "needs a KV format"),
+    # the demo drives the batcher synchronously; the server owns the loop
+    (["--serve", "--preempt-demo"], "mutually exclusive"),
+    # the closed-loop knobs are meaningless without the async front door
+    (["--rate", "4"], "requires --serve"),
+    (["--deadline-ms", "100"], "requires --serve"),
+    (["--serve-slo", "interactive"], "requires --serve"),
+    # the overlapped engine loop pipelines the paged engine
+    (["--serve", "--kv-layout", "dense"], "paged"),
+])
+def test_invalid_flag_combos_rejected(argv, needle, capsys):
+    with pytest.raises(SystemExit) as exc:
+        serve.main(argv)
+    assert exc.value.code == 2                 # argparse error, not a crash
+    assert needle in capsys.readouterr().err
+
+
+def test_serve_slo_choices_validated(capsys):
+    with pytest.raises(SystemExit):
+        serve.main(["--serve", "--serve-slo", "gold"])
+    assert "invalid choice" in capsys.readouterr().err
