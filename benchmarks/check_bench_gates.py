@@ -132,6 +132,46 @@ def gate_async_completion(vals, der):
              "graceful drain left streams open")
 
 
+def gate_fleet_affinity(vals, der):
+    """Prefix-affinity routing must beat the seeded-random control on the
+    pooled radix hit rate AND must not degrade the single-replica
+    baseline (prefix groups land whole, so each replica's radix tree sees
+    the same reuse a lone engine would). Every routed request must also
+    complete — affinity is worthless if spilled/routed streams are lost."""
+    fa = der["serve/fleet_affinity_hit_rate"]
+    print(f"  fleet affinity: prefix={fa['prefix']} random={fa['random']} "
+          f"single_replica={fa['single_replica']} "
+          f"completed={fa['completed']}/{fa['of']} spills={fa['spills']}")
+    _require(fa["completed"] == fa["of"],
+             f"fleet lost streams: {fa['completed']} of {fa['of']}")
+    _require(float(fa["prefix"]) > float(fa["random"]),
+             f"prefix routing does not beat random: "
+             f"{fa['prefix']} <= {fa['random']}")
+    _require(float(fa["prefix"]) >= float(fa["single_replica"]) - 1e-9,
+             f"fleet hit rate below the single-replica baseline: "
+             f"{fa['prefix']} < {fa['single_replica']}")
+
+
+def gate_tp_parity(vals, der):
+    """A TP=2 engine (params + page pools sharded over the model axis)
+    must produce greedy tokens identical to the single-device engine, and
+    the head-sharded pool must actually split: per-shard bytes x shards
+    == global bytes. The row only exists in artifacts produced with >= 2
+    devices (the sharded-serving job), so 1-device runs skip this gate."""
+    tp = der["serve/decode_tick_tp2"]
+    print(f"  tp parity: tokens_match={tp['tokens_match']} "
+          f"kv_shards={tp['kv_shards']} shard_bytes={tp['shard_bytes']} "
+          f"global_bytes={tp['global_bytes']}")
+    _require(tp["tokens_match"] == "True",
+             "TP=2 decode diverged from the single-device engine")
+    _require(int(tp["kv_shards"]) >= 2,
+             f"page pool not sharded: kv_shards={tp['kv_shards']}")
+    _require(int(tp["shard_bytes"]) * int(tp["kv_shards"])
+             == int(tp["global_bytes"]),
+             f"pool bytes not split across shards: {tp['shard_bytes']} x "
+             f"{tp['kv_shards']} != {tp['global_bytes']}")
+
+
 # gate -> the rows whose presence makes it applicable
 GATES = [
     (gate_packed_kv, ("serve/kv_bytes_per_slot_paged",
@@ -142,6 +182,8 @@ GATES = [
     (gate_preemption, ("serve/preemption_recovery_tick",)),
     (gate_overlap_parity, ("serve/overlap_parity",)),
     (gate_async_completion, ("serve/async_completion",)),
+    (gate_fleet_affinity, ("serve/fleet_affinity_hit_rate",)),
+    (gate_tp_parity, ("serve/decode_tick_tp2",)),
 ]
 
 

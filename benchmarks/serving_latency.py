@@ -25,6 +25,15 @@ chunk-prefill shapes compile ONCE; later sections time warm code):
     next. Timing rows track the trajectory; they are NOT gated (wall
     time on shared CI runners is noise) — the gates read only the
     deterministic derived counters above.
+  * serve/fleet_affinity_hit_rate — a 2-replica EngineFleet under
+    prefix-affinity routing vs the seeded-random control vs a
+    single-replica baseline on a grouped shared-prefix workload (gated:
+    prefix > random, prefix >= single-replica).
+  * serve/decode_tick_tp2 — TP=2 vs TP=1 greedy token parity + the
+    per-shard page-pool byte split; emitted only when the host exposes
+    >= 2 devices (the sharded-serving CI job forces 8 with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), so the
+    1-device bench-smoke artifact omits the row and its gate.
 
   PYTHONPATH=src python -m benchmarks.serving_latency --tiny \
       --json BENCH_serving.json
@@ -146,6 +155,113 @@ def rate_sweep_rows(cfg, params, runner, tiny: bool):
     return out
 
 
+def tp_parity_rows(tiny: bool):
+    """TP=2 vs TP=1 greedy token parity over the deterministic
+    shared-prefix workload, plus the per-shard page-pool byte split.
+    Emitted only when the host exposes >= 2 devices (the sharded-serving
+    CI job forces 8 via XLA_FLAGS); a 1-device artifact omits the row,
+    which keys its gate off. Computes in fp32: bf16 reassociation under
+    resharding is percent-level and would make exact token parity
+    ill-posed (see tests/test_tp_serving.py)."""
+    if len(jax.devices()) < 2:
+        return []
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import model as M
+    from repro.quant import linear as Q
+    from repro.runtime import paged_kv as PK
+    from repro.runtime.batcher import ContinuousBatcher, Request
+
+    cfg = dataclasses.replace(configs.smoke_config("llama7b"),
+                              compute_dtype=jnp.float32)
+    key = jax.random.PRNGKey(7)
+    params = M.init(cfg, key)
+    gen = 6 if tiny else 12
+    shared = jax.random.randint(key, (2 * PK.PAGE_SIZE,), 0, cfg.vocab)
+    prompts = [jnp.concatenate(
+        [shared, jax.random.randint(jax.random.fold_in(key, i),
+                                    (5 + 3 * i,), 0, cfg.vocab)])
+        for i in range(3)]
+
+    def drive(mesh):
+        bat = ContinuousBatcher(cfg, params, Q.FP, n_slots=4, max_len=128,
+                                n_pages=40, mesh=mesh)
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=gen))
+        t0 = time.perf_counter()
+        fin, ticks = bat.run()
+        us = (time.perf_counter() - t0) / max(ticks, 1) * 1e6
+        return {r.rid: list(r.out_tokens) for r in fin}, bat, us
+
+    ref, _, _ = drive(None)
+    got, bat, us_tick = drive(make_serving_mesh(tp=2))
+    st = bat.kv_stats()
+    return [row("serve/decode_tick_tp2", us_tick,
+                f"tokens_match={got == ref} kv_shards={st['kv_shards']} "
+                f"shard_bytes={st['kv_store_bytes_per_shard']} "
+                f"global_bytes={st['kv_store_bytes']}")]
+
+
+def fleet_affinity_rows(cfg, params, runner, tiny: bool):
+    """Prefix-affinity routing proof on a grouped shared-prefix workload:
+    a 2-replica fleet routed by first-page hash must keep the pooled radix
+    hit rate at the single-replica level (groups land whole), beating the
+    seeded-random control that splits prefix groups across replicas. All
+    compared counters are host-side and deterministic; the value column is
+    the prefix-routed hit rate in %."""
+    import jax.numpy as jnp
+
+    from repro.launch.router import EngineFleet
+    from repro.launch.server import AsyncServer, WorkItem, closed_loop
+    from repro.quant import linear as Q
+    from repro.runtime import paged_kv as PK
+
+    n_groups, per_group, gen = 4, 3, (4 if tiny else 8)
+    key = jax.random.PRNGKey(11)
+    work = []
+    for g in range(n_groups):
+        shared = jax.random.randint(jax.random.fold_in(key, g),
+                                    (2 * PK.PAGE_SIZE,), 0, cfg.vocab)
+        for j in range(per_group):
+            tail = jax.random.randint(
+                jax.random.fold_in(key, 100 + 10 * g + j), (8,), 0,
+                cfg.vocab)
+            work.append(WorkItem(prompt=jnp.concatenate([shared, tail]),
+                                 max_new=gen, deadline_s=DEADLINE_S))
+
+    def drive(routing, n_replicas):
+        bats = [_serve_batcher(cfg, params, Q.FP, [], gen, n_slots=4,
+                               max_len=128, n_pages=64, runner=runner)
+                for _ in range(n_replicas)]
+
+        async def go():
+            fleet = EngineFleet([AsyncServer(b) for b in bats],
+                                routing=routing, spill_threshold=None,
+                                seed=5)
+            await fleet.start()
+            await closed_loop(fleet, work, rate=100.0, seed=31,
+                              timeout_s=600.0)
+            await fleet.shutdown(drain=True)
+            return fleet
+
+        return asyncio.run(go()).counters()
+
+    pre = drive("prefix", 2)
+    rnd = drive("random", 2)
+    solo = drive("prefix", 1)
+    rate = lambda c: c["fleet_affinity_hit_rate"]            # noqa: E731
+    return [row("serve/fleet_affinity_hit_rate", rate(pre) * 100.0,
+                f"unit=% prefix={rate(pre):.4f} random={rate(rnd):.4f} "
+                f"single_replica={rate(solo):.4f} "
+                f"completed={pre['completed']} of={len(work)} "
+                f"picks={'/'.join(map(str, pre['picks']))} "
+                f"spills={pre['spills']}")]
+
+
 def run(tiny: bool = False):
     from repro import configs
     from repro.models import model as M
@@ -162,6 +278,8 @@ def run(tiny: bool = False):
     out += overlap_parity_rows(cfg, params, runner, tiny)
     out += async_completion_rows(cfg, params, runner, tiny)
     out += rate_sweep_rows(cfg, params, runner, tiny)
+    out += fleet_affinity_rows(cfg, params, runner, tiny)
+    out += tp_parity_rows(tiny)
     return out
 
 

@@ -8,13 +8,13 @@ SINGLE_POD = (16, 16)           # 256 chips (TPU v5e pod slice)
 MULTI_POD = (2, 16, 16)         # 2 pods = 512 chips
 
 
-def _make_mesh(shape, axes):
+def _make_mesh(shape, axes, devices=None):
     # jax.sharding.AxisType landed after 0.4.3x; older jax only has the
     # default (auto) behaviour, which is what we want anyway
     if hasattr(jax.sharding, "AxisType"):
         kinds = (jax.sharding.AxisType.Auto,) * len(axes)
-        return jax.make_mesh(shape, axes, axis_types=kinds)
-    return jax.make_mesh(shape, axes)
+        return jax.make_mesh(shape, axes, axis_types=kinds, devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,11 +23,41 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
-def make_host_mesh():
+def make_host_mesh(tp: int = 1):
     """Whatever this host actually has — used by tests/examples (1..N CPU
-    devices). data axis = all devices, model = 1."""
+    devices), factored as (n // tp, tp) over ("data", "model"). The old
+    behaviour hard-coded model=1, which silently swallowed a misconfigured
+    serving cell; now `tp` must divide the device count exactly."""
     n = len(jax.devices())
-    return _make_mesh((n, 1), ("data", "model"))
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if n % tp != 0:
+        raise ValueError(
+            f"tp={tp} does not divide the {n} available device(s); "
+            f"a serving cell needs data x model = n, so pick a tp that "
+            f"divides the device count (or force one with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return _make_mesh((n // tp, tp), ("data", "model"))
+
+
+def make_serving_mesh(tp: int = 1, dp: int = 1):
+    """One serving cell: a (dp, tp) mesh over ("data", "model") using the
+    FIRST dp*tp devices — unlike make_host_mesh it does not have to consume
+    the whole host, so several cells (data-parallel engine replicas) can
+    partition one machine's devices. `tp` shards the ModelRunner's compiled
+    shapes (params + head-sharded page pools); `dp` is batch sharding
+    WITHIN one engine replica (distinct from the EngineFleet's replica-
+    level data parallelism, which runs whole separate engines)."""
+    if tp < 1 or dp < 1:
+        raise ValueError(f"tp and dp must be >= 1, got tp={tp} dp={dp}")
+    devices = jax.devices()
+    if tp * dp > len(devices):
+        raise ValueError(
+            f"serving mesh tp={tp} x dp={dp} needs {tp * dp} devices but "
+            f"only {len(devices)} are available (force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return _make_mesh((dp, tp), ("data", "model"),
+                      devices=devices[:dp * tp])
 
 
 def batch_axes(mesh) -> tuple:

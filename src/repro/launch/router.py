@@ -1,0 +1,152 @@
+"""Prefix-affinity request routing across data-parallel engine replicas.
+
+``EngineFleet`` is the multi-replica front door: it owns N ``AsyncServer``
+replicas (each a full engine — Scheduler / KVCacheManager / ModelRunner —
+typically sharing ONE mesh-aware ModelRunner so the compiled TP programs
+and sharded params exist once per process) and routes every request at
+submit time. Replicas are DATA parallel: they share no KV state, so the
+radix prefix tree that makes shared prompts cheap (PR 4/5) is per-replica
+— scattering a prefix-sharing workload uniformly would split every prefix
+group across replicas and pay the prefill once per replica instead of
+once per fleet.
+
+ROUTING POLICY ("prefix"): hash the request's FIRST PAGE-ALIGNED PROMPT
+CHUNK — the same 32-token page granularity the radix tree indexes, so two
+prompts that could ever share a cached page necessarily share a route key
+— and send the request to ``hash % n_replicas``. Requests with a common
+prefix therefore concentrate on the replica that already holds it, and
+the per-replica radix hit rate approaches the single-replica rate instead
+of degrading with fleet size. The hash is sha256 over the raw int32
+little-endian bytes (python's builtin ``hash`` is salted per process —
+useless for a deterministic, restart-stable assignment).
+
+SPILL: affinity must not defeat load balancing. When the affinity
+target's load (queued + staged + running) is at or past
+``spill_threshold``, the request spills to the least-loaded replica
+(first index wins ties) and the spill is counted — cache-cold but
+latency-warm.
+
+The "random" policy (seeded, deterministic) is the control: the bench
+gate requires prefix routing to beat it on radix hit rate for the
+deterministic shared-prefix workload.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from repro.runtime import paged_kv as PK
+
+ROUTING_POLICIES = ("prefix", "random")
+
+
+def prefix_route_key(prompt, page: int = PK.PAGE_SIZE) -> bytes:
+    """The routing key: raw bytes of the first page-aligned prompt chunk
+    (the whole prompt when shorter than a page). Page granularity matches
+    the radix tree's chunk size, so prompts that can share ANY cached page
+    share a key."""
+    toks = np.asarray(prompt, np.int32).reshape(-1)[:page]
+    return toks.tobytes()
+
+
+def prefix_replica(prompt, n_replicas: int, page: int = PK.PAGE_SIZE) -> int:
+    """Deterministic replica index for a prompt (sha256, not the per-process
+    salted builtin hash): stable across processes and restarts."""
+    digest = hashlib.sha256(prefix_route_key(prompt, page)).digest()
+    return int.from_bytes(digest[:8], "big") % n_replicas
+
+
+class FleetRouter:
+    """Pure-host routing policy: prompt + per-replica loads -> replica.
+    Separated from the fleet so the policy is unit-testable without
+    servers (and swappable: ``pick`` is the whole surface)."""
+
+    def __init__(self, n_replicas: int, *, policy: str = "prefix",
+                 page: int = PK.PAGE_SIZE,
+                 spill_threshold: int | None = None, seed: int = 0):
+        if policy not in ROUTING_POLICIES:
+            raise ValueError(f"unknown routing policy {policy!r}; "
+                             f"one of {ROUTING_POLICIES}")
+        assert n_replicas >= 1
+        self.n = n_replicas
+        self.policy = policy
+        self.page = page
+        self.spill_threshold = spill_threshold
+        self._rng = np.random.default_rng(seed)
+        self.picks = [0] * n_replicas
+        self.spills = 0
+
+    def pick(self, prompt, loads) -> int:
+        assert len(loads) == self.n, (len(loads), self.n)
+        if self.policy == "random":
+            r = int(self._rng.integers(self.n))
+        else:
+            r = prefix_replica(prompt, self.n, self.page)
+            if self.spill_threshold is not None and \
+                    loads[r] >= self.spill_threshold:
+                r = int(np.argmin(loads))        # first index wins ties
+                self.spills += 1
+        self.picks[r] += 1
+        return r
+
+
+class EngineFleet:
+    """N-replica front door with the single-server surface ``closed_loop``
+    drives: ``submit`` routes to a replica's ``AsyncServer.submit`` and
+    returns its ``TokenStream``; ``metrics`` concatenates completed-request
+    records across replicas."""
+
+    def __init__(self, servers, *, routing: str = "prefix",
+                 page: int = PK.PAGE_SIZE,
+                 spill_threshold: int | None = None, seed: int = 0):
+        assert servers, "a fleet needs at least one replica"
+        self.servers = list(servers)
+        self.router = FleetRouter(len(self.servers), policy=routing,
+                                  page=page, spill_threshold=spill_threshold,
+                                  seed=seed)
+        self.assignments: list[int] = []   # replica per submit, submit order
+
+    async def start(self):
+        for srv in self.servers:
+            await srv.start()
+
+    async def shutdown(self, drain: bool = True):
+        for srv in self.servers:
+            await srv.shutdown(drain=drain)
+
+    def _loads(self) -> list[int]:
+        """Per-replica outstanding work: staged (accepted, not yet inside
+        the engine) + queued + running."""
+        return [len(srv._staged) + srv.bat.sched.outstanding()
+                for srv in self.servers]
+
+    def submit(self, prompt, max_new: int, **kw):
+        r = self.router.pick(prompt, self._loads())
+        self.assignments.append(r)
+        return self.servers[r].submit(prompt, max_new, **kw)
+
+    def metrics(self):
+        out = []
+        for srv in self.servers:
+            out.extend(srv.metrics())
+        return out
+
+    def counters(self) -> dict:
+        """Aggregate engine counters plus the fleet-level affinity proof:
+        ``fleet_affinity_hit_rate`` is the pooled radix hit rate over every
+        replica's admitted prompt pages — the number prefix routing must
+        keep at the single-replica level and random routing degrades."""
+        per = [srv.counters() for srv in self.servers]
+        hit = sum(srv.bat.prefix_hit_pages for srv in self.servers)
+        miss = sum(srv.bat.prefix_miss_pages for srv in self.servers)
+        agg = {k: sum(c[k] for c in per) for k in per[0]}
+        agg.update(replicas=len(self.servers),
+                   routing=self.router.policy,
+                   picks=list(self.router.picks),
+                   spills=self.router.spills,
+                   fleet_prefix_hit_pages=hit,
+                   fleet_prefix_miss_pages=miss,
+                   fleet_affinity_hit_rate=hit / (hit + miss)
+                   if hit + miss else 0.0)
+        return agg

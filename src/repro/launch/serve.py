@@ -56,7 +56,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.launch import steps as ST
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_serving_mesh
 from repro.models import model as M
 from repro.models import partitioning as PT
 from repro.quant import linear as Q
@@ -89,12 +89,14 @@ def generate(cfg, params, prompts, qcfg, gen_len: int, extras=None):
     return jnp.concatenate(out, axis=1)
 
 
-def _serve_async(args, bat, prompts, gen: int, mesh):
+def _serve_async(args, bats, prompts, gen: int, mesh):
     """--serve mode: run the asyncio front door over the overlapped engine
     loop with seeded Poisson arrivals; print latency percentiles, goodput,
-    and the overlap counters."""
+    and the overlap counters. `bats` is one batcher per engine replica —
+    more than one puts the EngineFleet router in front."""
     import asyncio
 
+    from repro.launch.router import EngineFleet
     from repro.launch.server import (
         AsyncServer, WorkItem, closed_loop, percentile_rows,
     )
@@ -109,7 +111,14 @@ def _serve_async(args, bat, prompts, gen: int, mesh):
     rate = args.rate if args.rate is not None else 8.0
 
     async def go():
-        srv = AsyncServer(bat)
+        servers = [AsyncServer(b) for b in bats]
+        if len(servers) == 1:
+            srv = servers[0]
+        else:
+            srv = EngineFleet(servers, routing=args.routing or "prefix",
+                              page=args.page_size,
+                              spill_threshold=2 * args.slots,
+                              seed=args.seed)
         await srv.start()
         mets = await closed_loop(srv, work, rate=rate, seed=args.seed)
         await srv.shutdown(drain=True)
@@ -122,8 +131,12 @@ def _serve_async(args, bat, prompts, gen: int, mesh):
     n_new = sum(m.n_tokens for m in mets)
     pr = percentile_rows(mets)
     ctr = srv.counters()
-    print(f"arch={bat.cfg.name} serve=async rate={rate}/s slo={slo} "
-          f"requests={len(work)}")
+    print(f"arch={bats[0].cfg.name} serve=async rate={rate}/s slo={slo} "
+          f"requests={len(work)} tp={args.tp or 1} replicas={len(bats)}")
+    if len(bats) > 1:
+        print(f"fleet: routing={ctr['routing']} picks={ctr['picks']} "
+              f"spills={ctr['spills']} affinity hit rate "
+              f"{ctr['fleet_affinity_hit_rate']:.0%}")
     print(f"served {len(mets)} streams / {n_new} tokens in {dt:.2f}s "
           f"({ctr['decode_calls']} decode calls)")
     print(f"ttft p50/p95 = {pr['ttft_p50_us'] / 1e3:.1f}/"
@@ -204,6 +217,20 @@ def main(argv=None):
                    help="SLO class for --serve requests (mapped onto the "
                         "scheduler's priority field); 'mix' round-robins "
                         "the three classes (default)")
+    # multi-device serving (launch/mesh.py + launch/router.py)
+    p.add_argument("--tp", type=int, default=None,
+                   help="tensor-parallel degree of one engine replica: "
+                        "params and GQA page pools shard over the mesh's "
+                        "'model' axis (needs tp devices per replica)")
+    p.add_argument("--replicas", type=int, default=None,
+                   help="data-parallel engine replicas behind the "
+                        "EngineFleet router (--serve only; each replica is "
+                        "a full engine with its own page pool)")
+    p.add_argument("--routing", choices=["prefix", "random"], default=None,
+                   help="fleet request routing: 'prefix' hashes the first "
+                        "page-aligned prompt chunk so shared prefixes land "
+                        "on the replica that has them cached (default); "
+                        "'random' is the seeded uniform baseline")
     args = p.parse_args(argv)
 
     if args.preempt_demo and args.serve:
@@ -224,6 +251,21 @@ def main(argv=None):
                     "(the overlapped engine loop pipelines the paged engine)")
     if args.preempt_demo:
         args.continuous = args.preempt = True
+    if args.replicas is not None and not args.serve:
+        # replicas are AsyncServer engines behind the fleet router; only
+        # the async front door owns more than one engine loop
+        p.error("--replicas requires --serve")
+    if args.replicas is not None and args.replicas < 1:
+        p.error(f"--replicas must be >= 1, got {args.replicas}")
+    if args.routing is not None and (args.replicas or 1) <= 1:
+        # routing picks between fleet replicas; one engine has no choice
+        p.error("--routing requires --replicas > 1")
+    if args.tp is not None and not args.continuous:
+        # TP shards the serving engine's compiled shapes; the plain
+        # generate path never builds them
+        p.error("--tp requires --continuous (or --serve)")
+    if args.tp is not None and args.tp < 1:
+        p.error(f"--tp must be >= 1, got {args.tp}")
     if args.preempt and not args.continuous:
         # preemption is a property of the ContinuousBatcher's page pool;
         # the plain generate path has no pool to oversubscribe
@@ -261,7 +303,12 @@ def main(argv=None):
         extras["frames"] = jax.random.normal(
             key, (args.batch, cfg.encoder.n_frames, cfg.d_model)) * 0.1
 
-    mesh = make_host_mesh()
+    if args.tp is not None:
+        # one serving cell: (dp=1, tp) over the first tp devices; raises
+        # with the force-host-device hint when the host has too few
+        mesh = bat_mesh = make_serving_mesh(tp=args.tp)
+    else:
+        mesh, bat_mesh = make_host_mesh(), None
     if args.continuous:
         from repro.runtime.batcher import ContinuousBatcher, Request
         assert cfg.family == "decoder", "continuous mode targets decoders"
@@ -280,16 +327,20 @@ def main(argv=None):
         else:
             p_lens = [max(1, args.prompt_len - 4 + (3 * i) % 9)
                       for i in range(args.batch)]
-        bat = ContinuousBatcher(cfg, params, qcfg, n_slots=args.slots,
-                                max_len=args.max_len,
-                                kv_layout=args.kv_layout,
-                                kv_storage=args.kv_storage,
-                                page_size=args.page_size,
-                                n_pages=args.n_pages,
-                                prefix_cache=args.prefix_cache,
-                                prefill_chunk=args.prefill_chunk,
-                                prefill_slots=args.prefill_slots,
-                                preempt=args.preempt)
+        def make_batcher(runner=None):
+            return ContinuousBatcher(cfg, params, qcfg, n_slots=args.slots,
+                                     max_len=args.max_len,
+                                     kv_layout=args.kv_layout,
+                                     kv_storage=args.kv_storage,
+                                     page_size=args.page_size,
+                                     n_pages=args.n_pages,
+                                     prefix_cache=args.prefix_cache,
+                                     prefill_chunk=args.prefill_chunk,
+                                     prefill_slots=args.prefill_slots,
+                                     preempt=args.preempt,
+                                     runner=runner, mesh=bat_mesh)
+
+        bat = make_batcher()
         shared = jax.random.randint(jax.random.fold_in(key, 999),
                                     (args.shared_prefix,), 0, cfg.vocab)
         prompt_list = []
@@ -300,7 +351,11 @@ def main(argv=None):
                 prompt = jnp.concatenate([shared, prompt])
             prompt_list.append(prompt)
         if args.serve:
-            return _serve_async(args, bat, prompt_list, gen, mesh)
+            # fleet replicas share ONE runner: the compiled TP programs and
+            # the (possibly sharded) param tree exist once per process
+            bats = [bat] + [make_batcher(runner=bat.runner)
+                            for _ in range((args.replicas or 1) - 1)]
+            return _serve_async(args, bats, prompt_list, gen, mesh)
         for i, prompt in enumerate(prompt_list):
             bat.submit(Request(rid=i, prompt=prompt, max_new=gen))
         with PT.activation_sharding(mesh, PT.SERVE_RULES):

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import bbfp as B
 from repro.models import common as C
+from repro.models import partitioning as PT
 from repro.quant import linear as Q
 
 FULL_ATTN_MAX = 4096
@@ -113,7 +114,13 @@ def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
     pg = jnp.take_along_axis(block_table, jnp.minimum(idx, max_pages - 1),
                              axis=1)
     pg = jnp.where(idx < max_pages, pg, pool.shape[0])      # past table: drop
-    return pool.at[pg, rpos % page].set(rows, mode="drop")
+    new = pool.at[pg, rpos % page].set(rows, mode="drop")
+    if new.ndim == 4:
+        # GQA pool (n_pages, page, KH, hd): pin the KV-heads dim to the TP
+        # axis so a head-sharded pool stays sharded through the scatter
+        # (no-op without a bound mesh; MLA's ndim-3 pools stay replicated)
+        new = PT.constrain(new, None, None, "heads", None)
+    return new
 
 
 def _paged_view(pool, block_table, kv_fmt=None, dtype=None):
@@ -129,6 +136,11 @@ def _paged_view(pool, block_table, kv_fmt=None, dtype=None):
             kv_fmt, out_dtype=dtype)
     b = block_table.shape[0]
     out = pool[block_table].reshape(b, -1, *pool.shape[2:])
+    if out.ndim == 4:
+        # gathered GQA view (B, rows, KH, hd): keep it head-sharded — each
+        # TP shard gathers only its own heads' pages, and the attention
+        # einsums downstream contract per-head, so no resharding happens
+        out = PT.constrain(out, None, None, "heads", None)
     return out if dtype is None else out.astype(dtype)
 
 

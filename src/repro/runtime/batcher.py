@@ -106,11 +106,13 @@ class ContinuousBatcher:
                  n_pages: int | None = None, min_prefill_bucket: int = 16,
                  kv_storage: str = "fp", prefix_cache: bool = True,
                  prefill_chunk: int = 32, prefill_slots: int | None = None,
-                 preempt: bool = False, runner: ModelRunner | None = None):
+                 preempt: bool = False, runner: ModelRunner | None = None,
+                 mesh=None):
         assert cfg.family == "decoder", "batcher targets the decoder family"
         assert kv_layout in ("paged", "dense"), kv_layout
         assert kv_storage in ("fp", "packed"), kv_storage
         self.cfg, self.params, self.qcfg = cfg, params, qcfg
+        self.mesh = mesh
         self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
         self.paged = kv_layout == "paged"
         self.kv_storage = kv_storage
@@ -151,17 +153,29 @@ class ContinuousBatcher:
                                preempt=preempt, prefix_cache=self.prefix_cache)
         if runner is not None:
             # a shared runner (one jit-cache across façades — bench sweeps,
-            # server restarts) must execute the same model and formats
-            assert runner.cfg is cfg and runner.params is params, \
+            # server restarts, fleet replicas) must execute the same model
+            # and formats; a mesh-holding runner already sharded the params,
+            # so the facade adopts its mesh + committed param tree
+            assert runner.cfg is cfg and \
+                (runner.params is params or runner._params_src is params), \
                 "shared ModelRunner must hold this façade's cfg/params"
             assert runner.qcfg == qcfg, "shared ModelRunner qcfg mismatch"
             self.runner = runner
             self.prefill_chunk = runner.prefill_chunk
+            self.mesh = mesh = runner.mesh
+            self.params = runner.params
         else:
             self.runner = ModelRunner(cfg, params, qcfg,
                                       prefill_chunk=self.prefill_chunk,
                                       prefill_slots=prefill_slots or n_slots,
-                                      min_prefill_bucket=min_prefill_bucket)
+                                      min_prefill_bucket=min_prefill_bucket,
+                                      mesh=mesh)
+            self.params = self.runner.params
+        if self.paged and mesh is not None:
+            # head-shard the page pools; block table / pos stay replicated,
+            # so the Scheduler and KVCacheManager bookkeeping above (pure
+            # host Python over page ids) is untouched by tensor parallelism
+            self.cache = PK.shard_paged_cache(self.cache, mesh)
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self._decode = self.runner.make_decode()
         self.decode_calls = 0          # jitted decode invocations (1 per tick)
@@ -563,9 +577,15 @@ class ContinuousBatcher:
         ratio is the dedup win the prefix cache delivers. Retired-but-
         cached pages (the radix LRU) are reported as `pages_cached`."""
         total = PK.kv_bytes(self.cache)
+        kv_shards = 1
+        if self.mesh is not None:
+            kv_shards = dict(zip(self.mesh.axis_names,
+                                 self.mesh.devices.shape)).get("model", 1)
         stats = {"kv_layout": "paged" if self.paged else "dense",
                  "kv_storage": self.kv_storage,
                  "kv_store_bytes": total,
+                 "kv_shards": kv_shards,
+                 "kv_store_bytes_per_shard": PK.kv_bytes_shard(self.cache),
                  "kv_bytes_per_slot": total // self.n_slots}
         if self.paged:
             per_page = total // max(self.n_pages, 1)

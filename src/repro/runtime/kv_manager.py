@@ -218,6 +218,12 @@ class KVCacheManager(PK.PagedKVAllocator):
             node = child
         return new
 
+    def page_indexed(self, pid: int) -> bool:
+        """Radix-tree membership replaces the base exact-chain index: a page
+        with a radix node survives preemption (retired-LRU) and will be
+        matched back on readmission, so its rows cost nothing to recompute."""
+        return pid in self._node_of_page
+
     # -- preemption --------------------------------------------------------
 
     def preempt_release(self, slot: int, tokens) -> list[int]:

@@ -41,26 +41,52 @@ actually batched).
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.models import partitioning as PT
 
 
 class ModelRunner:
     def __init__(self, cfg, params, qcfg, *, prefill_chunk: int = 32,
-                 prefill_slots: int = 4, min_prefill_bucket: int = 16):
-        self.cfg, self.params, self.qcfg = cfg, params, qcfg
+                 prefill_slots: int = 4, min_prefill_bucket: int = 16,
+                 mesh=None):
+        self.cfg, self.qcfg = cfg, qcfg
+        self.mesh = mesh
+        self._params_src = params       # pre-sharding identity (facade assert)
+        if mesh is not None:
+            # serve-mode TP: weights sharded over "model" via the training
+            # stack's path->spec rules; committed device_put means every
+            # jitted entry point below compiles as an SPMD program without
+            # per-call in_shardings plumbing (GSPMD propagates from operands)
+            from repro.launch.sharding import param_shardings
+            shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+            params = jax.device_put(
+                params, param_shardings(shapes, mesh, "serve"))
+        self.params = params
         self.prefill_chunk = max(1, prefill_chunk)
         self.prefill_slots = max(1, prefill_slots)
         self.min_bucket = max(1, min_prefill_bucket)
         self._prefill_fns: dict[int, object] = {}   # bucket -> jitted prefill
         self._chunk_prefill_fn = None   # the ONE batched chunk-prefill shape
         self._decode_fn = None          # cached jitted decode (shared facades)
+        self._decode_wrapped = None     # ctx-entering wrapper around it
         self.prefill_traces = 0         # distinct prefill shapes compiled
         self.chunk_prefill_calls = 0    # per-request chunk work items
         self.prefill_steps = 0          # batched lockstep steps launched
+
+    def _ctx(self):
+        """Activation-sharding context every compiled call runs under: binds
+        SERVE_RULES so ``partitioning.constrain`` calls inside the model
+        resolve against this mesh (a no-op when the runner has no mesh)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return PT.activation_sharding(self.mesh, PT.SERVE_RULES)
 
     # -- decode ------------------------------------------------------------
 
@@ -76,7 +102,15 @@ class ModelRunner:
             self._decode_fn = jax.jit(
                 lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
                 donate_argnums=(1,))
-        return self._decode_fn
+        if self._decode_wrapped is None:
+            fn = self._decode_fn
+
+            def decode(p, c, t):
+                with self._ctx():
+                    return fn(p, c, t)
+
+            self._decode_wrapped = decode
+        return self._decode_wrapped
 
     def decode_dispatch(self, cache, cur_tok):
         """DISPATCH half of the decode tick: launch the jitted step and
@@ -122,7 +156,8 @@ class ModelRunner:
             self._prefill_fns[bkt] = fn
             self.prefill_traces += 1
         toks = jnp.pad(prompt.astype(jnp.int32), (0, bkt - p_len))[None, :]
-        logits, staged = fn(self.params, toks)
+        with self._ctx():
+            logits, staged = fn(self.params, toks)
         return logits[0, p_len - 1], staged
 
     # -- batched multi-slot chunked prefill (paged layout) -----------------
@@ -200,8 +235,9 @@ class ModelRunner:
                 kv = {"layers": cache["layers"]}
                 if "dense" in cache:
                     kv["dense"] = cache["dense"]
-                logits, new_kv = fn(self.params, kv, bt_rows,
-                                    jnp.asarray(pos), jnp.asarray(tok_blk))
+                with self._ctx():
+                    logits, new_kv = fn(self.params, kv, bt_rows,
+                                        jnp.asarray(pos), jnp.asarray(tok_blk))
                 cache = {**cache, **new_kv}
                 self.chunk_prefill_calls += int(active.sum())
                 self.prefill_steps += 1

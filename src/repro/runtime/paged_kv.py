@@ -171,6 +171,13 @@ class PagedKVAllocator:
         need = pages_for(total_rows, self.page) - n_shared
         return self.free_count - self.committed >= need
 
+    def page_indexed(self, pid: int) -> bool:
+        """Is this page reachable through the prefix index (i.e. would a
+        preempted sequence find its KV cached on readmission)? The
+        scheduler's cost-aware victim selection charges only NON-indexed
+        rows as recompute cost."""
+        return pid in self._page_key
+
     def match_prefix(self, keys) -> list[int]:
         """Longest resident page chain for cumulative prefix `keys` (key i
         must identify the FULL prompt prefix through page i, not just page
@@ -325,3 +332,64 @@ def kv_bytes(cache) -> int:
         total += sum(x.size * x.dtype.itemsize
                      for x in jax.tree.leaves(cache["dense"]))
     return total
+
+
+def kv_bytes_shard(cache) -> int:
+    """Bytes one device holds for the KV stores: the per-shard slice of every
+    sharded leaf, the full leaf for replicated ones. Equals ``kv_bytes`` on a
+    single device / unsharded cache."""
+    def one(x):
+        shape = x.sharding.shard_shape(x.shape) if hasattr(x, "sharding") \
+            else x.shape
+        n = 1
+        for d in shape:
+            n *= d
+        return n * x.dtype.itemsize
+    total = sum(one(x) for x in jax.tree.leaves(cache["layers"]))
+    if "dense" in cache:
+        total += sum(one(x) for x in jax.tree.leaves(cache["dense"]))
+    return total
+
+
+def _pool_spec(path, leaf, model_size: int):
+    """PartitionSpec for one page-pool leaf under tensor parallelism.
+
+    GQA pools — fp {"k","v"} (L, n_pages, page, KH, hd) and their packed
+    {"q","exp"} sub-leaves — all carry the KV-heads axis at dim -2 with
+    ndim 5, so they shard along "model" there, matching SERVE_RULES'
+    "heads" rule for the attention computation. Everything else (MLA's
+    ckv/krope, whose dim -2 is the PAGE axis — a quantisation block must
+    never straddle shards — plus block table and positions) replicates."""
+    from jax.sharding import PartitionSpec as P
+    keys = {getattr(k, "key", None) for k in path}
+    if (model_size > 1 and leaf.ndim >= 5
+            and keys & {"k", "v"}
+            and leaf.shape[-2] % model_size == 0):
+        return P(*([None] * (leaf.ndim - 2)), "model", None)
+    return P()
+
+
+def shard_paged_cache(cache, mesh):
+    """Commit a paged cache pytree to `mesh`: page pools head-sharded along
+    the "model" axis (one BBFP block per page stays intact on each shard),
+    block table / positions replicated so the host-side Scheduler and
+    allocator bookkeeping never change. No-op-shaped for mesh=None."""
+    if mesh is None:
+        return cache
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def put(subtree):
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(subtree)
+        out = [jax.device_put(
+                   leaf, NamedSharding(mesh, _pool_spec(path, leaf, model_size)))
+               for path, leaf in leaves]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    rep = NamedSharding(mesh, P())
+    out = {"layers": put(cache["layers"]),
+           "block_table": jax.device_put(cache["block_table"], rep),
+           "pos": jax.device_put(cache["pos"], rep)}
+    if "dense" in cache:
+        out["dense"] = put(cache["dense"])
+    return out

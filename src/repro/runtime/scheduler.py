@@ -15,14 +15,21 @@ It owns:
   * the PREEMPTION POLICY (``preempt=True``; requires a relaxed-capacity
     ``KVCacheManager``). Two triggers:
       - ADMISSION-BLOCKED: the queue head outranks a running sequence but
-        the pool cannot admit it -> evict the lowest-ranked running
+        the pool cannot admit it -> evict a strictly lower-ranked running
         sequence and retry. Because rank falls back to arrival order, plain
         FIFO traffic never admission-preempts (the head arrived last); a
         higher ``Request.priority`` or an earlier-arrived readmission does.
       - APPEND-EXHAUSTED: a decode-time page append finds the pool empty
         (relaxed mode reserves prompt pages only, so the pool may be
-        oversubscribed) -> evict the lowest-ranked running sequence —
-        possibly the appender itself — until the append succeeds.
+        oversubscribed) -> evict a running sequence — possibly the
+        appender itself — until the append succeeds.
+    VICTIM SELECTION is COST-AWARE (``_pick_victim``): among eligible
+    slots, evict the one whose readmission recomputes the fewest KV rows
+    (written rows minus rows of pages the radix tree still indexes — those
+    survive in the manager's retired LRU and match straight back),
+    tie-broken by lowest rank. Pure rank order would throw away a long,
+    expensively decoded sequence when an equally-eligible cheap one frees
+    the same pages.
     Eviction releases the victim's pages (shared pages survive via
     refcounts; indexed pages stay radix-reachable in the manager's retired
     LRU) and requeues the request with its generated tokens: on readmission
@@ -133,11 +140,32 @@ class Scheduler:
     def _live(self) -> list[int]:
         return [s for s, r in enumerate(self.slot_req) if r is not None]
 
-    def _lowest_rank_live(self) -> int | None:
-        live = self._live()
-        if not live:
+    def _recompute_cost(self, slot: int) -> int:
+        """KV rows a preemption of `slot` would force back through prefill:
+        the slot's written rows minus the rows of pages the prefix index
+        (radix tree) still holds — those survive eviction in the manager's
+        retired LRU and will be matched straight back on readmission."""
+        if self.kv is None:
+            return self.rows[slot]
+        saved = sum(1 for pid in self.kv.pages[slot]
+                    if self.kv.page_indexed(pid))
+        return max(0, self.rows[slot] - saved * self.page)
+
+    def _pick_victim(self, below=None) -> int | None:
+        """Cost-aware victim selection: among live slots (optionally only
+        those ranked strictly below `below`), evict the CHEAPEST to redo —
+        fewest non-radix-indexed KV rows — tie-broken by lowest rank. Pure
+        rank selection would happily throw away a long, expensively
+        decoded sequence when a short one (or one whose pages are all
+        still radix-cached) frees the same pages for free."""
+        cand = self._live()
+        if below is not None:
+            cand = [s for s in cand
+                    if self._rank(self.slot_req[s]) < below]
+        if not cand:
             return None
-        return min(live, key=lambda s: self._rank(self.slot_req[s]))
+        return min(cand, key=lambda s: (self._recompute_cost(s),
+                                        self._rank(self.slot_req[s])))
 
     # -- admission ---------------------------------------------------------
 
@@ -167,12 +195,12 @@ class Scheduler:
             shared = self.kv.match_tokens(toks, (n - 1) // self.page) \
                 if self.prefix_cache else []
             if not self.kv.can_admit_rows(n, total, shared):
-                victim = self._lowest_rank_live()
-                if self.preempt_enabled and victim is not None and \
-                        self._rank(self.slot_req[victim]) < self._rank(req):
+                victim = self._pick_victim(below=self._rank(req)) \
+                    if self.preempt_enabled else None
+                if victim is not None:
                     evicted.append(self.preempt(victim))
                     continue                    # retry the head (re-match)
-                if self.preempt_enabled and victim is None and \
+                if self.preempt_enabled and not self._live() and \
                         self.kv.used_count == 0:
                     # nothing is live and the whole pool is reclaimable,
                     # yet the head still does not fit: it can NEVER admit
@@ -270,7 +298,7 @@ class Scheduler:
                 except PK.PoolExhausted:
                     if not self.preempt_enabled:
                         raise
-                    victim = self._lowest_rank_live()
+                    victim = self._pick_victim()
                     if victim == slot and len(self._live()) == 1:
                         raise RuntimeError(
                             f"request {self.slot_req[slot].rid} cannot make "

@@ -45,7 +45,9 @@ def _kernel_rows(ratio=0.53, dedup=50.0, hits=50.0, traces=1, steps=3,
     ]
 
 
-def _serving_rows(match=True, overlapped=7, completed=8, of=8, drained=True):
+def _serving_rows(match=True, overlapped=7, completed=8, of=8, drained=True,
+                  prefix=0.44, random=0.28, single=0.44, fleet_done=12,
+                  fleet_of=12):
     return [
         ("serve/overlap_parity", 100.0,
          f"tokens_match={match} overlapped_ticks={overlapped} "
@@ -53,12 +55,26 @@ def _serving_rows(match=True, overlapped=7, completed=8, of=8, drained=True):
         ("serve/async_completion", 100.0,
          f"completed={completed} of={of} drained={drained} "
          f"overlapped_ticks=7 preemptions=0"),
+        ("serve/fleet_affinity_hit_rate", prefix * 100.0,
+         f"unit=% prefix={prefix:.4f} random={random:.4f} "
+         f"single_replica={single:.4f} completed={fleet_done} "
+         f"of={fleet_of} picks=3/9 spills=0"),
+    ]
+
+
+def _tp_rows(match=True, shards=2, shard_bytes=32768, global_bytes=65536):
+    """The sharded-serving artifact: only emitted with >= 2 devices."""
+    return [
+        ("serve/decode_tick_tp2", 100.0,
+         f"tokens_match={match} kv_shards={shards} "
+         f"shard_bytes={shard_bytes} global_bytes={global_bytes}"),
     ]
 
 
 def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
     rc = cbg.main(["--json", _artifact(tmp_path, "k.json", _kernel_rows()),
-                   "--json", _artifact(tmp_path, "s.json", _serving_rows())])
+                   "--json", _artifact(tmp_path, "s.json",
+                                       _serving_rows() + _tp_rows())])
     assert rc == 0
     assert "all bench gates passed" in capsys.readouterr().out
 
@@ -75,6 +91,13 @@ def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
     (_serving_rows(overlapped=0), "never overlapped"),
     (_serving_rows(completed=7), "streams lost"),
     (_serving_rows(drained=False), "drain left streams open"),
+    (_serving_rows(prefix=0.28, random=0.28), "does not beat random"),
+    (_serving_rows(prefix=0.30, random=0.28, single=0.44),
+     "below the single-replica baseline"),
+    (_serving_rows(fleet_done=11), "fleet lost streams"),
+    (_tp_rows(match=False), "TP=2 decode diverged"),
+    (_tp_rows(shards=1), "not sharded"),
+    (_tp_rows(shard_bytes=65536), "not split across shards"),
 ])
 def test_each_gate_catches_its_regression(tmp_path, capsys, rows, needle):
     rc = cbg.main(["--json", _artifact(tmp_path, "bad.json", rows)])

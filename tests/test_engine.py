@@ -167,6 +167,31 @@ def test_scheduler_priority_preempts_admission_blocked_head():
     assert [r.rid for r in sched.queue] == [0, 1]
 
 
+def test_cost_aware_victim_prefers_cheap_recompute_over_rank():
+    """Victim selection is by RECOMPUTE COST, not pure rank: a sequence
+    whose pages are all still radix-indexed (free to readmit — the LRU
+    keeps them) is evicted ahead of a lower-ranked one that would have to
+    re-prefill rows. page=4: rid 0's 8-row prompt is 2 FULL pages (both
+    radix-registered at admission -> cost 8 - 2*4 = 0); rid 1's 7-row
+    prompt registers only 1 full page (cost 7 - 4 = 3). When both need an
+    append and the 4-page pool is dry, rank order would evict rid 1 (later
+    arrival) — cost order must evict rid 0."""
+    kv, sched = _engine(n_pages=4, n_slots=2)
+    runner = MockRunner()
+    a, b = FakeReq(0, 8, 8), FakeReq(1, 7, 8)
+    sched.submit(a, a.prompt)
+    sched.submit(b, b.prompt)
+    finished = []
+    drive_tick(sched, runner, finished)        # both admit; appends collide
+    assert sched.preemptions == 1
+    assert a._resume is not None               # the CHEAP victim, not b
+    assert b._resume is None and b in sched.slot_req
+    fin, _ = drive(sched, runner)
+    assert {r.rid for r in finished + fin} == {0, 1}
+    assert all(len(r.out_tokens) == 8 for r in (a, b))
+    assert kv.used_count == 0
+
+
 def test_preempted_resume_tokens_are_prompt_plus_generated():
     """The readmission prompt is prompt + out_tokens[:-1]: the last token
     was never written to KV and becomes the resumed cur_tok."""

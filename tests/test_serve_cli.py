@@ -29,6 +29,18 @@ from repro.launch import serve
     (["--serve-slo", "interactive"], "requires --serve"),
     # the overlapped engine loop pipelines the paged engine
     (["--serve", "--kv-layout", "dense"], "paged"),
+    # TP shards the serving engine's compiled shapes; the plain generate
+    # path never builds them
+    (["--tp", "2"], "requires --continuous"),
+    (["--continuous", "--tp", "0"], ">= 1"),
+    # replicas are AsyncServer engines behind the fleet router
+    (["--replicas", "2"], "requires --serve"),
+    (["--continuous", "--replicas", "2"], "requires --serve"),
+    (["--serve", "--replicas", "0"], ">= 1"),
+    # routing picks between fleet replicas; one engine has no choice
+    (["--serve", "--routing", "prefix"], "requires --replicas"),
+    (["--serve", "--replicas", "1", "--routing", "prefix"],
+     "requires --replicas"),
 ])
 def test_invalid_flag_combos_rejected(argv, needle, capsys):
     with pytest.raises(SystemExit) as exc:
