@@ -152,6 +152,64 @@ def gate_fleet_affinity(vals, der):
              f"{fa['prefix']} < {fa['single_replica']}")
 
 
+def gate_failover(vals, der):
+    """Replica-kill chaos: exactly one replica must die, at least one
+    in-flight stream must fail over, and EVERY submitted request must
+    still complete with fault-free greedy tokens (replay on the survivor
+    is deterministic, so the recovered streams are token-identical)."""
+    fo = der["serve/failover_recovery"]
+    print(f"  failover: killed={fo['killed']} failovers={fo['failovers']} "
+          f"completed={fo['completed']}/{fo['of']} "
+          f"tokens_match={fo['tokens_match']}")
+    _require(int(fo["killed"]) == 1,
+             f"chaos kill did not land: killed={fo['killed']}")
+    _require(int(fo["failovers"]) >= 1,
+             "the replica kill never forced a failover")
+    _require(fo["completed"] == fo["of"],
+             f"failover lost requests: {fo['completed']} of {fo['of']}")
+    _require(fo["tokens_match"] == "True",
+             "failed-over streams diverged from the fault-free run")
+
+
+def gate_shed(vals, der):
+    """Depth-policy load shedding under the deterministic overload burst:
+    the shed count must match the fixture's expectation exactly, and
+    every non-shed stream must complete (shedding is an explicit outcome,
+    not silent loss)."""
+    so = der["serve/shed_overload"]
+    print(f"  shed overload: shed={so['shed']} "
+          f"(expected {so['expected_shed']}) "
+          f"completed={so['completed']}/{so['of']} drained={so['drained']}")
+    _require(so["shed"] == so["expected_shed"],
+             f"shed count drifted: {so['shed']} != {so['expected_shed']}")
+    _require(int(so["completed"]) == int(so["of"]) - int(so["shed"]),
+             f"non-shed streams lost: {so['completed']} completed of "
+             f"{so['of']} - {so['shed']} shed")
+    _require(so["drained"] == "True", "shed run left streams open")
+
+
+def gate_warm_restart(vals, der):
+    """The radix/page snapshot round trip: the restore must bring back
+    every snapshotted page, the restored engine must see MORE first-round
+    prefix hits than a cold engine, and tokens must match the cold run
+    (restored packed pages are bit-exact)."""
+    wr = der["serve/warm_restart"]
+    print(f"  warm restart: restored={wr['restored_pages']}/"
+          f"{wr['snapshot_pages']} warm_hits={wr['warm_hits']} "
+          f"cold_hits={wr['cold_hits']} hit_rate={wr['hit_rate']} "
+          f"tokens_match={wr['tokens_match']}")
+    _require(int(wr["snapshot_pages"]) > 0, "snapshot captured no pages")
+    _require(wr["restored_pages"] == wr["snapshot_pages"],
+             f"restore dropped pages: {wr['restored_pages']} of "
+             f"{wr['snapshot_pages']}")
+    _require(int(wr["warm_hits"]) > int(wr["cold_hits"]),
+             f"warm restart produced no extra first-round hits: "
+             f"{wr['warm_hits']} <= {wr['cold_hits']}")
+    _require(float(wr["hit_rate"]) > 0.0, "restored hit rate is zero")
+    _require(wr["tokens_match"] == "True",
+             "warm-restarted engine diverged from the cold run")
+
+
 def gate_tp_parity(vals, der):
     """A TP=2 engine (params + page pools sharded over the model axis)
     must produce greedy tokens identical to the single-device engine, and
@@ -183,6 +241,9 @@ GATES = [
     (gate_overlap_parity, ("serve/overlap_parity",)),
     (gate_async_completion, ("serve/async_completion",)),
     (gate_fleet_affinity, ("serve/fleet_affinity_hit_rate",)),
+    (gate_failover, ("serve/failover_recovery",)),
+    (gate_shed, ("serve/shed_overload",)),
+    (gate_warm_restart, ("serve/warm_restart",)),
     (gate_tp_parity, ("serve/decode_tick_tp2",)),
 ]
 

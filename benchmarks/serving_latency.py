@@ -34,6 +34,21 @@ chunk-prefill shapes compile ONCE; later sections time warm code):
     >= 2 devices (the sharded-serving CI job forces 8 with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), so the
     1-device bench-smoke artifact omits the row and its gate.
+  * serve/failover_recovery — a 2-replica fleet under a DETERMINISTIC
+    chaos schedule (replica 0 killed mid-decode): every submitted stream
+    must still complete via transparent failover, token-identical to a
+    fault-free run (gated: killed == 1, failovers >= 1, completed == of,
+    tokens_match == True).
+  * serve/shed_overload — depth-policy load shedding under a
+    deterministic overload burst (submissions staged before the engine
+    loop starts, so the shed decision depends only on depth): the shed
+    count must equal the fixture's expectation and every non-shed stream
+    must complete (gated).
+  * serve/warm_restart — the radix/page snapshot round trip: a fresh
+    engine restored from a served donor's ``snapshot_kv`` must report
+    prefix hits on its FIRST admission round with token parity against a
+    cold run (gated: restored > 0, warm hits > cold hits,
+    tokens_match == True).
 
   PYTHONPATH=src python -m benchmarks.serving_latency --tiny \
       --json BENCH_serving.json
@@ -262,6 +277,141 @@ def fleet_affinity_rows(cfg, params, runner, tiny: bool):
                 f"spills={pre['spills']}")]
 
 
+def failover_recovery_rows(cfg, params, runner, tiny: bool):
+    """Replica-kill chaos on a 2-replica fleet: replica 0 dies at a fixed
+    engine tick; its in-flight streams must fail over to the survivor and
+    complete with fault-free greedy tokens (replay + skip-consume). The
+    value column is wall time per request including the recovery."""
+    from repro.launch.router import EngineFleet, prefix_replica
+    from repro.launch.server import AsyncServer
+    from repro.quant import linear as Q
+    from repro.runtime.faults import ChaosInjector
+
+    gen = 8 if tiny else 12
+    cands = _prompts(cfg, [40 + 4 * i for i in range(10)], seed=25)
+    to0 = [p for p in cands if prefix_replica(p, 2) == 0][:3]
+    to1 = [p for p in cands if prefix_replica(p, 2) == 1][:3]
+    prompts = to0 + to1
+    ref, _ = _drain(_serve_batcher(cfg, params, Q.FP, prompts, gen,
+                                   n_slots=4, max_len=128, runner=runner),
+                    overlapped=False)
+
+    async def go():
+        mk = lambda: _serve_batcher(cfg, params, Q.FP, [], gen,   # noqa: E731
+                                    n_slots=4, max_len=128, runner=runner)
+        srv0 = AsyncServer(mk(), chaos=ChaosInjector(kill_at_tick=3))
+        srv1 = AsyncServer(mk())
+        fleet = EngineFleet([srv0, srv1])
+        await fleet.start()
+        t0 = time.perf_counter()
+        streams = [fleet.submit(p, gen) for p in prompts]
+
+        async def collect(s):
+            return [t async for t in s]
+
+        outs = await asyncio.gather(*[collect(s) for s in streams])
+        dt = time.perf_counter() - t0
+        await fleet.shutdown(drain=True)
+        return fleet, outs, dt
+
+    fleet, outs, dt = asyncio.run(go())
+    ctr = fleet.counters()
+    match = {i: o for i, o in enumerate(outs)} == ref
+    killed = sum(h == "dead" for h in ctr["health"])
+    return [row("serve/failover_recovery", dt / len(prompts) * 1e6,
+                f"killed={killed} failovers={ctr['failovers']} "
+                f"completed={ctr['completed']} of={len(prompts)} "
+                f"tokens_match={match} reroutes={ctr['reroutes']}")]
+
+
+def shed_overload_rows(cfg, params, runner, tiny: bool):
+    """Depth-policy load shedding under a deterministic overload burst:
+    every submission lands BEFORE the engine loop starts, so the queue
+    depth each request sees — and hence the shed decision — is a pure
+    function of submit order. batch-class past the threshold sheds; the
+    interactive rider never does."""
+    from repro.launch.server import AsyncServer
+    from repro.quant import linear as Q
+
+    gen, depth = (4 if tiny else 8), 2
+    n_batch = 6
+    prompts = _prompts(cfg, [16 + 4 * i for i in range(n_batch + 1)],
+                       seed=26)
+    expected_shed = n_batch - depth
+
+    async def go():
+        bat = _serve_batcher(cfg, params, Q.FP, [], gen, n_slots=4,
+                             max_len=128, runner=runner)
+        srv = AsyncServer(bat, shed_policy="depth", shed_depth=depth)
+        streams = [srv.submit(p, gen, slo="batch")
+                   for p in prompts[:n_batch]]
+        streams.append(srv.submit(prompts[n_batch], gen, slo="interactive"))
+        await srv.start()
+        t0 = time.perf_counter()
+
+        async def collect(s):
+            try:
+                return [t async for t in s]
+            except Exception as e:
+                return e
+
+        outs = await asyncio.gather(*[collect(s) for s in streams])
+        dt = time.perf_counter() - t0
+        await srv.shutdown(drain=True)
+        return srv, outs, dt
+
+    srv, outs, dt = asyncio.run(go())
+    ctr = srv.counters()
+    served = sum(isinstance(o, list) and len(o) == gen for o in outs)
+    return [row("serve/shed_overload", dt / len(outs) * 1e6,
+                f"shed={ctr['shed']} expected_shed={expected_shed} "
+                f"completed={ctr['completed']} of={len(outs)} "
+                f"served={served} drained={ctr['open_streams'] == 0}")]
+
+
+def warm_restart_rows(cfg, params, runner, tiny: bool):
+    """The radix/page snapshot round trip: serve a shared-prefix workload,
+    ``snapshot_kv`` through the checkpoint store, restore into a FRESH
+    engine, and re-serve — the restored engine must report prefix hits on
+    its FIRST admission round, token-identical to the cold run. The value
+    column is the restore wall time."""
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.quant import linear as Q
+    from repro.runtime import paged_kv as PK
+
+    gen = 5 if tiny else 10
+    shared = jax.random.randint(jax.random.PRNGKey(27),
+                                (2 * PK.PAGE_SIZE,), 0, cfg.vocab)
+    prompts = [jnp.concatenate(
+        [shared, jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(28), i), (5 + 4 * i,), 0, cfg.vocab)])
+        for i in range(3)]
+    mk = lambda: _serve_batcher(cfg, params, Q.FP, prompts, gen,  # noqa: E731
+                                n_slots=4, max_len=128, runner=runner)
+    donor = mk()
+    ref, _ = _drain(donor, overlapped=False)
+    snap_dir = tempfile.mkdtemp()
+    n_snap = donor.snapshot_kv(snap_dir)
+
+    cold = mk()
+    cold_toks, _ = _drain(cold, overlapped=False)
+
+    warm = mk()
+    t0 = time.perf_counter()
+    n_rest = warm.restore_kv(snap_dir)
+    restore_us = (time.perf_counter() - t0) * 1e6
+    warm_toks, _ = _drain(warm, overlapped=False)
+    return [row("serve/warm_restart", restore_us,
+                f"snapshot_pages={n_snap} restored_pages={n_rest} "
+                f"warm_hits={warm.prefix_hit_pages} "
+                f"cold_hits={cold.prefix_hit_pages} "
+                f"hit_rate={warm.prefix_hit_rate:.4f} "
+                f"tokens_match={warm_toks == ref == cold_toks}")]
+
+
 def run(tiny: bool = False):
     from repro import configs
     from repro.models import model as M
@@ -279,6 +429,9 @@ def run(tiny: bool = False):
     out += async_completion_rows(cfg, params, runner, tiny)
     out += rate_sweep_rows(cfg, params, runner, tiny)
     out += fleet_affinity_rows(cfg, params, runner, tiny)
+    out += failover_recovery_rows(cfg, params, runner, tiny)
+    out += shed_overload_rows(cfg, params, runner, tiny)
+    out += warm_restart_rows(cfg, params, runner, tiny)
     out += tp_parity_rows(tiny)
     return out
 

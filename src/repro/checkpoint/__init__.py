@@ -1,3 +1,4 @@
 from repro.checkpoint.store import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+    save_checkpoint, restore_checkpoint, load_checkpoint_arrays,
+    latest_step, AsyncCheckpointer,
 )

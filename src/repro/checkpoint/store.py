@@ -60,6 +60,24 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def load_checkpoint_arrays(ckpt_dir: str, step: int | None = None):
+    """Template-FREE restore: -> (step, {flat_key: np.ndarray}) of the
+    committed checkpoint, or (None, None) when the directory holds none.
+
+    ``restore_checkpoint`` needs the target pytree's structure up front;
+    snapshot consumers whose shape is data-dependent (the serving KV
+    snapshot: the number of radix nodes is only known from the snapshot
+    itself) read the flat key->array dict and rebuild their structure
+    from it. Keys are the same "/"-joined tree paths ``save_checkpoint``
+    writes."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    return step, {k: data[k] for k in data.files}
+
+
 def restore_checkpoint(ckpt_dir: str, template, step: int | None = None,
                        shardings=None):
     """Restore into the structure of `template` (values ignored). `shardings`

@@ -29,6 +29,19 @@ latency-warm.
 The "random" policy (seeded, deterministic) is the control: the bench
 gate requires prefix routing to beat it on radix hit rate for the
 deterministic shared-prefix workload.
+
+HEALTH + FAILOVER. Each replica reports ``AsyncServer.health`` (ok /
+slow / dead — derived from its tick monitor and fatal-failure state).
+Routing excludes dead replicas: an affinity target that died reroutes to
+the least-loaded healthy replica (counted in ``reroutes``). In-flight
+work survives a replica death transparently: ``submit`` returns a
+``FleetStream`` which, when its underlying stream fails because its
+replica died, RESUBMITS the same prompt on a surviving replica and
+skip-consumes the tokens already delivered — greedy decode is
+deterministic, so the replay is token-identical and the consumer sees
+one uninterrupted stream. Retries are bounded by the replica count; the
+per-request outcome ledger keeps the dead replica's failed record, so
+the failover is visible in metrics, not papered over.
 """
 from __future__ import annotations
 
@@ -76,26 +89,102 @@ class FleetRouter:
         self._rng = np.random.default_rng(seed)
         self.picks = [0] * n_replicas
         self.spills = 0
+        self.reroutes = 0                # picks redirected off dead replicas
 
-    def pick(self, prompt, loads) -> int:
+    def pick(self, prompt, loads, healthy=None) -> int:
+        """Route one prompt. `healthy` (optional bool per replica) masks
+        replicas out of consideration — a dead affinity target reroutes to
+        the least-loaded healthy replica (cache-cold but alive)."""
         assert len(loads) == self.n, (len(loads), self.n)
+        healthy = list(healthy) if healthy is not None else [True] * self.n
+        if not any(healthy):
+            raise RuntimeError("no healthy replica to route to")
+
+        def least_loaded():
+            return min((i for i in range(self.n) if healthy[i]),
+                       key=lambda i: (loads[i], i))  # first index wins ties
+
         if self.policy == "random":
             r = int(self._rng.integers(self.n))
+            if not healthy[r]:
+                r = least_loaded()
+                self.reroutes += 1
         else:
             r = prefix_replica(prompt, self.n, self.page)
-            if self.spill_threshold is not None and \
+            if not healthy[r]:
+                r = least_loaded()
+                self.reroutes += 1
+            elif self.spill_threshold is not None and \
                     loads[r] >= self.spill_threshold:
-                r = int(np.argmin(loads))        # first index wins ties
+                r = least_loaded()
                 self.spills += 1
         self.picks[r] += 1
         return r
 
 
+class FleetStream:
+    """Failover-transparent token stream. Wraps one replica's
+    ``TokenStream``; when the stream fails BECAUSE ITS REPLICA DIED, the
+    request is resubmitted on a surviving replica and the tokens already
+    delivered are skip-consumed from the replay — greedy decode is
+    deterministic (and packed pages are bit-exact), so the retried stream
+    emits the identical token sequence and the consumer never notices.
+    Per-request failures (poison, timeout, shed) on a LIVE replica are
+    not retried: they re-raise as the request's terminal outcome."""
+
+    def __init__(self, fleet, prompt, max_new: int, kw: dict,
+                 replica: int, stream):
+        self._fleet = fleet
+        self._prompt, self._max_new, self._kw = prompt, max_new, kw
+        self._replica, self._stream = replica, stream
+        self._emitted = 0                # tokens delivered to the consumer
+        self._skip = 0                   # replay tokens to swallow
+        self._retries = 0
+
+    @property
+    def request(self):
+        return self._stream.request
+
+    @property
+    def replica(self) -> int:
+        return self._replica
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> int:
+        while True:
+            try:
+                tok = await self._stream.__anext__()
+            except StopAsyncIteration:
+                raise
+            except Exception:
+                srv = self._fleet.servers[self._replica]
+                if getattr(srv, "_dead", None) is None or \
+                        self._retries >= len(self._fleet.servers) - 1:
+                    raise                # per-request failure, or no survivor
+                self._failover()
+                continue
+            if self._skip:               # replay of already-delivered tokens
+                self._skip -= 1
+                continue
+            self._emitted += 1
+            return tok
+
+    def _failover(self):
+        self._retries += 1
+        self._fleet.failovers += 1
+        r, stream = self._fleet._route_submit(
+            self._prompt, self._max_new, self._kw)
+        self._replica, self._stream = r, stream
+        self._skip = self._emitted
+
+
 class EngineFleet:
     """N-replica front door with the single-server surface ``closed_loop``
-    drives: ``submit`` routes to a replica's ``AsyncServer.submit`` and
-    returns its ``TokenStream``; ``metrics`` concatenates completed-request
-    records across replicas."""
+    drives: ``submit`` routes to a healthy replica's ``AsyncServer.submit``
+    and returns a failover-wrapping ``FleetStream``; ``metrics``
+    concatenates per-request records across replicas."""
 
     def __init__(self, servers, *, routing: str = "prefix",
                  page: int = PK.PAGE_SIZE,
@@ -106,6 +195,7 @@ class EngineFleet:
                                   page=page, spill_threshold=spill_threshold,
                                   seed=seed)
         self.assignments: list[int] = []   # replica per submit, submit order
+        self.failovers = 0                 # in-flight streams retried
 
     async def start(self):
         for srv in self.servers:
@@ -121,10 +211,21 @@ class EngineFleet:
         return [len(srv._staged) + srv.bat.sched.outstanding()
                 for srv in self.servers]
 
+    def health(self) -> list[str]:
+        """Per-replica health (ok / slow / dead), routing's input."""
+        return [getattr(srv, "health", "ok") for srv in self.servers]
+
+    def _route_submit(self, prompt, max_new: int, kw: dict):
+        """Pick a NON-DEAD replica (slow still routes — it makes progress)
+        and submit. Shared by first submission and failover retry."""
+        healthy = [h != "dead" for h in self.health()]
+        r = self.router.pick(prompt, self._loads(), healthy)
+        return r, self.servers[r].submit(prompt, max_new, **kw)
+
     def submit(self, prompt, max_new: int, **kw):
-        r = self.router.pick(prompt, self._loads())
+        r, stream = self._route_submit(prompt, max_new, kw)
         self.assignments.append(r)
-        return self.servers[r].submit(prompt, max_new, **kw)
+        return FleetStream(self, prompt, max_new, kw, r, stream)
 
     def metrics(self):
         out = []
@@ -140,11 +241,15 @@ class EngineFleet:
         per = [srv.counters() for srv in self.servers]
         hit = sum(srv.bat.prefix_hit_pages for srv in self.servers)
         miss = sum(srv.bat.prefix_miss_pages for srv in self.servers)
-        agg = {k: sum(c[k] for c in per) for k in per[0]}
+        agg = {k: sum(c[k] for c in per) for k in per[0]
+               if not isinstance(per[0][k], str)}
         agg.update(replicas=len(self.servers),
                    routing=self.router.policy,
                    picks=list(self.router.picks),
                    spills=self.router.spills,
+                   reroutes=self.router.reroutes,
+                   failovers=self.failovers,
+                   health=self.health(),
                    fleet_prefix_hit_pages=hit,
                    fleet_prefix_miss_pages=miss,
                    fleet_affinity_hit_rate=hit / (hit + miss)

@@ -45,6 +45,18 @@ overlap counters:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
       --serve --batch 8 --slots 4 --rate 16 --deadline-ms 60000
+
+Fault tolerance (--serve only): --chaos-seed injects deterministic
+retryable tick failures (seeded, retry-exact), --chaos-kill-tick kills
+replica 0 at that tick (with --replicas > 1 in-flight requests fail
+over to survivors and replay token-identically), --request-timeout-s
+cancels overdue streams and frees their pages, --shed-policy rejects
+batch-class requests under overload. --kv-snapshot DIR persists the
+radix index + packed pages after the run and warm-restores them before
+it (paged layout; works in --continuous and --serve modes):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
+      --serve --replicas 2 --chaos-kill-tick 3 --request-timeout-s 60
 """
 from __future__ import annotations
 
@@ -100,6 +112,7 @@ def _serve_async(args, bats, prompts, gen: int, mesh):
     from repro.launch.server import (
         AsyncServer, WorkItem, closed_loop, percentile_rows,
     )
+    from repro.runtime.faults import ChaosInjector
 
     slos = ["interactive", "standard", "batch"]
     slo = args.serve_slo or "mix"
@@ -109,9 +122,27 @@ def _serve_async(args, bats, prompts, gen: int, mesh):
                      if args.deadline_ms is not None else None)
             for i, p in enumerate(prompts)]
     rate = args.rate if args.rate is not None else 8.0
+    chaos_on = (args.chaos_seed is not None
+                or args.chaos_kill_tick is not None)
+
+    def chaos_for(i):
+        # chaos targets replica 0 only, so with --replicas > 1 the
+        # survivors absorb the failover instead of the whole fleet dying
+        if not chaos_on or i > 0:
+            return None
+        return ChaosInjector(
+            seed=args.chaos_seed or 0,
+            # a bare --chaos-kill-tick is a clean kill; a seed adds
+            # retryable tick failures at a fixed deterministic rate
+            tick_fail_rate=0.1 if args.chaos_seed is not None else 0.0,
+            kill_at_tick=args.chaos_kill_tick)
 
     async def go():
-        servers = [AsyncServer(b) for b in bats]
+        servers = [AsyncServer(b, chaos=chaos_for(i),
+                               request_timeout_s=args.request_timeout_s,
+                               shed_policy=args.shed_policy or "none",
+                               shed_depth=args.shed_depth)
+                   for i, b in enumerate(bats)]
         if len(servers) == 1:
             srv = servers[0]
         else:
@@ -148,6 +179,12 @@ def _serve_async(args, bats, prompts, gen: int, mesh):
     print(f"overlap: {ctr['overlapped_ticks']} overlapped ticks, "
           f"{ctr['host_idle_ticks']} host-idle ticks, "
           f"{ctr['preemptions']} preemptions")
+    if (chaos_on or args.request_timeout_s is not None
+            or (args.shed_policy or "none") != "none"):
+        print(f"faults: {ctr['tick_failures']} tick failures, "
+              f"{ctr.get('failovers', 0)} failovers, "
+              f"{ctr['shed']} shed, {ctr['timeouts']} timeouts, "
+              f"health={ctr['health']}")
     return mets
 
 
@@ -217,6 +254,30 @@ def main(argv=None):
                    help="SLO class for --serve requests (mapped onto the "
                         "scheduler's priority field); 'mix' round-robins "
                         "the three classes (default)")
+    # fault tolerance (runtime/faults.py + launch/server.py supervision)
+    p.add_argument("--chaos-seed", type=int, default=None,
+                   help="inject deterministic retryable tick failures "
+                        "keyed on (seed, tick) (--serve only; the tick "
+                        "retry replays them token-identically)")
+    p.add_argument("--chaos-kill-tick", type=int, default=None,
+                   help="kill replica 0's engine at this tick (--serve "
+                        "only; with --replicas > 1 its in-flight requests "
+                        "fail over to the survivors)")
+    p.add_argument("--request-timeout-s", type=float, default=None,
+                   help="per-request wall-clock budget: overdue streams "
+                        "are cancelled and their pages freed (--serve only)")
+    p.add_argument("--shed-policy", choices=["none", "depth", "deadline"],
+                   default=None,
+                   help="load shedding for batch-class requests: 'depth' "
+                        "rejects past --shed-depth queued+running, "
+                        "'deadline' rejects when the projected wait blows "
+                        "the request deadline (--serve only)")
+    p.add_argument("--shed-depth", type=int, default=None,
+                   help="queue-depth threshold for --shed-policy depth")
+    p.add_argument("--kv-snapshot", default=None, metavar="DIR",
+                   help="persist the radix index + KV pages here after "
+                        "the run and warm-restore them before it "
+                        "(paged layout only)")
     # multi-device serving (launch/mesh.py + launch/router.py)
     p.add_argument("--tp", type=int, default=None,
                    help="tensor-parallel degree of one engine replica: "
@@ -239,9 +300,21 @@ def main(argv=None):
         p.error("--serve and --preempt-demo are mutually exclusive")
     for flag, name in ((args.rate, "--rate"),
                        (args.deadline_ms, "--deadline-ms"),
-                       (args.serve_slo, "--serve-slo")):
+                       (args.serve_slo, "--serve-slo"),
+                       # chaos / supervision / shedding live in the
+                       # AsyncServer engine loop; the sync batcher path
+                       # has no ticks to retry or streams to time out
+                       (args.chaos_seed, "--chaos-seed"),
+                       (args.chaos_kill_tick, "--chaos-kill-tick"),
+                       (args.request_timeout_s, "--request-timeout-s"),
+                       (args.shed_policy, "--shed-policy"),
+                       (args.shed_depth, "--shed-depth")):
         if flag is not None and not args.serve:
             p.error(f"{name} requires --serve")
+    if args.shed_policy == "depth" and args.shed_depth is None:
+        p.error("--shed-policy depth requires --shed-depth")
+    if args.shed_depth is not None and args.shed_policy != "depth":
+        p.error("--shed-depth requires --shed-policy depth")
     if args.serve:
         args.continuous = True
         if args.kv_layout == "dense":
@@ -276,6 +349,13 @@ def main(argv=None):
         # that silently changes nothing; reject it like --kv-storage packed
         p.error("--preempt requires --kv-layout paged "
                 "(the dense slab has no pages to evict)")
+    if args.kv_snapshot is not None and not args.continuous:
+        # the snapshot persists the KVCacheManager's radix tree + page
+        # pool; the plain generate path has neither
+        p.error("--kv-snapshot requires --continuous (or --serve)")
+    if args.kv_snapshot is not None and args.kv_layout == "dense":
+        p.error("--kv-snapshot requires --kv-layout paged "
+                "(it persists radix-indexed KV pages)")
     if args.kv_storage == "packed" and not args.continuous:
         # packed pages live in the ContinuousBatcher's paged pool; the plain
         # generate path has no packed store, and silently enabling KV
@@ -350,12 +430,25 @@ def main(argv=None):
             if args.shared_prefix:    # shared-system-prompt workload
                 prompt = jnp.concatenate([shared, prompt])
             prompt_list.append(prompt)
+        if args.kv_snapshot:
+            # warm restart: adopt any prior run's radix/page snapshot so
+            # the first round of prompts hits the prefix cache
+            n = bat.restore_kv(args.kv_snapshot)
+            print(f"kv-snapshot: restored {n} pages from "
+                  f"{args.kv_snapshot}" if n else
+                  f"kv-snapshot: no snapshot in {args.kv_snapshot} "
+                  f"(cold start)")
         if args.serve:
             # fleet replicas share ONE runner: the compiled TP programs and
             # the (possibly sharded) param tree exist once per process
             bats = [bat] + [make_batcher(runner=bat.runner)
                             for _ in range((args.replicas or 1) - 1)]
-            return _serve_async(args, bats, prompt_list, gen, mesh)
+            mets = _serve_async(args, bats, prompt_list, gen, mesh)
+            if args.kv_snapshot:
+                n = bat.snapshot_kv(args.kv_snapshot)
+                print(f"kv-snapshot: wrote {n} radix nodes to "
+                      f"{args.kv_snapshot}")
+            return mets
         for i, prompt in enumerate(prompt_list):
             bat.submit(Request(rid=i, prompt=prompt, max_new=gen))
         with PT.activation_sharding(mesh, PT.SERVE_RULES):
@@ -384,6 +477,10 @@ def main(argv=None):
                   f"preemptions, {stats['recomputed_tokens']} tokens "
                   f"recomputed on readmit, {done}/{len(p_lens)} requests "
                   f"ran to full budget")
+        if args.kv_snapshot:
+            n = bat.snapshot_kv(args.kv_snapshot)
+            print(f"kv-snapshot: wrote {n} radix nodes to "
+                  f"{args.kv_snapshot}")
         print("kv:", {k: v for k, v in stats.items() if k != "kv_layout"})
         return finished
     with PT.activation_sharding(mesh, PT.SERVE_RULES):

@@ -28,10 +28,44 @@ ModelRunner behind ``ContinuousBatcher``) into a process-shaped service:
     sentinel), then stops the loop. ``drain=False`` cancels the loop and
     fails every open stream with ``ServerClosed``.
 
+SUPERVISION (fault tolerance). The engine loop no longer dies on the
+first tick failure:
+
+  * TICK RETRY — a failed engine tick is retried with bounded exponential
+    backoff (``tick_retries`` / ``backoff_s``). Chaos faults inject at the
+    tick BOUNDARY (before engine state mutates), so a retried tick is
+    exact and greedy output stays token-identical to a fault-free run.
+    ``ReplicaKilled`` is fatal and never retried.
+  * FAILURE ISOLATION — a poisoned request (``ChaosInjector.poison_rids``)
+    fails only ITS ``TokenStream``; the request is cancelled out of the
+    engine (pages freed, epoch bumped) and the server keeps ticking.
+  * PER-REQUEST TIMEOUTS — ``request_timeout_s`` (server default, per-
+    submit override) bounds a request's wall clock; an overdue stream is
+    cancelled, its pages/slot freed, and its stream fails with
+    ``RequestTimeout``.
+  * LOAD SHEDDING — under overload, batch-class submissions are rejected
+    up front with an explicit ``shed`` outcome instead of queuing past
+    their deadline: ``shed_policy='depth'`` sheds at queue depth
+    ``shed_depth``; ``'deadline'`` sheds when the projected first-token
+    latency (queue depth x EWMA tick time) already exceeds the request's
+    deadline. Shed streams terminate with ``RequestShed`` and never touch
+    the engine.
+  * DEAD-REPLICA SEMANTICS — a fatal failure marks the server dead: open
+    streams fail with the cause, ``submit`` raises ``ServerClosed``, and
+    the loop RETURNS (so ``shutdown(drain=True)`` on a dead replica does
+    not hang or re-raise). A fleet (launch/router.py) reroutes around it.
+
+Every terminal outcome is recorded (``completed`` / ``failed`` /
+``timeout`` / ``shed``) and flows into ``metrics()`` / ``counters()`` /
+``percentile_rows`` so goodput accounting sees shed and failed work
+explicitly rather than by omission.
+
 The closed-loop latency driver (``closed_loop``) lives here too so the
 ``--serve`` CLI mode and ``benchmarks/serving_latency.py`` share one
 arrival process: seeded Poisson arrivals (deterministic inter-arrival
 gaps), per-request TTFT / TPOT / deadline bookkeeping server-side.
+Clients tolerate failed/shed streams: the stream's terminal exception is
+recorded in its metrics row, never raised out of the driver.
 """
 from __future__ import annotations
 
@@ -43,6 +77,8 @@ import time
 import numpy as np
 
 from repro.runtime.batcher import Request
+from repro.runtime.faults import (InjectedFailure, ReplicaKilled,
+                                  StragglerMonitor)
 
 # SLO class -> Scheduler priority (higher admits first and preempts lower;
 # the scheduler breaks ties by arrival, so same-class traffic stays FIFO)
@@ -53,6 +89,16 @@ class ServerClosed(RuntimeError):
     """Raised to submitters after shutdown and into non-drained streams."""
 
 
+class RequestShed(RuntimeError):
+    """The request was rejected by the load shedder (explicit outcome:
+    the stream terminates with this instead of queuing past its SLO)."""
+
+
+class RequestTimeout(RuntimeError):
+    """The request exceeded its wall-clock budget: its stream is failed
+    and its engine state (slot, pages) reclaimed."""
+
+
 @dataclasses.dataclass
 class _Stream:
     """Server-side record of one streaming request."""
@@ -61,8 +107,10 @@ class _Stream:
     slo: str
     deadline_s: float | None
     t_submit: float
+    timeout_s: float | None = None   # wall-clock abort budget
     t_first: float | None = None     # first token emission (TTFT edge)
     t_done: float | None = None
+    outcome: str = "completed"       # completed | failed | timeout | shed
 
 
 @dataclasses.dataclass
@@ -78,6 +126,7 @@ class RequestMetrics:
     ok: bool                         # finished within its deadline (goodput)
     t_submit_s: float = 0.0          # absolute (perf_counter) submit time
     t_done_s: float = 0.0            # absolute (perf_counter) completion
+    outcome: str = "completed"       # terminal outcome (see _Stream)
 
 
 class TokenStream:
@@ -105,11 +154,21 @@ class TokenStream:
 class AsyncServer:
     """Asyncio front door over a paged-layout ``ContinuousBatcher``."""
 
-    def __init__(self, batcher, *, idle_poll_s: float = 0.02):
+    def __init__(self, batcher, *, idle_poll_s: float = 0.02,
+                 chaos=None, request_timeout_s: float | None = None,
+                 shed_policy: str = "none", shed_depth: int | None = None,
+                 tick_retries: int = 2, backoff_s: float = 0.05):
         assert batcher.paged, "AsyncServer requires kv_layout='paged' " \
             "(the overlapped loop pipelines the paged engine)"
+        assert shed_policy in ("none", "depth", "deadline"), shed_policy
         self.bat = batcher
         self.idle_poll_s = idle_poll_s
+        self.chaos = chaos
+        self.request_timeout_s = request_timeout_s
+        self.shed_policy = shed_policy
+        self.shed_depth = shed_depth
+        self.tick_retries = tick_retries
+        self.backoff_s = backoff_s
         self._staged: collections.deque = collections.deque()
         self._streams: dict[int, _Stream] = {}
         self._done: list[_Stream] = []
@@ -117,6 +176,12 @@ class AsyncServer:
         self._closing = False
         self._task: asyncio.Task | None = None
         self._next_rid = 0
+        self._tick_no = 0                # completed-tick counter (chaos key)
+        self._dead: BaseException | None = None
+        self._mon = StragglerMonitor()   # tick wall-time EWMA -> health/shed
+        self.shed = 0
+        self.timeouts = 0
+        self.tick_failures = 0           # retried tick failures survived
 
     # -- client surface ----------------------------------------------------
 
@@ -124,13 +189,33 @@ class AsyncServer:
         assert self._task is None, "server already started"
         self._task = asyncio.create_task(self._engine_loop())
 
+    def _should_shed(self, slo: str, deadline_s: float | None) -> bool:
+        """Shed decision at submit time. Only batch-class traffic is
+        sheddable (interactive/standard keep their admission-order SLO);
+        the decision is made before the request touches any engine state,
+        so a shed request costs nothing."""
+        if self.shed_policy == "none" or slo != "batch":
+            return False
+        depth = len(self._staged) + self.bat.sched.outstanding()
+        if self.shed_policy == "depth":
+            return self.shed_depth is not None and depth >= self.shed_depth
+        # "deadline": shed when the projected first-token latency at the
+        # current depth (depth x EWMA tick time) already blows the budget
+        if deadline_s is None or self._mon.mean_s == 0.0:
+            return False
+        return depth * self._mon.mean_s > deadline_s
+
     def submit(self, prompt, max_new: int, *, slo: str = "standard",
                deadline_s: float | None = None,
-               priority: int | None = None) -> TokenStream:
+               priority: int | None = None,
+               timeout_s: float | None = None) -> TokenStream:
         """Accept one request and return its token stream. `slo` picks the
         scheduler priority (see SLO_PRIORITY); an explicit `priority`
         overrides it. `deadline_s` is the end-to-end budget used by the
-        goodput accounting only."""
+        goodput accounting only; `timeout_s` (default: the server's
+        ``request_timeout_s``) is the hard wall-clock abort budget."""
+        if self._dead is not None:
+            raise ServerClosed(f"replica is dead: {self._dead}")
         if self._closing:
             raise ServerClosed("server is shutting down; request rejected")
         if slo not in SLO_PRIORITY:
@@ -140,8 +225,19 @@ class AsyncServer:
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       priority=SLO_PRIORITY[slo] if priority is None
                       else priority)
+        now = time.perf_counter()
         rec = _Stream(req=req, queue=asyncio.Queue(), slo=slo,
-                      deadline_s=deadline_s, t_submit=time.perf_counter())
+                      deadline_s=deadline_s, t_submit=now,
+                      timeout_s=timeout_s if timeout_s is not None
+                      else self.request_timeout_s)
+        if self._should_shed(slo, deadline_s):
+            self.shed += 1
+            rec.outcome, rec.t_done = "shed", now
+            rec.queue.put_nowait(RequestShed(
+                f"request {rid} shed under overload "
+                f"(policy={self.shed_policy})"))
+            self._done.append(rec)
+            return TokenStream(rec)
         self._streams[rid] = rec
         self._staged.append(req)
         self._wake.set()
@@ -176,17 +272,66 @@ class AsyncServer:
     def _tick(self):
         """One engine advance — runs in the executor thread. The ONLY code
         that touches the batcher, so the engine sees strictly serial calls
-        (at most one _tick is in flight at any moment)."""
+        (at most one _tick is in flight at any moment). The chaos hook
+        fires FIRST, at the tick boundary: a raise here leaves the engine
+        untouched, so the supervised retry of the same tick number is
+        exact. The tick counter advances only on success — a retried tick
+        re-enters ``on_tick`` with the same key and the raise-once
+        bookkeeping skips. Submit-time validation errors fail only the
+        offending request (returned as rejects), not the tick."""
+        tick = self._tick_no
+        if self.chaos is not None:
+            self.chaos.on_tick(tick)
+        rejects = []
         while self._staged:
-            self.bat.submit(self._staged.popleft())
+            req = self._staged.popleft()
+            try:
+                self.bat.submit(req)
+            except ValueError as e:       # invalid request: isolate it
+                rejects.append((req, e))
+        t0 = time.perf_counter()
         _, events = self.bat.step_overlapped()
-        return events
+        self._mon.observe(tick, time.perf_counter() - t0)
+        self._tick_no = tick + 1
+        return events, rejects
+
+    def _abort_stream(self, rid: int, exc: BaseException, outcome: str):
+        """Terminate ONE stream with `exc` (failure isolation): cancel the
+        request out of the engine — queued: dequeued; running: slot
+        retired, pages released, epoch bumped so the in-flight decode's
+        token is discarded — and deliver the cause to its consumer. Only
+        called from the event-loop thread while no tick is executing."""
+        rec = self._streams.pop(rid, None)
+        if rec is None:
+            return
+        try:                  # accepted but not yet inside the engine
+            self._staged.remove(rec.req)
+        except ValueError:
+            self.bat.cancel(rid)
+        rec.outcome = outcome
+        rec.t_done = time.perf_counter()
+        rec.queue.put_nowait(exc)
+        self._done.append(rec)
+
+    def _expire_timeouts(self):
+        now = time.perf_counter()
+        for rid, rec in list(self._streams.items()):
+            if rec.timeout_s is not None and \
+                    now - rec.t_submit > rec.timeout_s:
+                self.timeouts += 1
+                self._abort_stream(rid, RequestTimeout(
+                    f"request {rid} exceeded its {rec.timeout_s:g}s "
+                    f"budget"), "timeout")
 
     def _dispatch_events(self, events):
         now = time.perf_counter()
         for req, toks, done in events:
             rec = self._streams.get(req.rid)
             if rec is None:
+                continue
+            if self.chaos is not None and self.chaos.is_poisoned(req.rid):
+                self._abort_stream(req.rid, InjectedFailure(
+                    f"poisoned request {req.rid}"), "failed")
                 continue
             if rec.t_first is None:
                 rec.t_first = now
@@ -197,15 +342,30 @@ class AsyncServer:
                 rec.queue.put_nowait(None)          # end-of-stream sentinel
                 self._done.append(self._streams.pop(req.rid))
 
-    def _fail_open_streams(self, exc: BaseException):
+    def _fail_open_streams(self, exc: BaseException,
+                           outcome: str = "failed"):
+        now = time.perf_counter()
         for rec in self._streams.values():
             if rec.t_done is None:
+                rec.outcome, rec.t_done = outcome, now
                 rec.queue.put_nowait(exc)
+                self._done.append(rec)
         self._streams.clear()
+
+    def _die(self, exc: BaseException):
+        """Fatal failure: mark the replica dead, fail every open stream
+        with the cause, stop accepting. The engine loop RETURNS after this
+        (no re-raise), so ``shutdown(drain=True)`` on a dead replica joins
+        cleanly and a fleet can keep serving through the survivors."""
+        self._dead = exc
+        self._closing = True
+        self._fail_open_streams(exc)
 
     async def _engine_loop(self):
         loop = asyncio.get_running_loop()
+        failures = 0
         while True:
+            self._expire_timeouts()
             if not self._has_engine_work():
                 if self._closing:
                     return                           # drained: graceful stop
@@ -219,38 +379,74 @@ class AsyncServer:
                     pass
                 continue
             try:
-                events = await loop.run_in_executor(None, self._tick)
-            except Exception as e:                   # engine failure: fail
-                self._fail_open_streams(e)           # open streams loudly
-                raise
+                events, rejects = await loop.run_in_executor(None, self._tick)
+            except ReplicaKilled as e:               # fatal: never retried
+                self._die(e)
+                return
+            except Exception as e:                   # retry with backoff
+                self.tick_failures += 1
+                failures += 1
+                if failures > self.tick_retries:
+                    self._die(e)
+                    return
+                await asyncio.sleep(self.backoff_s * 2 ** (failures - 1))
+                continue
+            failures = 0
+            for req, exc in rejects:
+                self._abort_stream(req.rid, exc, "failed")
             self._dispatch_events(events)
 
     # -- introspection -----------------------------------------------------
 
     def metrics(self) -> list[RequestMetrics]:
-        """Latency records of every COMPLETED request, completion order."""
+        """Latency records of every TERMINATED request (completed, failed,
+        timed out, or shed), termination order. Non-completed rows carry
+        NaN token latencies and ``ok=False`` — goodput accounting sees
+        failed/shed work explicitly."""
         out = []
         for rec in self._done:
             n = len(rec.req.out_tokens)
             lat = rec.t_done - rec.t_submit
+            completed = rec.outcome == "completed"
             out.append(RequestMetrics(
                 rid=rec.req.rid, slo=rec.slo, n_tokens=n,
-                ttft_s=rec.t_first - rec.t_submit,
-                tpot_s=(rec.t_done - rec.t_first) / max(n - 1, 1),
+                ttft_s=(rec.t_first - rec.t_submit)
+                if rec.t_first is not None else float("nan"),
+                tpot_s=(rec.t_done - rec.t_first) / max(n - 1, 1)
+                if completed else float("nan"),
                 latency_s=lat, deadline_s=rec.deadline_s,
-                ok=rec.deadline_s is None or lat <= rec.deadline_s,
-                t_submit_s=rec.t_submit, t_done_s=rec.t_done))
+                ok=completed and (rec.deadline_s is None
+                                  or lat <= rec.deadline_s),
+                t_submit_s=rec.t_submit, t_done_s=rec.t_done,
+                outcome=rec.outcome))
         return out
+
+    @property
+    def health(self) -> str:
+        """Replica health for fleet routing: ``dead`` (fatal failure),
+        ``slow`` (tick wall times straggling per the EWMA monitor), or
+        ``ok``."""
+        if self._dead is not None:
+            return "dead"
+        if self._mon.flagged:
+            return "slow"
+        return "ok"
 
     def counters(self) -> dict:
         """Engine-loop counters: the overlap proof plus serving stats."""
         b = self.bat
+        done = collections.Counter(rec.outcome for rec in self._done)
         return {"overlapped_ticks": b.overlapped_ticks,
                 "host_idle_ticks": b.host_idle_ticks,
                 "decode_calls": b.decode_calls,
                 "prefill_steps": b.prefill_steps,
                 "preemptions": b.preemptions,
-                "completed": len(self._done),
+                "completed": done["completed"],
+                "failed": done["failed"],
+                "timeouts": done["timeout"],
+                "shed": done["shed"],
+                "tick_failures": self.tick_failures,
+                "health": self.health,
                 "open_streams": len(self._streams)}
 
 
@@ -272,16 +468,28 @@ async def closed_loop(server: AsyncServer, workload: list[WorkItem], *,
     and wait for every stream to finish (closed loop: the call returns
     only when the workload has fully drained, so a sweep's rates never
     overlap). Inter-arrival gaps come from a seeded rng — the arrival
-    schedule is deterministic for a given (seed, rate, len(workload))."""
+    schedule is deterministic for a given (seed, rate, len(workload)).
+
+    Fault-tolerant: a stream failed, shed, or timed out by the server
+    delivers its terminal exception to its client here, which records it
+    and keeps going — the driver returns the full metrics batch (with
+    per-request outcomes) instead of crashing the gather. A submit
+    rejected because the server died mid-run is likewise recorded."""
     gaps = np.random.default_rng(seed).exponential(1.0 / rate,
                                                    size=len(workload))
     arrivals = np.cumsum(gaps)
 
     async def client(delay: float, item: WorkItem):
         await asyncio.sleep(delay)
-        stream = server.submit(item.prompt, item.max_new, slo=item.slo,
-                               deadline_s=item.deadline_s)
-        return [t async for t in stream]
+        try:
+            stream = server.submit(item.prompt, item.max_new, slo=item.slo,
+                                   deadline_s=item.deadline_s)
+        except ServerClosed as e:
+            return e
+        try:
+            return [t async for t in stream]
+        except Exception as e:    # terminal outcome is in server.metrics()
+            return e
 
     await asyncio.wait_for(
         asyncio.gather(*[client(float(arrivals[i]), w)
@@ -293,15 +501,27 @@ async def closed_loop(server: AsyncServer, workload: list[WorkItem], *,
 def percentile_rows(metrics: list[RequestMetrics]) -> dict:
     """TTFT/TPOT p50/p95 (microseconds) + goodput over a metrics batch.
     Goodput = deadline-meeting completed requests per second of makespan
-    (first submit to last completion)."""
-    ttft = np.asarray([m.ttft_s for m in metrics])
-    tpot = np.asarray([m.tpot_s for m in metrics])
-    span = (max(m.t_done_s for m in metrics)
-            - min(m.t_submit_s for m in metrics)) if metrics else 0.0
-    good = sum(m.ok for m in metrics)
-    return {"ttft_p50_us": float(np.percentile(ttft, 50)) * 1e6,
-            "ttft_p95_us": float(np.percentile(ttft, 95)) * 1e6,
-            "tpot_p50_us": float(np.percentile(tpot, 50)) * 1e6,
-            "tpot_p95_us": float(np.percentile(tpot, 95)) * 1e6,
+    (first submit to last completion). Percentiles are over COMPLETED
+    requests only; failed / shed / timed-out rows are counted explicitly
+    (`of` stays the total, so goodput degrades when work is lost)."""
+    done = [m for m in metrics if m.outcome == "completed"]
+    ttft = np.asarray([m.ttft_s for m in done])
+    tpot = np.asarray([m.tpot_s for m in done])
+    span = (max(m.t_done_s for m in done)
+            - min(m.t_submit_s for m in done)) if done else 0.0
+    good = sum(m.ok for m in done)
+
+    def pct(a, q):
+        return float(np.percentile(a, q)) * 1e6 if len(a) else 0.0
+
+    outcomes = collections.Counter(m.outcome for m in metrics)
+    return {"ttft_p50_us": pct(ttft, 50),
+            "ttft_p95_us": pct(ttft, 95),
+            "tpot_p50_us": pct(tpot, 50),
+            "tpot_p95_us": pct(tpot, 95),
             "goodput_rps": good / span if span > 0 else 0.0,
-            "good": good, "of": len(metrics)}
+            "good": good, "of": len(metrics),
+            "completed": len(done),
+            "failed": outcomes["failed"],
+            "shed": outcomes["shed"],
+            "timed_out": outcomes["timeout"]}

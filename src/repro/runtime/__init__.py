@@ -33,9 +33,11 @@ device cache pytree + block table, and keeps the public ``submit`` /
 (runtime/paged_kv.py) remains the bare bookkeeping base class
 KVCacheManager extends.
 """
-from repro.runtime.resilient import (  # noqa: F401
-    FailureInjector, StragglerMonitor, resilient_train_loop,
+from repro.runtime.faults import (  # noqa: F401
+    ChaosInjector, FailureInjector, InjectedFailure, ReplicaKilled,
+    StragglerMonitor,
 )
+from repro.runtime.resilient import resilient_train_loop  # noqa: F401
 from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: F401
 from repro.runtime.kv_manager import KVCacheManager  # noqa: F401
 from repro.runtime.model_runner import ModelRunner  # noqa: F401

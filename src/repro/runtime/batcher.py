@@ -275,6 +275,22 @@ class ContinuousBatcher:
                     f"page pool budget is n_pages={self.n_pages}")
         self.sched.submit(req, np.asarray(jax.device_get(req.prompt), np.int32))
 
+    def cancel(self, rid: int) -> bool:
+        """Abort a queued or running request: remove it from the wait
+        queue, or retire its slot — releasing its pages (shared pages
+        survive via refcounts, radix-indexed pages stay cached) and
+        clearing its block-table row. Safe between ticks only (the async
+        front door calls it from the engine loop while no tick is in
+        flight); an in-flight decode's token for the cancelled slot is
+        discarded via the slot-epoch check, exactly like preemption.
+        Returns True when the request was found and cancelled."""
+        where = self.sched.cancel(rid)
+        if where is None:
+            return False
+        if where >= 0:
+            self._clear_slots([where])
+        return True
+
     def _clear_slots(self, slots: list[int]):
         """Reset evicted/retired slots' block-table rows to the sentinel
         BEFORE the next compiled call: their pages may be reallocated this
@@ -566,6 +582,24 @@ class ContinuousBatcher:
             self.step_overlapped()
             ticks += 1
         return self.finished, ticks
+
+    # -- warm restart --------------------------------------------------------
+
+    def snapshot_kv(self, ckpt_dir: str, step: int = 0) -> int:
+        """Persist the radix prefix cache (index + page contents) through
+        the checkpoint store. Returns the number of snapshotted pages."""
+        assert self.paged, "snapshot_kv requires kv_layout='paged'"
+        return self.kv.snapshot_kv(self.cache, ckpt_dir, step)
+
+    def restore_kv(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Warm-start this engine's prefix cache from a ``snapshot_kv``
+        directory: restored chains land in the retired LRU with their
+        saved page contents, so the first admission round already gets
+        prefix hits. Returns the number of restored pages (0 when the
+        directory holds no snapshot)."""
+        assert self.paged, "restore_kv requires kv_layout='paged'"
+        self.cache, n = self.kv.restore_kv(self.cache, ckpt_dir, step)
+        return n
 
     # -- introspection ------------------------------------------------------
 

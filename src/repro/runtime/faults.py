@@ -1,0 +1,143 @@
+"""Shared fault-injection and health-monitoring primitives.
+
+Hoisted out of ``runtime/resilient.py`` (which keeps re-exports) so the
+TRAINING loop and the SERVING stack consume one set of chaos/health
+building blocks instead of growing parallel copies:
+
+  * ``FailureInjector`` — step-keyed chaos monkey for the training loop:
+    raises ``InjectedFailure`` at configured steps, once each (stands in
+    for preemption / device loss in CI).
+  * ``StragglerMonitor`` — wall-time EWMA + variance; observations slower
+    than mean + k*sigma are flagged. The training loop surfaces flags in
+    metrics; the serving front door derives per-replica HEALTH from it
+    (a replica whose engine ticks straggle is reported degraded).
+  * ``ChaosInjector`` — the SERVING chaos hook. Deterministic and
+    (seed, tick)-keyed so CI can exercise every serving failure path
+    reproducibly:
+      - fail_ticks: engine tick indices that raise ``InjectedFailure``
+        ONCE each (retryable — the injection fires at the tick boundary,
+        before any engine state mutates, so a supervised retry of the
+        same tick is exact);
+      - tick_fail_rate: seeded per-tick Bernoulli failures (same
+        raise-once, boundary-injected semantics; the draw is keyed by
+        (seed, tick), not by call order, so retries do not re-roll);
+      - kill_at_tick: the tick at which the replica DIES —
+        ``ReplicaKilled`` is fatal, never retried; the fleet router fails
+        the replica's in-flight streams over to survivors;
+      - stall_ticks: tick indices that sleep ``stall_s`` before the
+        engine advances (models a stalled stream / slow device without
+        failing anything — exercises timeout and straggler paths);
+      - poison_rids: request ids whose stream is failed with the cause
+        at its first token event — failure ISOLATION: only the poisoned
+        stream errors, the server keeps ticking.
+
+Everything here is host-side and jax-free.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+
+
+class InjectedFailure(RuntimeError):
+    """A deterministic injected fault (retryable at the tick boundary)."""
+
+
+class ReplicaKilled(InjectedFailure):
+    """Fatal injected fault: the serving replica is dead. Never retried —
+    the engine loop stops, open streams fail with this cause, and a fleet
+    fails the work over to a surviving replica."""
+
+
+@dataclass
+class FailureInjector:
+    fail_at_steps: tuple = ()
+    _fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    k_sigma: float = 3.0
+    warmup: int = 5
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._n += 1
+        if self._n <= self.warmup:
+            self._mean = dt if self._n == 1 else (self._mean + dt) / 2
+            return False
+        d = dt - self._mean
+        is_straggler = d > self.k_sigma * max(self._var, 1e-12) ** 0.5 and self._n > self.warmup
+        self._mean += self.alpha * d
+        self._var = (1 - self.alpha) * (self._var + self.alpha * d * d)
+        if is_straggler:
+            self.flagged.append((step, dt))
+        return is_straggler
+
+    @property
+    def mean_s(self) -> float:
+        """Current EWMA of the observed wall time (0.0 before warmup) —
+        the serving layer's projected-latency input for deadline-aware
+        load shedding."""
+        return self._mean if self._n else 0.0
+
+
+@dataclass
+class ChaosInjector:
+    """Deterministic serving chaos, keyed by (seed, tick) and request id.
+
+    ``on_tick(tick)`` is called at the START of every engine tick, before
+    any engine state mutates — so a raise here is retry-exact: re-running
+    the tick re-enters ``on_tick`` with the same tick number, the
+    raise-once bookkeeping skips, and the engine advances as if the fault
+    never happened. A real mid-tick device failure has no such guarantee;
+    the supervised retry is best-effort there and bounded either way.
+    """
+    seed: int = 0
+    fail_ticks: tuple = ()            # retryable one-shot tick failures
+    tick_fail_rate: float = 0.0       # seeded Bernoulli per-tick failures
+    kill_at_tick: int | None = None   # fatal: the replica dies here
+    stall_ticks: tuple = ()           # ticks delayed by stall_s (no error)
+    stall_s: float = 0.05
+    poison_rids: tuple = ()           # rids failed at their first token
+    injected_failures: int = 0
+    killed: bool = False
+    _fired: set = field(default_factory=set)
+
+    def _draw(self, tick: int) -> float:
+        # keyed by (seed, tick), NOT by call order: a retried tick sees
+        # the same draw it already survived-or-failed, never a fresh roll
+        return random.Random(f"chaos:{self.seed}:{tick}").random()
+
+    def on_tick(self, tick: int):
+        """Raise/stall per the configured schedule. Called at the tick
+        boundary (engine state untouched)."""
+        if self.kill_at_tick is not None and tick >= self.kill_at_tick \
+                and not self.killed:
+            self.killed = True
+            raise ReplicaKilled(f"injected replica kill at tick {tick}")
+        if tick in self.fail_ticks and ("fail", tick) not in self._fired:
+            self._fired.add(("fail", tick))
+            self.injected_failures += 1
+            raise InjectedFailure(f"injected tick failure at tick {tick}")
+        if self.tick_fail_rate > 0.0 and ("rate", tick) not in self._fired \
+                and self._draw(tick) < self.tick_fail_rate:
+            self._fired.add(("rate", tick))
+            self.injected_failures += 1
+            raise InjectedFailure(f"injected seeded failure at tick {tick}")
+        if tick in self.stall_ticks and ("stall", tick) not in self._fired:
+            self._fired.add(("stall", tick))
+            time.sleep(self.stall_s)
+
+    def is_poisoned(self, rid: int) -> bool:
+        return rid in self.poison_rids

@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import collections
 
+import numpy as np
+
 from repro.runtime import paged_kv as PK
 
 
@@ -71,6 +73,7 @@ class KVCacheManager(PK.PagedKVAllocator):
             collections.OrderedDict()           # retired pages, oldest first
         self.evictions = 0                      # retired pages reclaimed
         self.revivals = 0                       # retired pages re-shared
+        self.restored_pages = 0                 # pages revived by restore_kv
 
     # -- capacity ----------------------------------------------------------
 
@@ -236,3 +239,116 @@ class KVCacheManager(PK.PagedKVAllocator):
         if self.retain:
             self.register_tokens(tokens, self.pages[slot])
         return self.release(slot)
+
+    # -- warm restart: snapshot / restore ----------------------------------
+
+    def snapshot_kv(self, cache, ckpt_dir: str, step: int = 0) -> int:
+        """Persist the radix index AND its page contents through the
+        checkpoint store (atomic rename, crash-safe). Saved per node,
+        parent-first: the token chunk, the parent's node index (-1 = child
+        of root), and the node's LRU rank (-1 = active at snapshot time,
+        else 0-based oldest-first position in the retired LRU). Page
+        contents are gathered along the pool's page axis — for the packed
+        int8 layout the codes and shared exponents round-trip bit-exactly,
+        so a restored prefix is the SAME KV the donor engine computed.
+        Returns the number of snapshotted pages."""
+        import jax  # local: the manager is host-only except for snapshots
+        from repro.checkpoint.store import save_checkpoint
+        nodes: list[_RadixNode] = []
+        stack = [self.root]
+        while stack:                            # DFS, parents appended first
+            node = stack.pop()
+            if node is not self.root:
+                nodes.append(node)
+            stack.extend(node.children.values())
+        idx = {id(n): i for i, n in enumerate(nodes)}
+        rank = {pid: r for r, pid in enumerate(self._lru)}   # oldest first
+        pids = [n.page_id for n in nodes]
+        chunks = (np.asarray([n.chunk for n in nodes], np.int32)
+                  if nodes else np.zeros((0, self.page), np.int32))
+
+        def take(leaf):
+            return np.take(np.asarray(jax.device_get(leaf)), pids, axis=1)
+
+        pages = {g: jax.tree.map(take, cache[g])
+                 for g in ("layers", "dense") if g in cache}
+        tree = {
+            "meta": {"page": np.int32(self.page), "n": np.int32(len(nodes))},
+            "chunks": chunks,
+            "parent": np.asarray(
+                [-1 if n.parent is self.root else idx[id(n.parent)]
+                 for n in nodes], np.int32),
+            "lru_rank": np.asarray(
+                [rank.get(n.page_id, -1) for n in nodes], np.int32),
+            "pages": pages,
+        }
+        save_checkpoint(ckpt_dir, step, tree)
+        return len(nodes)
+
+    def restore_kv(self, cache, ckpt_dir: str, step: int | None = None):
+        """Warm-start the prefix cache from ``snapshot_kv`` output:
+        -> (cache', n_restored). Restored chains are rebuilt parent-first
+        into the radix tree using FREE pages only (restore never evicts —
+        a node that finds the free list empty is dropped along with its
+        descendants), parked in the retired LRU in their saved recency
+        order (actives-at-snapshot park at the MRU end), and their saved
+        contents scattered into the pool along the page axis. Chunks the
+        tree already indexes keep their existing canonical page. The first
+        admission round after restore therefore sees prefix hits exactly
+        as if the donor's requests had retired here."""
+        import jax
+        import jax.numpy as jnp
+        from repro.checkpoint.store import load_checkpoint_arrays
+        step, data = load_checkpoint_arrays(ckpt_dir, step)
+        if data is None:
+            return cache, 0
+        assert int(data["meta/page"]) == self.page, \
+            f"snapshot page size {int(data['meta/page'])} != {self.page}"
+        n = int(data["meta/n"])
+        chunks, parent = data["chunks"], data["parent"]
+        lru_rank = data["lru_rank"]
+        placed: list[_RadixNode | None] = [None] * n
+        kept: list[tuple[int, int]] = []        # (saved node idx, page id)
+        for i in range(n):
+            par = self.root if parent[i] < 0 else placed[parent[i]]
+            if par is None:
+                continue                        # ancestor dropped
+            chunk = tuple(int(t) for t in chunks[i])
+            existing = par.children.get(chunk)
+            if existing is not None:
+                placed[i] = existing            # chunk already canonical
+                continue
+            if not self.free:
+                continue                        # restore never evicts
+            pid = self.free.pop()
+            node = _RadixNode(chunk, par, pid)
+            par.children[chunk] = node
+            self._node_of_page[pid] = node      # refcount stays 0: retired
+            placed[i] = node
+            kept.append((i, pid))
+        # Park in saved recency order: retired ranks ascending (oldest
+        # first), then pages that were ACTIVE at snapshot time at MRU end.
+        for i, pid in sorted(
+                kept, key=lambda t: (int(lru_rank[t[0]]) < 0,
+                                     int(lru_rank[t[0]]))):
+            self._lru[pid] = placed[i]
+        if kept:
+            sel = np.asarray([i for i, _ in kept])
+            dst = np.asarray([p for _, p in kept])
+            cache = dict(cache)
+            for g in ("layers", "dense"):
+                if g not in cache:
+                    continue
+                leaves, treedef = jax.tree_util.tree_flatten_with_path(
+                    cache[g])
+                out = []
+                for path, leaf in leaves:
+                    key = "/".join(
+                        ["pages", g] +
+                        [str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path])
+                    arr = jnp.asarray(data[key][:, sel], leaf.dtype)
+                    out.append(leaf.at[:, dst].set(arr))
+                cache[g] = jax.tree_util.tree_unflatten(treedef, out)
+        self.restored_pages += len(kept)
+        return cache, len(kept)

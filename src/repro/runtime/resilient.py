@@ -18,51 +18,17 @@ sharding set as input and device_puts the restored state accordingly.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
-
-
-class InjectedFailure(RuntimeError):
-    pass
-
-
-@dataclass
-class FailureInjector:
-    fail_at_steps: tuple = ()
-    _fired: set = field(default_factory=set)
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
-            raise InjectedFailure(f"injected failure at step {step}")
-
-
-@dataclass
-class StragglerMonitor:
-    alpha: float = 0.2
-    k_sigma: float = 3.0
-    warmup: int = 5
-    _mean: float = 0.0
-    _var: float = 0.0
-    _n: int = 0
-    flagged: list = field(default_factory=list)
-
-    def observe(self, step: int, dt: float) -> bool:
-        self._n += 1
-        if self._n <= self.warmup:
-            self._mean = dt if self._n == 1 else (self._mean + dt) / 2
-            return False
-        d = dt - self._mean
-        is_straggler = d > self.k_sigma * max(self._var, 1e-12) ** 0.5 and self._n > self.warmup
-        self._mean += self.alpha * d
-        self._var = (1 - self.alpha) * (self._var + self.alpha * d * d)
-        if is_straggler:
-            self.flagged.append((step, dt))
-        return is_straggler
+# The fault primitives were hoisted to runtime/faults.py (shared with the
+# serving chaos hooks); these re-exports keep every historical import path
+# (repro.runtime.resilient.FailureInjector etc.) working unchanged.
+from repro.runtime.faults import (  # noqa: F401
+    FailureInjector, InjectedFailure, StragglerMonitor,
+)
 
 
 def resilient_train_loop(*, init_state, step_fn: Callable, batch_fn: Callable,

@@ -253,6 +253,24 @@ class Scheduler:
         front door (zero means a graceful shutdown may stop the loop)."""
         return len(self.queue) + len(self._live())
 
+    def cancel(self, rid: int) -> int | None:
+        """Abort request `rid` wherever it is: drop it from the wait queue
+        (no slot held — returns -1) or retire its slot (pages released,
+        epoch bumped so an in-flight decode's token for the slot is
+        discarded at collect — returns the slot for block-table clearing).
+        Returns None when the request is not queued or running (already
+        finished, or never submitted). The front door uses this for
+        per-request timeouts and poisoned-request isolation."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                return -1
+        for s, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                self.retire(s)
+                return s
+        return None
+
     # -- preemption --------------------------------------------------------
 
     def preempt(self, slot: int) -> int:

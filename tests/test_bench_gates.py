@@ -62,6 +62,25 @@ def _serving_rows(match=True, overlapped=7, completed=8, of=8, drained=True,
     ]
 
 
+def _fault_rows(killed=1, failovers=3, fo_done=6, fo_of=6, fo_match=True,
+                shed=4, expected_shed=4, shed_done=3, shed_of=7,
+                shed_drained=True, snap=2, restored=2, warm_hits=6,
+                cold_hits=4, hit_rate=0.67, wr_match=True):
+    """The chaos-serving artifact: failover / shedding / warm restart."""
+    return [
+        ("serve/failover_recovery", 100.0,
+         f"killed={killed} failovers={failovers} completed={fo_done} "
+         f"of={fo_of} tokens_match={fo_match} reroutes=3"),
+        ("serve/shed_overload", 100.0,
+         f"shed={shed} expected_shed={expected_shed} completed={shed_done} "
+         f"of={shed_of} served={shed_done} drained={shed_drained}"),
+        ("serve/warm_restart", 100.0,
+         f"snapshot_pages={snap} restored_pages={restored} "
+         f"warm_hits={warm_hits} cold_hits={cold_hits} "
+         f"hit_rate={hit_rate:.4f} tokens_match={wr_match}"),
+    ]
+
+
 def _tp_rows(match=True, shards=2, shard_bytes=32768, global_bytes=65536):
     """The sharded-serving artifact: only emitted with >= 2 devices."""
     return [
@@ -74,7 +93,8 @@ def _tp_rows(match=True, shards=2, shard_bytes=32768, global_bytes=65536):
 def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
     rc = cbg.main(["--json", _artifact(tmp_path, "k.json", _kernel_rows()),
                    "--json", _artifact(tmp_path, "s.json",
-                                       _serving_rows() + _tp_rows())])
+                                       _serving_rows() + _fault_rows()
+                                       + _tp_rows())])
     assert rc == 0
     assert "all bench gates passed" in capsys.readouterr().out
 
@@ -95,6 +115,17 @@ def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
     (_serving_rows(prefix=0.30, random=0.28, single=0.44),
      "below the single-replica baseline"),
     (_serving_rows(fleet_done=11), "fleet lost streams"),
+    (_fault_rows(killed=0), "kill did not land"),
+    (_fault_rows(failovers=0), "never forced a failover"),
+    (_fault_rows(fo_done=5), "failover lost requests"),
+    (_fault_rows(fo_match=False), "diverged from the fault-free run"),
+    (_fault_rows(shed=3), "shed count drifted"),
+    (_fault_rows(shed_done=2), "non-shed streams lost"),
+    (_fault_rows(shed_drained=False), "shed run left streams open"),
+    (_fault_rows(snap=0, restored=0), "snapshot captured no pages"),
+    (_fault_rows(restored=1), "restore dropped pages"),
+    (_fault_rows(warm_hits=4), "no extra first-round hits"),
+    (_fault_rows(wr_match=False), "diverged from the cold run"),
     (_tp_rows(match=False), "TP=2 decode diverged"),
     (_tp_rows(shards=1), "not sharded"),
     (_tp_rows(shard_bytes=65536), "not split across shards"),

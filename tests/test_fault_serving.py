@@ -1,0 +1,369 @@
+"""Fault-tolerant serving: chaos injection, supervision, failover, warm
+restart.
+
+Acceptance criteria of the fault-tolerance PR:
+  * a chaos-injected engine-tick failure is retried at the tick boundary
+    and the recovered run is TOKEN-IDENTICAL to a fault-free one (the
+    injection fires before any engine state mutates, so the retry is
+    exact);
+  * a POISONED request fails only its own stream — the server keeps
+    ticking, every other stream completes, and the poisoned request's
+    pages/slot are reclaimed (failure isolation);
+  * a REPLICA KILL mid-decode fails the dead replica's streams over to a
+    survivor: every request still completes, token-identical (greedy
+    replay + skip-consume of already-delivered tokens);
+  * a request exceeding its wall-clock TIMEOUT is cancelled out of the
+    engine and the page pool returns to empty;
+  * SHED batch-class requests terminate with an explicit outcome and
+    never touch the engine;
+  * a WARM-RESTARTED engine (radix/page snapshot through the checkpoint
+    store) reports prefix hits on its FIRST admission round, with token
+    parity against a cold run.
+
+Every await is wrapped in a timeout so a livelocked loop fails the test
+instead of hanging the suite.
+"""
+import asyncio
+import tempfile
+import types
+
+import jax
+import pytest
+
+from repro import configs
+from repro.launch.router import EngineFleet, prefix_replica
+from repro.launch.server import (
+    AsyncServer,
+    RequestShed,
+    RequestTimeout,
+)
+from repro.models import model as M
+from repro.quant import linear as Q
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.faults import ChaosInjector, InjectedFailure, ReplicaKilled
+from repro.runtime.model_runner import ModelRunner
+
+KEY = jax.random.PRNGKey(11)
+WAIT_S = 240.0
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = configs.smoke_config("llama7b")
+    params = M.init(cfg, KEY)
+    runner = ModelRunner(cfg, params, Q.FP, prefill_chunk=32,
+                         prefill_slots=4)
+    return cfg, params, runner
+
+
+def _prompts(cfg, lens, salt=0):
+    return [jax.random.randint(jax.random.fold_in(KEY, salt * 100 + i),
+                               (n,), 0, cfg.vocab)
+            for i, n in enumerate(lens)]
+
+
+def _bat(engine, **kw):
+    cfg, params, runner = engine
+    return ContinuousBatcher(cfg, params, Q.FP, n_slots=4, max_len=128,
+                             runner=runner, **kw)
+
+
+def _ref_tokens(engine, prompts, gen):
+    bat = _bat(engine)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    finished, _ = bat.run()
+    return {r.rid: list(r.out_tokens) for r in finished}
+
+
+async def _collect(stream):
+    return [t async for t in stream]
+
+
+# -- the chaos injector itself ----------------------------------------------
+
+def test_chaos_injector_is_retry_exact():
+    """A retried tick re-enters on_tick with the same key: the raise-once
+    bookkeeping skips, the seeded draw does not re-roll, and the kill
+    fires exactly once."""
+    chaos = ChaosInjector(fail_ticks=(2,), kill_at_tick=5)
+    chaos.on_tick(0)
+    chaos.on_tick(1)
+    with pytest.raises(InjectedFailure):
+        chaos.on_tick(2)
+    chaos.on_tick(2)                       # the retry of tick 2 is clean
+    assert chaos.injected_failures == 1
+    with pytest.raises(ReplicaKilled):
+        chaos.on_tick(5)
+    assert chaos.killed
+    chaos.on_tick(6)                       # dead replicas don't re-kill
+    # seeded per-tick draws are keyed by (seed, tick), not call order
+    a = ChaosInjector(seed=3)
+    b = ChaosInjector(seed=3)
+    assert [a._draw(t) for t in range(8)] == [b._draw(t) for t in range(8)]
+
+
+# -- tick retry --------------------------------------------------------------
+
+def test_tick_retry_recovers_token_identical(engine):
+    """Two injected tick failures: the supervised loop retries with
+    backoff and every stream's greedy tokens equal the fault-free run."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [40, 50, 60, 70, 30, 44], salt=1)
+    gen = 6
+    ref = _ref_tokens(engine, prompts, gen)
+
+    async def go():
+        srv = AsyncServer(_bat(engine),
+                          chaos=ChaosInjector(fail_ticks=(1, 3)),
+                          backoff_s=0.005)
+        await srv.start()
+        streams = [srv.submit(p, gen) for p in prompts]
+        outs = await asyncio.wait_for(
+            asyncio.gather(*[_collect(s) for s in streams]), timeout=WAIT_S)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return srv, outs
+
+    srv, outs = asyncio.run(go())
+    assert {i: o for i, o in enumerate(outs)} == ref
+    ctr = srv.counters()
+    assert ctr["tick_failures"] == 2
+    assert ctr["completed"] == 6 and ctr["failed"] == 0
+    assert ctr["health"] in ("ok", "slow")   # survived: not dead
+
+
+def test_fatal_after_retry_budget_marks_dead(engine):
+    """More consecutive failures than the retry budget: the replica dies,
+    open streams fail with the cause, submit rejects — but shutdown
+    (drain=True) still joins cleanly."""
+    cfg, _, _ = engine
+    prompt = _prompts(cfg, [16], salt=2)[0]
+
+    async def go():
+        srv = AsyncServer(_bat(engine),
+                          chaos=ChaosInjector(fail_ticks=(0, 0)),
+                          tick_retries=0, backoff_s=0.005)
+        await srv.start()
+        stream = srv.submit(prompt, 8)
+        with pytest.raises(InjectedFailure):
+            await asyncio.wait_for(_collect(stream), timeout=WAIT_S)
+        from repro.launch.server import ServerClosed
+        with pytest.raises(ServerClosed):
+            srv.submit(prompt, 8)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return srv
+
+    srv = asyncio.run(go())
+    assert srv.counters()["health"] == "dead"
+    assert srv.counters()["failed"] == 1
+
+
+# -- failure isolation -------------------------------------------------------
+
+def test_poisoned_request_isolated(engine):
+    """Poisoning request 1 fails ITS stream only: the other five complete
+    token-identically and the poisoned request's pages are reclaimed."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [40, 50, 60, 70, 30, 44], salt=1)
+    gen = 6
+    ref = _ref_tokens(engine, prompts, gen)
+
+    async def go():
+        srv = AsyncServer(_bat(engine),
+                          chaos=ChaosInjector(poison_rids=(1,)))
+        await srv.start()
+        streams = [srv.submit(p, gen) for p in prompts]
+        outs = await asyncio.wait_for(
+            asyncio.gather(*[_collect(s) for s in streams],
+                           return_exceptions=True), timeout=WAIT_S)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return srv, outs
+
+    srv, outs = asyncio.run(go())
+    assert isinstance(outs[1], InjectedFailure)
+    for i in (0, 2, 3, 4, 5):
+        assert outs[i] == ref[i], i
+    ctr = srv.counters()
+    assert ctr["completed"] == 5 and ctr["failed"] == 1
+    assert ctr["health"] in ("ok", "slow")
+    assert srv.bat.kv.used_count == 0        # poisoned pages reclaimed
+    mets = {m.rid: m for m in srv.metrics()}
+    assert mets[1].outcome == "failed" and not mets[1].ok
+    assert all(mets[i].outcome == "completed" for i in (0, 2, 3, 4, 5))
+
+
+# -- replica kill + failover -------------------------------------------------
+
+def test_replica_kill_fails_over_token_identical(engine):
+    """Kill replica 0 mid-decode: its in-flight streams replay on the
+    survivor (skip-consuming already-delivered tokens) and EVERY request
+    completes with fault-free greedy tokens."""
+    cfg, _, _ = engine
+    # deterministic split: pick prompts whose prefix routes to each replica
+    cands = _prompts(cfg, [40, 44, 48, 52, 56, 60, 64, 68, 36, 32], salt=4)
+    to0 = [p for p in cands if prefix_replica(p, 2) == 0][:3]
+    to1 = [p for p in cands if prefix_replica(p, 2) == 1][:3]
+    assert len(to0) == 3 and len(to1) == 3, "salt no longer splits 3/3"
+    prompts = to0 + to1
+    gen = 8
+    ref = _ref_tokens(engine, prompts, gen)
+
+    async def go():
+        srv0 = AsyncServer(_bat(engine),
+                           chaos=ChaosInjector(kill_at_tick=3))
+        srv1 = AsyncServer(_bat(engine))
+        fleet = EngineFleet([srv0, srv1])
+        await fleet.start()
+        streams = [fleet.submit(p, gen) for p in prompts]
+        outs = await asyncio.wait_for(
+            asyncio.gather(*[_collect(s) for s in streams]), timeout=WAIT_S)
+        await asyncio.wait_for(fleet.shutdown(drain=True), timeout=WAIT_S)
+        return fleet, outs
+
+    fleet, outs = asyncio.run(go())
+    assert {i: o for i, o in enumerate(outs)} == ref
+    ctr = fleet.counters()
+    assert fleet.failovers >= 1, "the kill never forced a failover"
+    assert ctr["health"] == ["dead", "ok"] or ctr["health"] == ["dead", "slow"]
+    assert ctr["completed"] == len(prompts)
+    # routing refuses the dead replica afterwards (even for an affinity
+    # target that hashes to it)
+    healthy = [h != "dead" for h in fleet.health()]
+    assert all(fleet.router.pick(p, fleet._loads(), healthy) == 1
+               for p in prompts)
+    assert fleet.router.reroutes >= 1
+
+
+# -- per-request timeouts ----------------------------------------------------
+
+def test_request_timeout_frees_pages(engine):
+    """An overdue request on a STALLED engine (chaos stall ticks) is
+    cancelled: its stream fails with RequestTimeout and the page pool
+    returns to empty."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [40, 30], salt=5)
+
+    async def go():
+        srv = AsyncServer(_bat(engine),
+                          chaos=ChaosInjector(
+                              stall_ticks=tuple(range(6, 200)),
+                              stall_s=0.02))
+        await srv.start()
+        doomed = srv.submit(prompts[0], 80, timeout_s=0.25)
+        fine = srv.submit(prompts[1], 4)
+        done = await asyncio.wait_for(
+            asyncio.gather(_collect(doomed), _collect(fine),
+                           return_exceptions=True), timeout=WAIT_S)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return srv, done
+
+    srv, (doomed_out, fine_out) = asyncio.run(go())
+    assert isinstance(doomed_out, RequestTimeout)
+    assert len(fine_out) == 4
+    ctr = srv.counters()
+    assert ctr["timeouts"] == 1 and ctr["completed"] == 1
+    assert srv.bat.kv.used_count == 0        # slot retired, pages released
+    mets = {m.rid: m for m in srv.metrics()}
+    assert mets[0].outcome == "timeout" and not mets[0].ok
+
+
+# -- load shedding -----------------------------------------------------------
+
+def test_shed_requests_never_touch_engine(engine):
+    """Depth-policy shedding: batch-class submissions past the depth
+    threshold terminate with RequestShed at submit time — zero engine
+    state touched — while interactive traffic is never shed."""
+    cfg, _, _ = engine
+    prompts = _prompts(cfg, [24, 28, 32, 36, 20], salt=6)
+    gen = 4
+
+    async def go():
+        srv = AsyncServer(_bat(engine), shed_policy="depth", shed_depth=2)
+        # submit BEFORE starting the loop: depth grows deterministically
+        streams = [srv.submit(p, gen, slo="batch") for p in prompts[:4]]
+        streams.append(srv.submit(prompts[4], gen, slo="interactive"))
+        n_staged = len(srv._staged)
+        await srv.start()
+        outs = await asyncio.wait_for(
+            asyncio.gather(*[_collect(s) for s in streams],
+                           return_exceptions=True), timeout=WAIT_S)
+        await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+        return srv, n_staged, outs
+
+    srv, n_staged, outs = asyncio.run(go())
+    # batch #0, #1 admitted (depth 0, 1); #2, #3 shed (depth >= 2);
+    # the interactive request rides through regardless of depth
+    assert n_staged == 3                     # shed ones were never staged
+    assert len(outs[0]) == gen and len(outs[1]) == gen
+    assert isinstance(outs[2], RequestShed)
+    assert isinstance(outs[3], RequestShed)
+    assert len(outs[4]) == gen
+    ctr = srv.counters()
+    assert ctr["shed"] == 2 and ctr["completed"] == 3
+    mets = {m.rid: m for m in srv.metrics()}
+    assert mets[2].outcome == "shed" and mets[2].n_tokens == 0
+
+
+def test_deadline_shed_projection():
+    """The deadline policy sheds when projected first-token latency
+    (depth x EWMA tick time) exceeds the budget — engine-free unit test
+    over the decision function."""
+    srv = AsyncServer(types.SimpleNamespace(
+        paged=True, sched=types.SimpleNamespace(outstanding=lambda: 10)),
+        shed_policy="deadline")
+    srv._mon._mean, srv._mon._n = 0.1, 20    # 0.1 s/tick, warm monitor
+    assert srv._should_shed("batch", deadline_s=0.5)       # 10*0.1 > 0.5
+    assert not srv._should_shed("batch", deadline_s=2.0)   # fits
+    assert not srv._should_shed("batch", deadline_s=None)  # no budget known
+    assert not srv._should_shed("interactive", 0.1)        # never shed
+    cold = AsyncServer(types.SimpleNamespace(
+        paged=True, sched=types.SimpleNamespace(outstanding=lambda: 10)),
+        shed_policy="deadline")
+    assert not cold._should_shed("batch", 0.5)             # unwarmed monitor
+
+
+# -- warm restart ------------------------------------------------------------
+
+def test_warm_restart_prefix_hits_first_round(engine):
+    """Snapshot a served engine's radix/page state, restore into a FRESH
+    engine: the first admission round reports prefix hits (the cold run's
+    follower-only hits are strictly exceeded) with token parity."""
+    cfg, _, _ = engine
+    prefix = jax.random.randint(jax.random.fold_in(KEY, 700), (64,),
+                                0, cfg.vocab)
+    prompts = [jax.numpy.concatenate(
+        [prefix, jax.random.randint(jax.random.fold_in(KEY, 701 + i),
+                                    (n,), 0, cfg.vocab)])
+        for i, n in enumerate([5, 9, 13])]
+    gen = 5
+    ref = _ref_tokens(engine, prompts, gen)
+
+    def run_server(bat):
+        async def go():
+            srv = AsyncServer(bat)
+            await srv.start()
+            streams = [srv.submit(p, gen) for p in prompts]
+            outs = await asyncio.wait_for(
+                asyncio.gather(*[_collect(s) for s in streams]),
+                timeout=WAIT_S)
+            await asyncio.wait_for(srv.shutdown(drain=True), timeout=WAIT_S)
+            return outs
+        return asyncio.run(go())
+
+    donor = _bat(engine)
+    assert run_server(donor) == [ref[i] for i in range(3)]
+    snap_dir = tempfile.mkdtemp()
+    n_snap = donor.snapshot_kv(snap_dir)
+    assert n_snap > 0
+
+    cold = _bat(engine)
+    run_server(cold)
+    cold_hits = cold.prefix_hit_pages        # followers only
+
+    warm = _bat(engine)
+    assert warm.restore_kv(snap_dir) == n_snap
+    assert warm.kv.cached_count == n_snap and warm.kv.used_count == 0
+    assert run_server(warm) == [ref[i] for i in range(3)]
+    assert warm.prefix_hit_pages > cold_hits, \
+        "restored radix state produced no extra first-round hits"
+    assert warm.prefix_hit_rate > 0

@@ -41,6 +41,23 @@ from repro.launch import serve
     (["--serve", "--routing", "prefix"], "requires --replicas"),
     (["--serve", "--replicas", "1", "--routing", "prefix"],
      "requires --replicas"),
+    # chaos / supervision / shedding live in the AsyncServer engine
+    # loop; the sync batcher path has no ticks to retry
+    (["--chaos-seed", "7"], "requires --serve"),
+    (["--continuous", "--chaos-kill-tick", "3"], "requires --serve"),
+    (["--request-timeout-s", "5"], "requires --serve"),
+    (["--continuous", "--shed-policy", "deadline"], "requires --serve"),
+    # the two shedding knobs only make sense together
+    (["--serve", "--shed-policy", "depth"], "requires --shed-depth"),
+    (["--serve", "--shed-depth", "4"], "requires --shed-policy depth"),
+    (["--serve", "--shed-policy", "deadline", "--shed-depth", "4"],
+     "requires --shed-policy depth"),
+    # the snapshot persists the radix tree + page pool
+    (["--kv-snapshot", "/tmp/kv"], "requires --continuous"),
+    (["--continuous", "--kv-snapshot", "/tmp/kv", "--kv-layout", "dense"],
+     "paged"),
+    (["--serve", "--kv-snapshot", "/tmp/kv", "--kv-layout", "dense"],
+     "paged"),
 ])
 def test_invalid_flag_combos_rejected(argv, needle, capsys):
     with pytest.raises(SystemExit) as exc:
