@@ -65,6 +65,28 @@ def gate_packed_kv(vals, der):
     _require(ratio <= 0.55, f"packed KV regressed: {ratio:.4f} > 0.55")
 
 
+def gate_packed4_kv(vals, der):
+    """Nibble-packed KV byte accounting: two 4-bit codes per byte + int8
+    per-32-block exponents floors at 4.25/16 ~ 0.27 of the bf16 paged
+    pool; the sub-byte packing must never silently regress past 0.30x."""
+    fp = vals["serve/kv_bytes_per_slot_paged"]
+    p4 = vals["serve/kv_bytes_per_slot_packed4"]
+    ratio = p4 / fp
+    print(f"  packed4/fp KV bytes per slot: {p4:.0f}/{fp:.0f} = {ratio:.4f}")
+    _require(ratio <= 0.30, f"packed4 KV regressed: {ratio:.4f} > 0.30")
+
+
+def gate_fused_parity(vals, der):
+    """The fused Pallas paged-attention engine must be greedy-token
+    identical to the unfused gathered-dequant path on the same packed
+    workload (both at fp32 compute, where exact parity is well-posed)."""
+    fp = der["serve/decode_tick_fused"]
+    print(f"  fused parity: tokens_match={fp['tokens_match']} "
+          f"slots={fp['slots']}")
+    _require(fp["tokens_match"] == "True",
+             "fused paged attention diverged from the unfused jnp path")
+
+
 def gate_prefix_cache(vals, der):
     """A 4-request workload sharing a 64-token (2-page) prefix must store
     each shared page exactly once — 3 followers x 2 pages deduped out of
@@ -234,6 +256,9 @@ def gate_tp_parity(vals, der):
 GATES = [
     (gate_packed_kv, ("serve/kv_bytes_per_slot_paged",
                       "serve/kv_bytes_per_slot_packed")),
+    (gate_packed4_kv, ("serve/kv_bytes_per_slot_paged",
+                       "serve/kv_bytes_per_slot_packed4")),
+    (gate_fused_parity, ("serve/decode_tick_fused",)),
     (gate_prefix_cache, ("serve/kv_bytes_logical_vs_physical",
                          "serve/prefix_hit_rate")),
     (gate_batched_prefill, ("serve/batched_prefill_tick",)),

@@ -136,6 +136,7 @@ def serving_rows(tiny: bool = False):
                            f"/{stats['pages_total']}"))
     out.extend(prefix_rows(cfg, params, tiny=tiny))
     out.extend(engine_rows(cfg, params, tiny=tiny))
+    out.extend(fused_rows(cfg, params, n_slots, max_len, tiny=tiny))
     return out
 
 
@@ -240,6 +241,104 @@ def engine_rows(cfg, params, tiny: bool = False):
                    f"preempted={bat.preemptions} "
                    f"recomputed={bat.recomputed_tokens} "
                    f"completed={done} of=3 pool=6pages"))
+    return out
+
+
+def fused_rows(cfg, params, n_slots, max_len, tiny: bool = False):
+    """Fused paged-attention rows (the CI smoke gate reads the first two):
+      * serve/decode_tick_fused — decode-tick latency of the packed+fused
+        engine; the derived column carries tokens_match vs a packed+unfused
+        engine on the same workload at fp32 compute (exact greedy-token
+        parity is only well-posed at fp32 — the kernel's online softmax and
+        the full softmax differ by ulps, and bf16 argmax amplifies them);
+      * serve/kv_bytes_per_slot_packed4 — per-slot bytes of the nibble
+        pool (4.25 bits/elt) at the SAME n_slots/max_len as the paged/
+        packed rows above, so the gate's ratio vs the bf16 paged row is
+        pure storage width (floor 4.25/16 ~ 0.27);
+      * gemm/paged_attn_fused_vs_unfused — kernel-level wall time of one
+        fused Pallas call vs the gathered-dequant jnp path on one decode
+        shape (interpret-mode correctness number on CPU; the structural
+        win — K/V never materialise at bf16 width — is in the bits)."""
+    import dataclasses
+
+    from repro.core import bbfp as B
+    from repro.kernels import paged_attention as PA
+    from repro.models import attention as A
+    from repro.models import model as M
+    from repro.quant import linear as Q
+
+    kvq = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    cfg32 = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    params32 = M.init(cfg32, jax.random.PRNGKey(3))
+    f_slots, f_len, gen = (2, 64, 6) if tiny else (3, 96, 10)
+    prompts = _prompts(cfg32, [5 + 7 * i for i in range(f_slots)], seed=12)
+
+    def engine(paged_attn):
+        bat = _serve_batcher(cfg32, params32, kvq, prompts, gen,
+                             n_slots=f_slots, max_len=f_len,
+                             kv_storage="packed", paged_attn=paged_attn)
+        bat.step()                              # admit + compile the decode
+        us = _timed_ticks(bat, 4 if tiny else 8)
+        bat.run()
+        toks = {r.rid: [int(t) for t in r.out_tokens] for r in bat.finished}
+        return us, toks
+
+    us_f, toks_f = engine("fused")
+    _, toks_u = engine("unfused")
+    out = [row("serve/decode_tick_fused", us_f,
+               f"slots={f_slots} tokens_match={toks_f == toks_u} "
+               f"vs=unfused_jnp compute=fp32 kvq=BBFP(6_3)")]
+    # packed4 byte accounting at the serving_rows pool sizing (same cfg,
+    # n_slots, max_len, default n_pages) so the packed4/paged ratio is
+    # storage width alone; BBFP(2,1) is the widest nibble-codable member
+    kvq4 = Q.QuantConfig(kv_cache="BBFP(2,1)")
+    bat4 = _serve_batcher(cfg, params, kvq4,
+                          _prompts(cfg, [5 + 7 * i for i in range(n_slots)],
+                                   seed=4), 2,
+                          n_slots=n_slots, max_len=max_len,
+                          kv_storage="packed4", paged_attn="fused")
+    bat4.step()                                 # fused decode actually runs
+    stats = bat4.kv_stats()
+    bat4.run()
+    out.append(row("serve/kv_bytes_per_slot_packed4",
+                   stats["kv_bytes_per_slot"],
+                   "unit=bytes (store/slots) bits/elt=4.25"))
+    # kernel-level fused-vs-unfused on one decode shape: a 1-slot pool of
+    # full pages, query at the last row (everything live, no masking skew)
+    kh, g, hd = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    page, n_pg = 32, (2 if tiny else 4)
+    t = n_pg * page
+    fmt = B.parse_format("BBFP(6,3)")
+    proto = B.pack_kv(jnp.zeros((1, 1, kh, hd)), fmt)
+    pool = lambda leaf: jnp.zeros((n_pg + 1,) + (page,) + leaf.shape[2:],
+                                  jnp.int8)
+    bt = jnp.arange(n_pg, dtype=jnp.int32)[None]
+    rows_k = jax.random.normal(jax.random.PRNGKey(13), (1, t, kh, hd))
+    rows_v = jax.random.normal(jax.random.PRNGKey(14), (1, t, kh, hd))
+    zero = jnp.zeros((1,), jnp.int32)
+    kp = A._paged_append({"q": pool(proto["q"]), "exp": pool(proto["exp"])},
+                         bt, zero, rows_k, fmt)
+    vp = A._paged_append({"q": pool(proto["q"]), "exp": pool(proto["exp"])},
+                         bt, zero, rows_v, fmt)
+    q = jax.random.normal(jax.random.PRNGKey(15), (1, 1, kh, g, hd),
+                          jnp.float32)
+    pos, win = jnp.asarray([t - 1]), jnp.asarray(t + 1, jnp.int32)
+    us_fk = time_us(lambda: PA.paged_attention(q, kp, vp, bt, pos, win,
+                                               fmt=fmt))
+
+    @jax.jit
+    def unfused(q, kp, vp):
+        k = A._paged_view(kp, bt, fmt, jnp.float32)
+        v = A._paged_view(vp, bt, fmt, jnp.float32)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / (hd ** 0.5)
+        where = (jnp.arange(t) <= t - 1)[None, None, None, None, :]
+        p = Q.qsoftmax(s, Q.FP, axis=-1, where=where)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+    us_uk = time_us(unfused, q, kp, vp)
+    out.append(row("gemm/paged_attn_fused_vs_unfused", us_fk,
+                   f"unfused_us={us_uk:.1f} pages={n_pg} page={page} "
+                   f"kh={kh} hd={hd} kv_bits/elt=8.25 (view never hits bf16)"))
     return out
 
 

@@ -11,8 +11,12 @@ online-softmax reference to fp32 tolerance.
 
 Grid: (batch*kv_heads*groups, Sq/TQ, Skv/TK), K innermost; m/l/acc carried
 in VMEM scratch across the K dimension (same pattern as bbfp_matmul).
-Causal tiles above the diagonal are masked (a production version would use
-a custom grid to skip them; the jnp path already does — §Perf C1).
+Causal K tiles fully above the diagonal are SKIPPED via ``pl.when`` on the
+tile index (§Perf C1, mirroring the jnp path's static chunk skip): the
+dot/LUT-exp/accumulate body never executes for a tile whose first K
+position is past the q tile's last row — ~2x fewer tile FLOPs for square
+causal attention (``causal_live_tiles`` is the exact count; the
+``causal_skip`` perf flag re-enables compute-all-then-mask for A/B runs).
 """
 from __future__ import annotations
 
@@ -51,9 +55,20 @@ def _lut_exp_tile(s, table, *, m, o, e_min, a_bits):
     return y
 
 
+def causal_live_tiles(sq: int, skv: int, tq: int, tk: int) -> int:
+    """Number of (q tile, k tile) pairs the causal kernel actually computes:
+    k tile ki is live for q tile qi iff its first K position ki*tk is <= the
+    q tile's last row qi*tq + tq - 1. The tile-FLOP cost of one (bh) slice
+    is proportional to this count — for sq == skv it approaches half of
+    (sq/tq)*(skv/tk), the §Perf C1 win the skip delivers."""
+    n_k = skv // tk
+    return sum(min(n_k, (qi * tq + tq - 1) // tk + 1)
+               for qi in range(sq // tq))
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, m_ref, l_ref, acc_ref,
                   *, scale, causal, n_k, tq, tk, m_bits, o_bits, e_min, a_bits,
-                  exp_lo):
+                  exp_lo, skip_masked_tiles):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -63,28 +78,38 @@ def _flash_kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                 # (TQ, hd)
-    k = k_ref[0].astype(jnp.float32)                 # (TK, hd)
-    v = v_ref[0].astype(jnp.float32)                 # (TK, hd_v)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if causal:
-        qpos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
-        kpos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
-        s = jnp.where(kpos <= qpos, s, NEG)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                 # (TQ, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (TK, hd)
+        v = v_ref[0].astype(jnp.float32)                 # (TK, hd_v)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            kpos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    shifted = jnp.maximum(s - m_new[:, None], exp_lo)   # bounded unit domain
-    p = _lut_exp_tile(shifted, tab_ref[...], m=m_bits, o=o_bits,
-                      e_min=e_min, a_bits=a_bits)
-    if causal:
-        p = jnp.where(kpos <= qpos, p, 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        shifted = jnp.maximum(s - m_new[:, None], exp_lo)   # bounded unit domain
+        p = _lut_exp_tile(shifted, tab_ref[...], m=m_bits, o=o_bits,
+                          e_min=e_min, a_bits=a_bits)
+        if causal:
+            p = jnp.where(kpos <= qpos, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if skip_masked_tiles:
+        # §Perf C1: a K tile whose first position is past the q tile's last
+        # row is fully masked — scratch state is bitwise-unchanged whether
+        # we compute-and-mask it or never touch it, so skip it entirely.
+        # (causal_live_tiles counts exactly the tiles that run.)
+        pl.when(ki * tk <= qi * tq + tq - 1)(_tile)
+    else:
+        _tile()
 
     @pl.when(ki == n_k - 1)
     def _done():
@@ -112,10 +137,12 @@ def flash_lut_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n_k = skv // tk
+    from repro.perf_flags import enabled
     kernel = functools.partial(
         _flash_kernel, scale=1.0 / (hd ** 0.5), causal=causal, n_k=n_k,
         tq=tq, tk=tk, m_bits=fmt.mantissa, o_bits=fmt.overlap,
-        e_min=spec.e_min, a_bits=NL.ADDRESS_BITS, exp_lo=NL.EXP_LUT_RANGE)
+        e_min=spec.e_min, a_bits=NL.ADDRESS_BITS, exp_lo=NL.EXP_LUT_RANGE,
+        skip_masked_tiles=causal and enabled("causal_skip"))
     grid = (bh, sq // tq, n_k)
     return pl.pallas_call(
         kernel,

@@ -1,0 +1,209 @@
+"""Pallas TPU kernel: fused paged attention over PACKED BBFP KV pages.
+
+The unfused serving path runs decode attention as three separate XLA ops:
+gather the slot's pages through the block table, dequantise the whole view
+to bf16, then score/softmax/combine — so the packed-KV bandwidth win of
+PR 3 is partly handed back as extra HBM round trips (the dequantised view
+is 2x/4x the bytes of the storage it came from). This kernel does all of
+it in one VMEM-resident pass: the grid walks the block table one PAGE per
+K step (a page is exactly one 32-row BBFP quantisation block), the page's
+int8 codes + shared exponents are DMA'd directly into VMEM via a
+scalar-prefetch index map, decoded in registers (one mask/shift + exp2
+multiply, the ``bbfp.unpack_kv`` arithmetic), and consumed by the same
+flash online-softmax loop as ``flash_lut_attention`` — K/V never exist in
+HBM at bf16 width.
+
+Semantics contract (parity-tested against the jnp fallback):
+  * sentinel block-table entries (= n_pages) CLAMP to the last page in the
+    index map, exactly like the jnp gather's out-of-bounds clamp; the
+    per-slot position mask then discards those rows — identical to
+    ``attention._paged_view`` + the decode-branch mask;
+  * per-row query positions qp = pos[b] + row//G cover q_len=1 decode and
+    q_len=chunk incremental prefill with the same kernel (causal within
+    the chunk, since earlier chunk rows were scattered before attention);
+  * validity is (k_pos <= qp) & (k_pos > qp - window) — the decode
+    branch's ``eff_window`` mask, windows included;
+  * fully-dead page tiles (first k_pos past every query row) are skipped
+    via ``pl.when`` — the running max/sum/acc are simply not touched,
+    which is bitwise what masking them would produce.
+
+Storage modes: ``nibble=False`` reads the int8-code pools of
+``storage="packed"`` ({"q": (P,page,KH,hd), "exp": (P,page,KH,ceil(hd/32))});
+``nibble=True`` reads ``storage="packed4"`` pools whose q leaf carries TWO
+sign-magnitude nibble codes per byte (``bbfp.pack_kv_nibble``, hd/2 bytes
+per row) — sub-byte KV that is ONLY ever decoded here.
+
+The softmax exp comes from ``jnp.exp`` when qcfg.nonlinear is "none"
+(greedy-token-identical to the unfused fp32 softmax at fp32 compute) or
+from the segmented-LUT exp unit (``flash_lut_attention._lut_exp_tile``)
+when a nonlinear format is set — then the online rescale makes it
+close-to rather than bitwise-equal-to the unfused full-row LUT softmax,
+same caveat as the chunked-prefill path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bbfp as B
+from repro.core import nonlinear as NL
+from repro.kernels.flash_lut_attention import NEG, _lut_exp_tile
+
+
+def _decode_tile(codes, exp, *, fmt: B.QuantFormat, nibble: bool,
+                 hd: int, out_dtype) -> jax.Array:
+    """(page, hd) fp tile from one page's codes (page, hdq) + exponents
+    (page, nb). Register-level ``unpack_kv``/``unpack_kv_nibble``: mask,
+    shift, exp2 multiply — the int8 bytes are the only thing DMA'd."""
+    m, shift = fmt.mantissa, (fmt.shift if fmt.kind == "bbfp" else 0)
+    page = codes.shape[0]
+    c = codes.astype(jnp.int32)
+    if nibble:
+        b = c & 0xFF
+        c = jnp.stack([b & 0xF, (b >> 4) & 0xF], axis=-1).reshape(page, hd)
+        mag = c & 7
+        neg = (c & 8) != 0
+    else:
+        mag = jnp.abs(c)
+        neg = c < 0
+    mant = mag & (2**m - 1)
+    flag = mag >> m
+    e = exp.astype(jnp.int32)                               # (page, nb)
+    nb = e.shape[-1]
+    e = jnp.broadcast_to(e[:, :, None],
+                         (page, nb, B.DEFAULT_BLOCK)).reshape(page, -1)[:, :hd]
+    step_log2 = e - m + 1 + flag * shift
+    v = jnp.where(neg, -mant, mant).astype(jnp.float32) \
+        * jnp.exp2(step_log2.astype(jnp.float32))
+    return v.astype(out_dtype)
+
+
+def _paged_kernel(bt_ref, pos_ref, win_ref,                     # scalar prefetch
+                  q_ref, kq_ref, ke_ref, vq_ref, ve_ref, tab_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *,
+                  fmt, nibble, scale, s, g, hd, page, n_k, compute_dtype,
+                  lut, exp_lo):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    rows = s * g
+    pos = pos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # a page tile whose first row is past the LAST query row is fully
+    # masked: skip its dequant + dot entirely (the scratch state is
+    # bitwise-unchanged either way). Tile j=0 is always live (pos >= 0).
+    @pl.when(j * page <= pos + (s - 1))
+    def _tile():
+        q = q_ref[0, :, 0].reshape(rows, hd).astype(jnp.float32)
+        k = _decode_tile(kq_ref[0, :, 0], ke_ref[0, :, 0], fmt=fmt,
+                         nibble=nibble, hd=hd, out_dtype=compute_dtype)
+        sc = jax.lax.dot_general(q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        kp = j * page + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1)
+        qp = pos + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 0) // g
+        valid = (kp <= qp) & (kp > qp - win_ref[0])
+        sc = jnp.where(valid, sc, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        if lut is None:
+            p = jnp.exp(sc - m_new[:, None])
+        else:
+            shifted = jnp.maximum(sc - m_new[:, None], exp_lo)
+            p = _lut_exp_tile(shifted, tab_ref[...], **lut)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        v = _decode_tile(vq_ref[0, :, 0], ve_ref[0, :, 0], fmt=fmt,
+                         nibble=nibble, hd=hd, out_dtype=compute_dtype)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(compute_dtype).astype(jnp.float32), v.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0] = out.reshape(s, g, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "nibble", "exp_fmt", "interpret"))
+def paged_attention(q: jax.Array, k_pool: dict, v_pool: dict,
+                    block_table: jax.Array, pos: jax.Array,
+                    window: jax.Array, *, fmt: B.QuantFormat,
+                    nibble: bool = False, exp_fmt: B.QuantFormat | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """out (B,S,KH,G,hd) = paged flash attention of q against packed pools.
+
+    q: (B, S, KH, G, hd) in the compute dtype; k_pool/v_pool: {"q","exp"}
+    int8 page pools (``paged_kv`` storage="packed"/"packed4"); block_table:
+    (B, max_pages) int32 (sentinel = n_pages); pos: (B,) int32 per-slot
+    write offsets of row 0 (this call's rows are already scattered);
+    window: int32 scalar, the decode branch's eff_window (traced OK).
+    exp_fmt: LUT format for the in-kernel exp (qcfg.nonlinear), None = fp.
+    """
+    bsz, s, kh, g, hd = q.shape
+    n_pages, page = k_pool["q"].shape[0], k_pool["q"].shape[1]
+    n_k = block_table.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    hdq = hd // 2 if nibble else hd
+    nb = k_pool["exp"].shape[-1]
+    assert k_pool["q"].shape == (n_pages, page, kh, hdq), k_pool["q"].shape
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+
+    if exp_fmt is None:
+        lut, table = None, jnp.zeros((1, 1, 1, 1), jnp.float32)
+    else:
+        spec = NL.get_lut("exp", exp_fmt)
+        lut = dict(m=exp_fmt.mantissa, o=exp_fmt.overlap, e_min=spec.e_min,
+                   a_bits=NL.ADDRESS_BITS)
+        table = spec.table
+
+    def page_idx(b, h, j, bt, _pos, _win):
+        # sentinel (= n_pages) clamps to the last page, like the jnp gather;
+        # the position mask discards those rows
+        return (jnp.minimum(bt[b, j], n_pages - 1), 0, h, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, fmt=fmt, nibble=nibble,
+        scale=float(1.0 / np.sqrt(np.float32(hd))), s=s, g=g, hd=hd,
+        page=page, n_k=n_k, compute_dtype=q.dtype, lut=lut,
+        exp_lo=NL.EXP_LUT_RANGE)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, kh, n_k),
+        in_specs=[
+            pl.BlockSpec((1, s, 1, g, hd),
+                         lambda b, h, j, *_: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hdq), page_idx),
+            pl.BlockSpec((1, page, 1, nb), page_idx),
+            pl.BlockSpec((1, page, 1, hdq), page_idx),
+            pl.BlockSpec((1, page, 1, nb), page_idx),
+            pl.BlockSpec(table.shape, lambda b, h, j, *_: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, 1, g, hd),
+                               lambda b, h, j, *_: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s * g,), jnp.float32),       # running max
+            pltpu.VMEM((s * g,), jnp.float32),       # running sum
+            pltpu.VMEM((s * g, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, s, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), jnp.asarray(pos, jnp.int32), win,
+      q, k_pool["q"], k_pool["exp"], v_pool["q"], v_pool["exp"], table)

@@ -13,6 +13,17 @@ int8 codes + shared exponents — ~2x fewer KV bytes at BBFP(6,3)):
       --continuous --batch 8 --slots 4 --max-len 128 --page-size 32 \
       --kv-storage packed
 
+Fused paged attention (--paged-attn fused; packed/packed4 storage only)
+runs decode + chunk-prefill attention as ONE Pallas kernel per layer —
+page gather, in-VMEM BBFP dequant, flash online softmax — instead of the
+gather/dequant/attend jnp ops; --kv-storage packed4 stores two nibble
+codes per byte (~4.25 bits/elt, ~4x fewer KV bytes than bf16) and
+requires the fused kernel:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama7b --smoke \
+      --continuous --batch 8 --slots 4 --kv-storage packed4 \
+      --paged-attn fused
+
 Shared-system-prompt workload: --shared-prefix P prepends the same P random
 tokens to every request, so the prefix cache maps the common pages into
 each follower's block table (stored once, prefill skipped) and chunked
@@ -206,9 +217,18 @@ def main(argv=None):
     p.add_argument("--max-len", type=int, default=128,
                    help="per-request KV capacity (prompt + max_new - 1)")
     p.add_argument("--kv-layout", choices=["paged", "dense"], default="paged")
-    p.add_argument("--kv-storage", choices=["fp", "packed"], default="fp",
-                   help="paged page storage: bf16 values, or packed int8 "
-                        "codes + shared exponents (~2x fewer KV bytes)")
+    p.add_argument("--kv-storage", choices=["fp", "packed", "packed4"],
+                   default="fp",
+                   help="paged page storage: bf16 values, packed int8 "
+                        "codes + shared exponents (~2x fewer KV bytes), or "
+                        "packed4 nibble codes — two per byte, ~4x fewer "
+                        "(requires --paged-attn fused)")
+    p.add_argument("--paged-attn", choices=["fused", "unfused"],
+                   default="unfused",
+                   help="packed paged decode attention: 'fused' runs the "
+                        "Pallas kernel (page gather + BBFP dequant + flash "
+                        "softmax in one VMEM pass), 'unfused' the gathered-"
+                        "dequant jnp path (default)")
     p.add_argument("--kv-quant", default=None,
                    help="KV-cache quantisation format (default: none; "
                         "--kv-storage packed defaults it to BBFP(6,3))")
@@ -356,20 +376,41 @@ def main(argv=None):
     if args.kv_snapshot is not None and args.kv_layout == "dense":
         p.error("--kv-snapshot requires --kv-layout paged "
                 "(it persists radix-indexed KV pages)")
-    if args.kv_storage == "packed" and not args.continuous:
+    if args.kv_storage in ("packed", "packed4") and not args.continuous:
         # packed pages live in the ContinuousBatcher's paged pool; the plain
         # generate path has no packed store, and silently enabling KV
         # fake-quant there would change tokens while packing nothing
-        p.error("--kv-storage packed requires --continuous")
+        p.error(f"--kv-storage {args.kv_storage} requires --continuous")
+    if args.kv_storage == "packed4" and args.paged_attn != "fused":
+        # the jnp fallback would gather + dequantise nibble pages to bf16
+        # every tick — packed4 exists to cut decode bandwidth, and only the
+        # fused kernel decodes it in VMEM; reject instead of quietly running
+        # the slow path
+        p.error("--kv-storage packed4 requires --paged-attn fused "
+                "(the unfused jnp path would dequantise nibble pages "
+                "per tick)")
+    if args.paged_attn == "fused":
+        if not args.continuous:
+            p.error("--paged-attn fused requires --continuous (or --serve)")
+        if args.kv_layout == "dense" or args.kv_storage == "fp":
+            p.error("--paged-attn fused requires --kv-layout paged with "
+                    "--kv-storage packed or packed4 (the kernel decodes "
+                    "int8 BBFP pages)")
+        if args.tp is not None and args.tp > 1:
+            p.error("--paged-attn fused does not compose with --tp yet "
+                    "(pallas_call under GSPMD needs a shard_map over the "
+                    "page dim)")
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
     kv_quant = args.kv_quant
     if kv_quant is None:
         # packed pages need a storage format; BBFP(6,3) is the serving
-        # default (8.16-bit class, near-lossless KV)
-        kv_quant = "BBFP(6,3)" if args.kv_storage == "packed" else "none"
-    elif kv_quant.lower() == "none" and args.kv_storage == "packed":
-        p.error("--kv-storage packed needs a KV format (--kv-quant), "
-                "it is the page storage format")
+        # default (8.16-bit class, near-lossless KV); packed4's codes must
+        # fit one nibble, so its default is the widest 4-bit member BBFP(2,1)
+        kv_quant = {"packed": "BBFP(6,3)", "packed4": "BBFP(2,1)"}.get(
+            args.kv_storage, "none")
+    elif kv_quant.lower() == "none" and args.kv_storage in ("packed", "packed4"):
+        p.error(f"--kv-storage {args.kv_storage} needs a KV format "
+                "(--kv-quant), it is the page storage format")
     qcfg = Q.QuantConfig(linear=args.quant, nonlinear=args.nonlinear,
                          kv_cache=kv_quant)
     key = jax.random.PRNGKey(args.seed)
@@ -418,7 +459,8 @@ def main(argv=None):
                                      prefill_chunk=args.prefill_chunk,
                                      prefill_slots=args.prefill_slots,
                                      preempt=args.preempt,
-                                     runner=runner, mesh=bat_mesh)
+                                     runner=runner, mesh=bat_mesh,
+                                     paged_attn=args.paged_attn)
 
         bat = make_batcher()
         shared = jax.random.randint(jax.random.fold_in(key, 999),

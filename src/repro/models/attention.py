@@ -100,9 +100,13 @@ def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
     A PACKED pool (dict {"q", "exp"}, see paged_kv.init_paged_cache
     storage="packed") quantises the rows on scatter: int8 codes + int8
     per-32-block shared exponents in `kv_fmt` (= qcfg.kv_fmt). Exact for
-    rows already on the format grid (the qkv_cache write path)."""
+    rows already on the format grid (the qkv_cache write path). A PACKED4
+    pool (same dict, q leaf half-width — two nibble codes per byte) is
+    recognised by that width and encodes via ``pack_kv_nibble``."""
     if isinstance(pool, dict):
-        enc = B.pack_kv(rows.astype(jnp.float32), kv_fmt)
+        nib = pool["q"].shape[-1] != rows.shape[-1]          # packed4 q leaf
+        enc = (B.pack_kv_nibble if nib else B.pack_kv)(
+            rows.astype(jnp.float32), kv_fmt)
         return {"q": _paged_append(pool["q"], block_table, pos, enc["q"]),
                 "exp": _paged_append(pool["exp"], block_table, pos, enc["exp"])}
     pv = jnp.asarray(pos)
@@ -123,17 +127,28 @@ def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
     return new
 
 
-def _paged_view(pool, block_table, kv_fmt=None, dtype=None):
+def _paged_view(pool, block_table, kv_fmt=None, dtype=None, nibble=False):
     """Gather each slot's pages into a contiguous (B, max_pages*page, ...)
     view. Sentinel entries CLAMP to the last page; the caller's per-slot
     position mask discards those rows. A PACKED pool gathers the int8
     codes + exponents and dequantises into `dtype` — HBM only ever streams
-    the 8.25-bit storage; the fp view exists in registers/VMEM only."""
+    the 8.25-bit storage; the fp view exists in registers/VMEM only.
+    `nibble=True` decodes a packed4 pool (q leaf = two codes per byte) —
+    the jnp fallback the fused kernel is parity-tested against."""
     if isinstance(pool, dict):
-        return B.unpack_kv(
-            {"q": _paged_view(pool["q"], block_table),
-             "exp": _paged_view(pool["exp"], block_table)},
-            kv_fmt, out_dtype=dtype)
+        # §Perf: ONE block-table gather instead of two. Codes and per-block
+        # exponents are both int8 and page-shaped, so they stack along the
+        # trailing axis into a single (n_pages, page, ..., hdq+nb) view and
+        # one gather fetches both; the split slices fuse into the consumer.
+        # The stack itself is an int8 concat (~half the bytes of the bf16
+        # view this path materialises anyway) — the real fix for the
+        # per-tick re-materialisation is the fused kernel, not this path.
+        hdq = pool["q"].shape[-1]
+        both = _paged_view(jnp.concatenate([pool["q"], pool["exp"]], axis=-1),
+                           block_table)
+        enc = {"q": both[..., :hdq], "exp": both[..., hdq:]}
+        return (B.unpack_kv_nibble if nibble else B.unpack_kv)(
+            enc, kv_fmt, out_dtype=dtype)
     b = block_table.shape[0]
     out = pool[block_table].reshape(b, -1, *pool.shape[2:])
     if out.ndim == 4:
@@ -240,7 +255,8 @@ def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
 
 def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
               positions, causal=True, window=None, cache=None, pos=None,
-              kv_override=None, ring_positions=None, block_table=None):
+              kv_override=None, ring_positions=None, block_table=None,
+              paged_attn: str = "unfused"):
     """x: (B,S,d). Returns (out, new_cache).
 
     cache: {"k": (B,T,KH,hd), "v": ...} pre-allocated; pos: current write
@@ -255,6 +271,12 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
     row at (block_table[b, pos//page], pos%page) (sentinel entries land out
     of bounds and are dropped) and attention gathers the slot's pages back
     into a contiguous (B, max_pages*page) view masked at the slot's pos.
+    paged_attn: "fused" routes packed paged decode/chunk-prefill attention
+    through the Pallas kernel (``kernels.paged_attention``: page gather +
+    BBFP dequant + flash softmax in one VMEM pass — K/V never materialise
+    at bf16 width); "unfused" (default) is the gathered-dequant jnp path.
+    Fused requires a packed/packed4 paged cache; fp pools always take the
+    jnp path (there is nothing to dequant in-kernel).
     """
     b, s, d = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -280,6 +302,7 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         k = C.apply_rope(k, cos, sin)
 
     new_cache = cache
+    fused, nibble, t_paged = False, False, None
     if cache is not None and kv_override is None:
         # BBFP KV cache (serving): values land on the storage grid at write.
         # A packed paged pool ({"q","exp"} leaves) skips the fake-quant —
@@ -289,6 +312,12 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         # every write on the decode hot path.
         packed = isinstance(cache["k"], dict)
         kv_fmt = qcfg.kv_fmt if packed else None
+        # packed4 pools store two nibble codes per byte: the q leaf is
+        # half the head_dim wide, which is how the storage mode is known
+        # here without threading a flag through the cache pytree
+        nibble = packed and cache["k"]["q"].shape[-1] != hd
+        fused = (packed and paged_attn == "fused" and block_table is not None
+                 and pos is not None)
         if packed:
             k_st, v_st = k, v
         else:
@@ -303,9 +332,14 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
                 k_pool = _paged_append(cache["k"], block_table, pv, k_st, kv_fmt)
                 v_pool = _paged_append(cache["v"], block_table, pv, v_st, kv_fmt)
                 new_cache = {"k": k_pool, "v": v_pool}
-                k = _paged_view(k_pool, block_table, kv_fmt, dt)
-                v = _paged_view(v_pool, block_table, kv_fmt, dt)
-                k_pos = jnp.arange(k.shape[1])
+                page = (k_pool["q"] if packed else k_pool).shape[1]
+                t_paged = block_table.shape[1] * page
+                if not fused:
+                    k = _paged_view(k_pool, block_table, kv_fmt, dt,
+                                    nibble=nibble)
+                    v = _paged_view(v_pool, block_table, kv_fmt, dt,
+                                    nibble=nibble)
+                k_pos = jnp.arange(t_paged)
             elif jnp.ndim(pos):   # ragged: each slot writes at its own offset
                 if ring_positions is not None:
                     raise NotImplementedError(
@@ -341,8 +375,22 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
 
     q_grp = q.reshape(b, s, kh, g, hd)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
-    s_kv = k.shape[1]
-    if pos is not None:
+    s_kv = t_paged if fused else k.shape[1]
+    if fused:
+        # Fused Pallas paged attention: the kernel walks the block table a
+        # page at a time, decodes the int8/nibble BBFP codes in VMEM, and
+        # runs the flash online softmax — the dequantised view above never
+        # exists. Same mask semantics as the unfused branch below (per-row
+        # qp = pos+i, eff_window, sentinel clamp + pos mask); exp comes
+        # from the LUT unit when qcfg.nonlinear is set, jnp.exp otherwise.
+        from repro.kernels import paged_attention as PA   # lazy: pallas dep
+        eff_window = window if window is not None else s_kv + 1
+        exp_fmt = None if qcfg.nonlinear == "none" else qcfg.nonlinear_fmt
+        out = PA.paged_attention(
+            q_grp, new_cache["k"], new_cache["v"], block_table,
+            jnp.asarray(pos), jnp.asarray(eff_window, jnp.int32),
+            fmt=kv_fmt, nibble=nibble, exp_fmt=exp_fmt)
+    elif pos is not None:
         # decode: mask by per-slot pos (cache rows beyond a slot's pos are
         # garbage). valid is (T,) for scalar pos, (B,T) for ragged vectors.
         if ring_positions is not None:
@@ -379,12 +427,18 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
 # ---------------------------------------------------------------------------
 
 def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
-              positions, cache=None, pos=None, block_table=None):
+              positions, cache=None, pos=None, block_table=None,
+              paged_attn: str = "unfused"):
     """Prefill/train: materialise k,v from the compressed cache.
     Decode: absorbed form — scores directly against the (B,T,lora) cache.
     block_table: (B, max_pages) when the compressed cache is PAGED —
     ckv/krope are then page pools (n_pages, page, ...), written by scatter
-    at (page, offset) and read back through a per-slot page gather."""
+    at (page, offset) and read back through a per-slot page gather.
+    paged_attn: accepted for call-site symmetry with ``gqa_apply`` but
+    IGNORED — absorbed-form MLA decode contracts q into the latent space
+    before scoring, which the fused GQA kernel's (q·k, p·v) shape cannot
+    express, so MLA always takes the gathered-dequant jnp path (and
+    ``paged_kv`` rejects storage="packed4" for MLA for the same reason)."""
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads

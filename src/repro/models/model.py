@@ -64,5 +64,12 @@ def prefill(params, cfg, tokens, qcfg, max_len=None, **extras):
                                       max_len=max_len, **extras)
 
 
-def decode_step(params, cfg, cache, tokens, qcfg):
-    return family_module(cfg).decode_step(params, cfg, cache, tokens, qcfg)
+def decode_step(params, cfg, cache, tokens, qcfg, paged_attn="unfused"):
+    mod = family_module(cfg)
+    if paged_attn == "unfused":
+        return mod.decode_step(params, cfg, cache, tokens, qcfg)
+    if cfg.family != "decoder":
+        raise ValueError(
+            f"paged_attn={paged_attn!r} requires the decoder family (paged "
+            f"KV); {cfg.family!r} has no paged cache")
+    return mod.decode_step(params, cfg, cache, tokens, qcfg, paged_attn)

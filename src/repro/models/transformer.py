@@ -77,18 +77,20 @@ def layer_windows(cfg: C.ArchConfig) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _layer_apply(lp, h, cfg, qcfg, *, positions, window, cache=None, pos=None,
-                 dense_ff=False, block_table=None):
+                 dense_ff=False, block_table=None, paged_attn="unfused"):
     h = constrain(h, "batch", "seq", None)   # pin ZeRO-3 batch sharding
     attn_in = C.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
     if cfg.mla:
         a_out, new_cache = A.mla_apply(lp["attn"], attn_in, cfg, qcfg,
                                        positions=positions, cache=cache, pos=pos,
-                                       block_table=block_table)
+                                       block_table=block_table,
+                                       paged_attn=paged_attn)
     else:
         a_out, new_cache = A.gqa_apply(lp["attn"], attn_in, cfg, qcfg,
                                        positions=positions, causal=True,
                                        window=window, cache=cache, pos=pos,
-                                       block_table=block_table)
+                                       block_table=block_table,
+                                       paged_attn=paged_attn)
     if cfg.post_norm:
         a_out = C.rmsnorm(lp["attn_post_norm"], a_out, cfg.norm_eps)
     h = h + a_out
@@ -243,11 +245,14 @@ def prefill(params, cfg: C.ArchConfig, tokens, qcfg: Q.QuantConfig,
     return logits[:, -1], cache
 
 
-def _step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+def _step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig,
+          paged_attn: str = "unfused"):
     """Shared body of decode_step (S=1) and chunk_prefill (S=chunk): run
     tokens (B,S) against the cache at per-slot offsets cache["pos"], writing
     the S new K/V rows and attending at each row's own position. Returns
-    (logits (B,S,V), new cache with pos advanced by S)."""
+    (logits (B,S,V), new cache with pos advanced by S). paged_attn="fused"
+    routes packed paged attention through the Pallas kernel (GQA layers
+    only; MLA ignores it — see attention.mla_apply)."""
     h = _embed(params, cfg, tokens)
     b, s = tokens.shape
     pos = jnp.asarray(cache["pos"], jnp.int32)
@@ -270,14 +275,16 @@ def _step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
         lc = jax.tree.map(lambda x: x[i], cache["dense"])
         h, nc, _ = _layer_apply(params["dense_layers"][i], h, cfg, qcfg,
                                 positions=positions, window=None, cache=lc,
-                                pos=pos, dense_ff=True, block_table=block_table)
+                                pos=pos, dense_ff=True, block_table=block_table,
+                                paged_attn=paged_attn)
         new_dense.append(nc)
 
     def body(h, xs):
         lp, lc, window = xs
         w = jnp.where(window >= BIG_WINDOW, t + 1, window)
         h, nc, _ = _layer_apply(lp, h, cfg, qcfg, positions=positions, window=w,
-                                cache=lc, pos=pos, block_table=block_table)
+                                cache=lc, pos=pos, block_table=block_table,
+                                paged_attn=paged_attn)
         return h, nc
 
     h, new_layer_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"], windows))
@@ -291,7 +298,8 @@ def _step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
     return logits, new_cache
 
 
-def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig,
+                paged_attn: str = "unfused"):
     """One token step. tokens: (B,1). Returns (logits (B,V), new cache).
 
     cache["pos"] is the per-slot position vector (B,) — slots may sit at
@@ -304,11 +312,12 @@ def decode_step(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
     runtime/paged_kv.py): per-layer stores are page pools (L, n_pages,
     page, ...) shared by all slots, and attention scatters/gathers through
     the block table instead of indexing a per-slot slab."""
-    logits, new_cache = _step(params, cfg, cache, tokens, qcfg)
+    logits, new_cache = _step(params, cfg, cache, tokens, qcfg, paged_attn)
     return logits[:, 0], new_cache
 
 
-def chunk_prefill(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig):
+def chunk_prefill(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig,
+                  paged_attn: str = "unfused"):
     """Incremental chunked prefill: one multi-token step over a PAGED cache.
 
     tokens (B,S) are S consecutive prompt tokens per slot starting at
@@ -334,4 +343,4 @@ def chunk_prefill(params, cfg: C.ArchConfig, cache, tokens, qcfg: Q.QuantConfig)
         raise NotImplementedError(
             "chunk_prefill targets paged caches (block_table); dense-layout "
             "prefill uses forward() staging")
-    return _step(params, cfg, cache, tokens, qcfg)
+    return _step(params, cfg, cache, tokens, qcfg, paged_attn)

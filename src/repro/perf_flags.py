@@ -7,6 +7,8 @@ paper-faithful baseline under the same cost model:
 
 Flags:
   causal_skip  — static KV-chunk skipping in chunked attention (§Perf C/H1)
+                 and above-diagonal tile skipping in the fused flash kernel
+                 (kernels/flash_lut_attention.py, §Perf C1)
   seqkv_cache  — sequence-parallel KV cache sharding when KV heads don't
                  divide the model axis (§Perf A/H1)
 """

@@ -27,7 +27,10 @@ tests/test_prefix_cache.py):
     indexed sequence — resident OR recently retired (the radix tree's LRU
     keeps zero-refcount pages until the pool actually reclaims them) —
     maps those pages copy-on-write and skips their prefill;
-  * kv_storage="packed" pages hold int8 codes + shared exponents.
+  * kv_storage="packed" pages hold int8 codes + shared exponents;
+    "packed4" halves them again (two nibble codes per byte, ~4.25 bits/elt)
+    and requires paged_attn="fused" — only the Pallas kernel
+    (kernels/paged_attention.py) decodes nibble pages, in VMEM.
 
 Preemption (``preempt=True``, paged only): admission reserves only the
 prompt's pages, so the pool may be OVERSUBSCRIBED — more concurrent
@@ -107,15 +110,17 @@ class ContinuousBatcher:
                  kv_storage: str = "fp", prefix_cache: bool = True,
                  prefill_chunk: int = 32, prefill_slots: int | None = None,
                  preempt: bool = False, runner: ModelRunner | None = None,
-                 mesh=None):
+                 mesh=None, paged_attn: str = "unfused"):
         assert cfg.family == "decoder", "batcher targets the decoder family"
         assert kv_layout in ("paged", "dense"), kv_layout
-        assert kv_storage in ("fp", "packed"), kv_storage
+        assert kv_storage in ("fp", "packed", "packed4"), kv_storage
+        assert paged_attn in ("fused", "unfused"), paged_attn
         self.cfg, self.params, self.qcfg = cfg, params, qcfg
         self.mesh = mesh
         self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
         self.paged = kv_layout == "paged"
         self.kv_storage = kv_storage
+        self.paged_attn = paged_attn
         self.page_size = page_size
         self.prefix_cache = prefix_cache and self.paged
         self.prefill_chunk = max(1, prefill_chunk)
@@ -123,16 +128,36 @@ class ContinuousBatcher:
         if preempt and not self.paged:
             raise ValueError("preempt=True requires kv_layout='paged' "
                              "(the dense slab has no pages to evict)")
-        if kv_storage == "packed":
+        if kv_storage in ("packed", "packed4"):
             # packed pages store int8 codes in qcfg.kv_fmt — the storage
             # format IS the cache-quantisation format, so it must be set
             # (and the pool layout must be paged: pages = quant blocks)
             if not self.paged:
-                raise ValueError("kv_storage='packed' requires kv_layout='paged'")
+                raise ValueError(
+                    f"kv_storage={kv_storage!r} requires kv_layout='paged'")
             if qcfg.kv_cache == "none":
                 raise ValueError(
-                    "kv_storage='packed' needs qcfg.kv_cache set (e.g. "
+                    f"kv_storage={kv_storage!r} needs qcfg.kv_cache set (e.g. "
                     "'BBFP(6,3)') — it is the page storage format")
+        if kv_storage == "packed4" and paged_attn != "fused":
+            # the jnp fallback would gather + nibble-dequantise the whole
+            # paged view to bf16 EVERY tick — the format exists to cut
+            # decode bandwidth, and only the fused kernel decodes it in VMEM
+            raise ValueError(
+                "kv_storage='packed4' requires paged_attn='fused' (the "
+                "unfused jnp path would dequantise nibble pages per tick)")
+        if paged_attn == "fused":
+            if not self.paged or kv_storage == "fp":
+                raise ValueError(
+                    "paged_attn='fused' requires kv_layout='paged' with "
+                    "kv_storage='packed' or 'packed4' (the kernel decodes "
+                    "int8 BBFP pages; fp pools have nothing to fuse)")
+            if mesh is not None or (runner is not None and runner.mesh is not None):
+                raise ValueError(
+                    "paged_attn='fused' does not compose with tensor "
+                    "parallelism yet: pallas_call under GSPMD needs a "
+                    "shard_map over the page dim (ROADMAP: sequence-parallel "
+                    "page-dim sharding)")
         if self.paged:
             self.max_pages = PK.pages_for(max_len, page_size)
             # default budget = dense-equivalent capacity (no overcommit);
@@ -145,7 +170,7 @@ class ContinuousBatcher:
             self.cache = PK.init_paged_cache(
                 cfg, n_slots, max_len, n_pages=self.n_pages, page=page_size,
                 storage=kv_storage,
-                kv_fmt=qcfg.kv_fmt if kv_storage == "packed" else None)
+                kv_fmt=qcfg.kv_fmt if kv_storage != "fp" else None)
         else:
             self.kv = None
             self.cache = M.init_cache(cfg, n_slots, max_len)  # cache["pos"]: (B,)
@@ -160,6 +185,9 @@ class ContinuousBatcher:
                 (runner.params is params or runner._params_src is params), \
                 "shared ModelRunner must hold this façade's cfg/params"
             assert runner.qcfg == qcfg, "shared ModelRunner qcfg mismatch"
+            assert runner.paged_attn == paged_attn, \
+                "shared ModelRunner paged_attn mismatch (the fused/unfused " \
+                "choice is baked into its jitted closures)"
             self.runner = runner
             self.prefill_chunk = runner.prefill_chunk
             self.mesh = mesh = runner.mesh
@@ -169,7 +197,7 @@ class ContinuousBatcher:
                                       prefill_chunk=self.prefill_chunk,
                                       prefill_slots=prefill_slots or n_slots,
                                       min_prefill_bucket=min_prefill_bucket,
-                                      mesh=mesh)
+                                      mesh=mesh, paged_attn=paged_attn)
             self.params = self.runner.params
         if self.paged and mesh is not None:
             # head-shard the page pools; block table / pos stay replicated,

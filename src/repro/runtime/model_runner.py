@@ -54,9 +54,14 @@ from repro.models import partitioning as PT
 class ModelRunner:
     def __init__(self, cfg, params, qcfg, *, prefill_chunk: int = 32,
                  prefill_slots: int = 4, min_prefill_bucket: int = 16,
-                 mesh=None):
+                 mesh=None, paged_attn: str = "unfused"):
+        assert paged_attn in ("fused", "unfused"), paged_attn
         self.cfg, self.qcfg = cfg, qcfg
         self.mesh = mesh
+        # "fused" routes packed paged decode/chunk-prefill attention through
+        # the Pallas kernel (kernels/paged_attention.py); baked into the
+        # jitted closures below, so it is a per-runner compile-time choice
+        self.paged_attn = paged_attn
         self._params_src = params       # pre-sharding identity (facade assert)
         if mesh is not None:
             # serve-mode TP: weights sharded over "model" via the training
@@ -98,9 +103,9 @@ class ModelRunner:
         batchers, a bench sweeping configurations) reuse the compiled
         executable instead of retracing per façade."""
         if self._decode_fn is None:
-            cfg, qcfg = self.cfg, self.qcfg
+            cfg, qcfg, pa = self.cfg, self.qcfg, self.paged_attn
             self._decode_fn = jax.jit(
-                lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg),
+                lambda p, c, t: M.decode_step(p, cfg, c, t, qcfg, pa),
                 donate_argnums=(1,))
         if self._decode_wrapped is None:
             fn = self._decode_fn
@@ -169,12 +174,13 @@ class ModelRunner:
         ONE shape for every prompt length AND burst size <= P — compare
         the dense ladder's O(log max_len)."""
         if self._chunk_prefill_fn is None:
-            cfg, qcfg = self.cfg, self.qcfg
+            cfg, qcfg, pa = self.cfg, self.qcfg, self.paged_attn
             mod = M.family_module(cfg)
 
             def run(params, kv, bt_rows, pos, toks):
                 sub = {**kv, "block_table": bt_rows, "pos": pos}
-                logits, new_cache = mod.chunk_prefill(params, cfg, sub, toks, qcfg)
+                logits, new_cache = mod.chunk_prefill(params, cfg, sub, toks,
+                                                      qcfg, pa)
                 return logits, {k: v for k, v in new_cache.items()
                                 if k in ("layers", "dense")}
 

@@ -288,6 +288,25 @@ def packed_proto(proto):
     return jax.tree.map(one, proto)
 
 
+def packed4_proto(proto):
+    """Map an fp page-pool proto to PACKED4 (sub-byte) storage: every
+    (n_pages, page, ..., d) fp leaf becomes {"q": int8 (..., d/2), "exp":
+    int8 (..., d/32 rounded up)} — two sign-magnitude nibble codes per byte
+    (``bbfp.pack_kv_nibble``) plus the per-32-block shared exponent.
+    4 + 8/32 = 4.25 bits/elt stored instead of 16 (bf16), ~0.27x the KV
+    bytes. Pages stay one quantisation block, so snapshot/restore and
+    prefix sharing move nibble pages verbatim (bit-exact). Decoding only
+    happens inside the fused paged-attention kernel — the jnp fallback
+    exists for parity tests but re-materialises the view per tick."""
+    def one(x):
+        assert x.shape[-1] % 2 == 0, \
+            f"packed4 needs an even trailing dim: {x.shape}"
+        nb = -(-x.shape[-1] // bbfp.DEFAULT_BLOCK)
+        return {"q": jnp.zeros(x.shape[:-1] + (x.shape[-1] // 2,), jnp.int8),
+                "exp": jnp.zeros(x.shape[:-1] + (nb,), jnp.int8)}
+    return jax.tree.map(one, proto)
+
+
 def init_paged_cache(cfg, n_slots: int, max_len: int, *,
                      n_pages: int, page: int = PAGE_SIZE,
                      storage: str = "fp", kv_fmt=None):
@@ -297,13 +316,16 @@ def init_paged_cache(cfg, n_slots: int, max_len: int, *,
 
     storage="packed" keeps pages as int8 mantissa codes + shared exponents
     (``packed_proto``); `kv_fmt` is the storage QuantFormat (must fit the
-    int8 code, e.g. BBFP(6,3) — ``bbfp.kv_packable``)."""
+    int8 code, e.g. BBFP(6,3) — ``bbfp.kv_packable``). storage="packed4"
+    halves that again — two nibble codes per byte (``packed4_proto``;
+    `kv_fmt` must pass ``bbfp.kv_packable4``, e.g. BBFP(2,1)); GQA only,
+    since the nibble decode lives in the fused GQA attention kernel."""
     from repro.models import model as M          # avoid import cycle
     mod = M.family_module(cfg)
     if not hasattr(mod, "cache_proto"):
         raise NotImplementedError(
             f"paged KV targets the transformer family, not {cfg.family!r}")
-    assert storage in ("fp", "packed"), storage
+    assert storage in ("fp", "packed", "packed4"), storage
     max_pages = pages_for(max_len, page)
     n_dense = cfg.moe.first_dense if cfg.moe else 0
     n_scan = cfg.n_layers - n_dense
@@ -314,6 +336,17 @@ def init_paged_cache(cfg, n_slots: int, max_len: int, *,
                 f"storage='packed' needs an int8-codable kv_fmt "
                 f"(bbfp m<=6 / bfp m<=7), got {getattr(kv_fmt, 'name', kv_fmt)}")
         proto = packed_proto(proto)
+    elif storage == "packed4":
+        if kv_fmt is None or not bbfp.kv_packable4(kv_fmt):
+            raise ValueError(
+                f"storage='packed4' needs a nibble-codable kv_fmt "
+                f"(bbfp m<=2 / bfp m<=3), got {getattr(kv_fmt, 'name', kv_fmt)}")
+        if cfg.mla is not None:
+            raise ValueError(
+                "storage='packed4' targets GQA pools — the nibble decode "
+                "lives in the fused GQA paged-attention kernel; MLA latent "
+                "caches use storage='packed'")
+        proto = packed4_proto(proto)
     stack = lambda n: jax.tree.map(
         lambda x: jnp.zeros((n,) + x.shape, x.dtype), proto)
     cache = {"layers": stack(n_scan),

@@ -32,10 +32,14 @@ def _artifact(tmp_path, name, rows):
 
 # passing fixtures for every gate, keyed by the knob the tests flip
 def _kernel_rows(ratio=0.53, dedup=50.0, hits=50.0, traces=1, steps=3,
-                 chunks=9, preempted=1, completed=3, of=3):
+                 chunks=9, preempted=1, completed=3, of=3, ratio4=0.27,
+                 fused_match=True):
     return [
         ("serve/kv_bytes_per_slot_paged", 32768.0, "unit=bytes"),
         ("serve/kv_bytes_per_slot_packed", 32768.0 * ratio, "unit=bytes"),
+        ("serve/kv_bytes_per_slot_packed4", 32768.0 * ratio4, "unit=bytes"),
+        ("serve/decode_tick_fused", 100.0,
+         f"slots=2 tokens_match={fused_match} vs=unfused_jnp compute=fp32"),
         ("serve/kv_bytes_logical_vs_physical", dedup, "unit=percent"),
         ("serve/prefix_hit_rate", hits, "unit=percent"),
         ("serve/batched_prefill_tick", 100.0,
@@ -101,6 +105,8 @@ def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
 
 @pytest.mark.parametrize("rows,needle", [
     (_kernel_rows(ratio=0.60), "packed KV regressed"),
+    (_kernel_rows(ratio4=0.35), "packed4 KV regressed"),
+    (_kernel_rows(fused_match=False), "fused paged attention diverged"),
     (_kernel_rows(dedup=75.0), "not deduped"),
     (_kernel_rows(hits=30.0), "hit rate regressed"),
     (_kernel_rows(traces=2), "retraced"),

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.flash_lut_attention import flash_lut_attention
+from repro.kernels.flash_lut_attention import (
+    causal_live_tiles, flash_lut_attention,
+)
 from repro.quant import linear as Q
 
 KEY = jax.random.PRNGKey(0)
@@ -42,3 +44,48 @@ def test_flash_lut_rows_normalised():
     out = flash_lut_attention(q, k, v, causal=False)
     # with v == 1, each output row is the softmax row-sum == 1
     assert float(jnp.max(jnp.abs(out - 1.0))) < 0.02
+
+
+def test_causal_tile_skip_flop_count():
+    """§Perf C1: the skip's tile-FLOP accounting. causal_live_tiles is the
+    exact number of (q,k) tile pairs the predicated kernel executes; for
+    square causal attention it must be the lower-triangular-of-tiles count
+    — strictly below the compute-everything grid and approaching half."""
+    # 512x512 at 128-tiles: 4x4 tile grid, live = 1+2+3+4 = 10 of 16
+    assert causal_live_tiles(512, 512, 128, 128) == 10
+    # finer K tiles: per q tile qi, ki live while ki*64 <= qi*128 + 127
+    # -> 2, 4, 6, 8 of 8 = 20 of 32
+    assert causal_live_tiles(512, 512, 128, 64) == 20
+    for sq, skv, tq, tk in [(512, 512, 128, 128), (1024, 1024, 128, 64),
+                            (256, 512, 128, 128)]:
+        total = (sq // tq) * (skv // tk)
+        live = causal_live_tiles(sq, skv, tq, tk)
+        assert live < total, (live, total)          # the skip saves tiles
+        # never below the dense lower triangle (correctness floor)
+        assert live * tq * tk >= sq * (sq + 1) // 2 if sq == skv else True
+    # square grids approach the 2x FLOP win as tiles shrink
+    assert causal_live_tiles(2048, 2048, 128, 32) / \
+        ((2048 // 128) * (2048 // 32)) < 0.54
+
+
+def test_causal_tile_skip_parity():
+    """Skipping a fully-masked tile leaves the m/l/acc scratch bitwise
+    unchanged vs computing-and-masking it: the kernel output with the skip
+    (default) must match the compute-everything kernel (causal_skip
+    disabled) exactly."""
+    import repro.perf_flags as PF
+    q = jax.random.normal(KEY, (2, 256, 64), jnp.float32) * 0.4
+    k = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 256, 64),
+                          jnp.float32) * 0.4
+    v = jax.random.normal(jax.random.fold_in(KEY, 8), (2, 256, 64),
+                          jnp.float32)
+    out_skip = jax.device_get(flash_lut_attention(q, k, v, causal=True))
+    old = PF._disabled
+    try:
+        PF._disabled = old | {"causal_skip"}
+        jax.clear_caches()   # the flag is read at trace time — force retrace
+        out_all = jax.device_get(flash_lut_attention(q, k, v, causal=True))
+    finally:
+        PF._disabled = old
+        jax.clear_caches()
+    assert (out_skip == out_all).all()

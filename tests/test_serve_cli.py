@@ -58,6 +58,25 @@ from repro.launch import serve
      "paged"),
     (["--serve", "--kv-snapshot", "/tmp/kv", "--kv-layout", "dense"],
      "paged"),
+    # packed4 nibble pages are only decoded inside the fused kernel; the
+    # jnp fallback would dequantise them to bf16 every tick
+    (["--continuous", "--kv-storage", "packed4"],
+     "requires --paged-attn fused"),
+    (["--continuous", "--kv-storage", "packed4", "--paged-attn", "unfused"],
+     "requires --paged-attn fused"),
+    (["--kv-storage", "packed4"], "requires --continuous"),
+    # packed4 storage IS a KV format, same as packed
+    (["--continuous", "--kv-storage", "packed4", "--paged-attn", "fused",
+      "--kv-quant", "none"], "needs a KV format"),
+    # the fused kernel decodes int8 BBFP pages — nothing to fuse in fp,
+    # and the engine's compiled shapes only exist in continuous mode
+    (["--paged-attn", "fused"], "requires --continuous"),
+    (["--continuous", "--paged-attn", "fused"], "packed"),
+    (["--continuous", "--paged-attn", "fused", "--kv-layout", "dense"],
+     "paged"),
+    # pallas_call under GSPMD needs a shard_map over the page dim
+    (["--continuous", "--kv-storage", "packed", "--paged-attn", "fused",
+      "--tp", "2"], "does not compose with --tp"),
 ])
 def test_invalid_flag_combos_rejected(argv, needle, capsys):
     with pytest.raises(SystemExit) as exc:
