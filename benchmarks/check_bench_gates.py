@@ -252,6 +252,45 @@ def gate_tp_parity(vals, der):
              f"{tp['kv_shards']} != {tp['global_bytes']}")
 
 
+def gate_fused_tp_parity(vals, der):
+    """The page-dim-sharded fused engine (each device runs the Pallas
+    kernel over its local page-pool shard; partials merged with a
+    flash-decoding log-sum-exp) must be greedy-token identical to the
+    TP=1 fused engine at fp32, and the pool must actually split: per-shard
+    bytes x shards == global bytes. The row only exists in artifacts
+    produced with >= 2 devices (the sharded-serving job)."""
+    ft = der["serve/decode_tick_fused_tp2"]
+    print(f"  fused tp parity: tokens_match={ft['tokens_match']} "
+          f"kv_shards={ft['kv_shards']} shard_bytes={ft['shard_bytes']} "
+          f"global_bytes={ft['global_bytes']}")
+    _require(ft["tokens_match"] == "True",
+             "fused TP=2 decode diverged from the TP=1 fused engine")
+    _require(int(ft["kv_shards"]) >= 2,
+             f"fused page pool not sharded: kv_shards={ft['kv_shards']}")
+    _require(int(ft["shard_bytes"]) * int(ft["kv_shards"])
+             == int(ft["global_bytes"]),
+             f"fused pool bytes not split across shards: "
+             f"{ft['shard_bytes']} x {ft['kv_shards']} != "
+             f"{ft['global_bytes']}")
+
+
+def gate_packed4_tp_shards(vals, der):
+    """Sub-byte (nibble) KV under page-dim TP: the packed4 pool must shard
+    like any other storage format — per-shard bytes x shards == global —
+    proving the 4.25-bit pool composes with tensor parallelism (head-dim
+    sharding never supported packed4)."""
+    p4 = der["serve/kv_bytes_per_shard_packed4_tp2"]
+    shard = vals["serve/kv_bytes_per_shard_packed4_tp2"]
+    print(f"  packed4 tp shards: shard_bytes={shard:.0f} "
+          f"kv_shards={p4['kv_shards']} global_bytes={p4['global_bytes']}")
+    _require(shard > 0, "packed4 per-shard bytes is zero")
+    _require(int(p4["kv_shards"]) >= 2,
+             f"packed4 pool not sharded: kv_shards={p4['kv_shards']}")
+    _require(int(shard) * int(p4["kv_shards"]) == int(p4["global_bytes"]),
+             f"packed4 pool bytes not split across shards: {shard:.0f} x "
+             f"{p4['kv_shards']} != {p4['global_bytes']}")
+
+
 # gate -> the rows whose presence makes it applicable
 GATES = [
     (gate_packed_kv, ("serve/kv_bytes_per_slot_paged",
@@ -270,6 +309,8 @@ GATES = [
     (gate_shed, ("serve/shed_overload",)),
     (gate_warm_restart, ("serve/warm_restart",)),
     (gate_tp_parity, ("serve/decode_tick_tp2",)),
+    (gate_fused_tp_parity, ("serve/decode_tick_fused_tp2",)),
+    (gate_packed4_tp_shards, ("serve/kv_bytes_per_shard_packed4_tp2",)),
 ]
 
 

@@ -137,6 +137,7 @@ def serving_rows(tiny: bool = False):
     out.extend(prefix_rows(cfg, params, tiny=tiny))
     out.extend(engine_rows(cfg, params, tiny=tiny))
     out.extend(fused_rows(cfg, params, n_slots, max_len, tiny=tiny))
+    out.extend(fused_tp_rows(cfg, tiny=tiny))
     return out
 
 
@@ -339,6 +340,63 @@ def fused_rows(cfg, params, n_slots, max_len, tiny: bool = False):
     out.append(row("gemm/paged_attn_fused_vs_unfused", us_fk,
                    f"unfused_us={us_uk:.1f} pages={n_pg} page={page} "
                    f"kh={kh} hd={hd} kv_bits/elt=8.25 (view never hits bf16)"))
+    return out
+
+
+def fused_tp_rows(cfg, tiny: bool = False):
+    """Fused paged attention under tensor parallelism: the page pool is
+    sharded over the mesh's "model" axis and each device runs the Pallas
+    kernel on its local pages, merged with a flash-decoding log-sum-exp
+    (models/attention.py). Rows (emitted only with >= 2 devices — the
+    sharded-serving CI job forces 8 via XLA_FLAGS; a 1-device artifact
+    omits them, keying their gates off):
+      * serve/decode_tick_fused_tp2 — TP=2 fused decode-tick latency; the
+        derived column carries greedy-token parity vs the TP=1 fused
+        engine on the same packed workload (fp32 compute, where exact
+        parity is well-posed) plus the per-shard byte split;
+      * serve/kv_bytes_per_shard_packed4_tp2 — per-shard bytes of the
+        nibble pool under page-dim sharding: sub-byte KV composes with TP
+        (head-dim sharding never supported packed4)."""
+    if len(jax.devices()) < 2:
+        return []
+    import dataclasses
+
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import model as M
+    from repro.quant import linear as Q
+    from repro.runtime.batcher import ContinuousBatcher, Request
+
+    cfg32 = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    params32 = M.init(cfg32, jax.random.PRNGKey(3))
+    gen = 6 if tiny else 10
+    prompts = _prompts(cfg32, [5 + 7 * i for i in range(3)], seed=16)
+
+    def drive(mesh, storage, kvq):
+        bat = ContinuousBatcher(cfg32, params32, kvq, n_slots=3, max_len=96,
+                                n_pages=40, kv_storage=storage,
+                                paged_attn="fused", mesh=mesh)
+        for i, p in enumerate(prompts):
+            bat.submit(Request(rid=i, prompt=p, max_new=gen))
+        bat.step()                              # admit + compile the decode
+        us = _timed_ticks(bat, 4 if tiny else 8)
+        bat.run()
+        toks = {r.rid: [int(t) for t in r.out_tokens] for r in bat.finished}
+        return toks, bat.kv_stats(), us
+
+    kvq = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    ref, _, _ = drive(None, "packed", kvq)
+    got, st, us_tick = drive(make_serving_mesh(tp=2), "packed", kvq)
+    out = [row("serve/decode_tick_fused_tp2", us_tick,
+               f"tokens_match={got == ref} kv_shards={st['kv_shards']} "
+               f"shard_bytes={st['kv_store_bytes_per_shard']} "
+               f"global_bytes={st['kv_store_bytes']} "
+               f"compute=fp32 storage=packed")]
+    _, st4, _ = drive(make_serving_mesh(tp=2), "packed4",
+                      Q.QuantConfig(kv_cache="BBFP(2,1)"))
+    out.append(row("serve/kv_bytes_per_shard_packed4_tp2",
+                   st4["kv_store_bytes_per_shard"],
+                   f"unit=bytes kv_shards={st4['kv_shards']} "
+                   f"global_bytes={st4['kv_store_bytes']} bits/elt=4.25"))
     return out
 
 

@@ -85,9 +85,13 @@ def _decode_tile(codes, exp, *, fmt: B.QuantFormat, nibble: bool,
 
 def _paged_kernel(bt_ref, pos_ref, win_ref,                     # scalar prefetch
                   q_ref, kq_ref, ke_ref, vq_ref, ve_ref, tab_ref,
-                  o_ref, m_ref, l_ref, acc_ref, *,
-                  fmt, nibble, scale, s, g, hd, page, n_k, compute_dtype,
-                  lut, exp_lo):
+                  *refs,
+                  fmt, nibble, scale, s, g, hd, page, n_k, n_pages,
+                  compute_dtype, lut, exp_lo, partials):
+    if partials:
+        o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
     rows = s * g
@@ -102,7 +106,17 @@ def _paged_kernel(bt_ref, pos_ref, win_ref,                     # scalar prefetc
     # a page tile whose first row is past the LAST query row is fully
     # masked: skip its dequant + dot entirely (the scratch state is
     # bitwise-unchanged either way). Tile j=0 is always live (pos >= 0).
-    @pl.when(j * page <= pos + (s - 1))
+    # In partials mode a SENTINEL table entry also kills its tile: under
+    # page-dim sharding a non-local (translated-to-sentinel) entry can sit
+    # at a position-live slot of the table, and the clamped page it would
+    # read belongs to some other sequence — the merge combines only tiles
+    # this shard actually owns. (Without sharding the two conditions agree
+    # for every live slot: pages up through pos+s-1 are always allocated.)
+    live = j * page <= pos + (s - 1)
+    if partials:
+        live = live & (bt_ref[b, j] < n_pages)
+
+    @pl.when(live)
     def _tile():
         q = q_ref[0, :, 0].reshape(rows, hd).astype(jnp.float32)
         k = _decode_tile(kq_ref[0, :, 0], ke_ref[0, :, 0], fmt=fmt,
@@ -132,17 +146,26 @@ def _paged_kernel(bt_ref, pos_ref, win_ref,                     # scalar prefetc
 
     @pl.when(j == n_k - 1)
     def _done():
-        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
-        o_ref[0, :, 0] = out.reshape(s, g, hd).astype(o_ref.dtype)
+        if partials:
+            # flash-decoding partials: the UNNORMALISED accumulator plus the
+            # running (max, sum) — ``merge_partials`` finishes the softmax
+            # after combining shards over the page axis
+            o_ref[0, :, 0] = acc_ref[...].reshape(s, g, hd).astype(o_ref.dtype)
+            mo_ref[0, :, 0] = m_ref[...].reshape(s, g)
+            lo_ref[0, :, 0] = l_ref[...].reshape(s, g)
+        else:
+            out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+            o_ref[0, :, 0] = out.reshape(s, g, hd).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fmt", "nibble", "exp_fmt", "interpret"))
+                   static_argnames=("fmt", "nibble", "exp_fmt", "interpret",
+                                    "partials"))
 def paged_attention(q: jax.Array, k_pool: dict, v_pool: dict,
                     block_table: jax.Array, pos: jax.Array,
                     window: jax.Array, *, fmt: B.QuantFormat,
                     nibble: bool = False, exp_fmt: B.QuantFormat | None = None,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None, partials: bool = False):
     """out (B,S,KH,G,hd) = paged flash attention of q against packed pools.
 
     q: (B, S, KH, G, hd) in the compute dtype; k_pool/v_pool: {"q","exp"}
@@ -151,6 +174,13 @@ def paged_attention(q: jax.Array, k_pool: dict, v_pool: dict,
     write offsets of row 0 (this call's rows are already scattered);
     window: int32 scalar, the decode branch's eff_window (traced OK).
     exp_fmt: LUT format for the in-kernel exp (qcfg.nonlinear), None = fp.
+    partials=True returns the flash-decoding partials instead of the
+    normalised output: ``(acc, m, l)`` with acc (B,S,KH,G,hd) fp32
+    UNNORMALISED, m/l (B,S,KH,G) fp32 running max/sum — the sequence-
+    parallel page-dim sharding runs this per shard over its LOCAL pool
+    (sentinel entries skip their tile entirely, so a shard only
+    accumulates pages it owns; an all-sentinel row yields m=-inf, l=0)
+    and ``merge_partials`` log-sum-exp-combines the shards.
     """
     bsz, s, kh, g, hd = q.shape
     n_pages, page = k_pool["q"].shape[0], k_pool["q"].shape[1]
@@ -178,8 +208,21 @@ def paged_attention(q: jax.Array, k_pool: dict, v_pool: dict,
     kernel = functools.partial(
         _paged_kernel, fmt=fmt, nibble=nibble,
         scale=float(1.0 / np.sqrt(np.float32(hd))), s=s, g=g, hd=hd,
-        page=page, n_k=n_k, compute_dtype=q.dtype, lut=lut,
-        exp_lo=NL.EXP_LUT_RANGE)
+        page=page, n_k=n_k, n_pages=n_pages, compute_dtype=q.dtype, lut=lut,
+        exp_lo=NL.EXP_LUT_RANGE, partials=partials)
+    out_spec = pl.BlockSpec((1, s, 1, g, hd),
+                            lambda b, h, j, *_: (b, 0, h, 0, 0))
+    if partials:
+        ml_spec = pl.BlockSpec((1, s, 1, g), lambda b, h, j, *_: (b, 0, h, 0))
+        out_specs = [out_spec, ml_spec, ml_spec]
+        out_shape = [
+            jax.ShapeDtypeStruct((bsz, s, kh, g, hd), jnp.float32),  # acc
+            jax.ShapeDtypeStruct((bsz, s, kh, g), jnp.float32),      # m
+            jax.ShapeDtypeStruct((bsz, s, kh, g), jnp.float32),      # l
+        ]
+    else:
+        out_specs, out_shape = out_spec, jax.ShapeDtypeStruct(
+            (bsz, s, kh, g, hd), q.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(bsz, kh, n_k),
@@ -192,18 +235,58 @@ def paged_attention(q: jax.Array, k_pool: dict, v_pool: dict,
             pl.BlockSpec((1, page, 1, nb), page_idx),
             pl.BlockSpec(table.shape, lambda b, h, j, *_: (0, 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, s, 1, g, hd),
-                               lambda b, h, j, *_: (b, 0, h, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((s * g,), jnp.float32),       # running max
             pltpu.VMEM((s * g,), jnp.float32),       # running sum
             pltpu.VMEM((s * g, hd), jnp.float32),    # output accumulator
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bsz, s, kh, g, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(block_table.astype(jnp.int32), jnp.asarray(pos, jnp.int32), win,
       q, k_pool["q"], k_pool["exp"], v_pool["q"], v_pool["exp"], table)
+    if partials:
+        acc, m, l = out
+        return acc, m, l
+    return out
+
+
+def merge_partials(acc: jax.Array, m: jax.Array, l: jax.Array, *,
+                   axis_name: str | None = None,
+                   eps: float = 1e-30) -> jax.Array:
+    """Finish the flash-decoding softmax from per-shard partials.
+
+    acc: (..., hd) fp32 UNNORMALISED accumulator; m, l: (...) fp32 running
+    max / sum, as returned by ``paged_attention(..., partials=True)``.
+
+    Two modes:
+      * ``axis_name`` set — inside ``shard_map``: pmax/psum the log-sum-exp
+        combine over the named (page) mesh axis, each shard returning the
+        identical merged output.
+      * ``axis_name`` None — reference mode: the partials carry an extra
+        LEADING shard axis (stacked), reduced with plain max/sum. Used by
+        the unit tests to check the distributed merge against one device.
+
+    A shard whose slot saw no live pages carries m = -inf, l = 0, acc = 0;
+    ``exp(m - m_global)`` would be exp(-inf - -inf) = NaN when EVERY shard
+    is dead (padding rows), so the scale is forced to 0 there — dead slots
+    come out as zeros, matching the unsharded kernel's masked rows.
+
+    With one shard this reduces to acc / max(l, eps) exactly (scale =
+    exp(0) = 1): bitwise-identical to the kernel's own normalisation.
+    """
+    if axis_name is not None:
+        m_g = jax.lax.pmax(m, axis_name)
+        scale = jnp.where(m == -jnp.inf, 0.0, jnp.exp(m - m_g))
+        l_g = jax.lax.psum(l * scale, axis_name)
+        acc_g = jax.lax.psum(acc * scale[..., None], axis_name)
+    else:
+        m_g = jnp.max(m, axis=0)
+        scale = jnp.where(m == -jnp.inf, 0.0, jnp.exp(m - m_g[None]))
+        l_g = jnp.sum(l * scale, axis=0)
+        acc_g = jnp.sum(acc * scale[..., None], axis=0)
+    return acc_g / jnp.maximum(l_g, eps)[..., None]

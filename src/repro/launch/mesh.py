@@ -47,7 +47,13 @@ def make_serving_mesh(tp: int = 1, dp: int = 1):
     partition one machine's devices. `tp` shards the ModelRunner's compiled
     shapes (params + head-sharded page pools); `dp` is batch sharding
     WITHIN one engine replica (distinct from the EngineFleet's replica-
-    level data parallelism, which runs whole separate engines)."""
+    level data parallelism, which runs whole separate engines).
+
+    The "model" axis is dual-use: the jnp paged path head-shards the KV
+    pools over it, while the fused Pallas path page-shards them over the
+    SAME axis (flash-decoding sequence parallelism, ``sharding.PAGE_AXIS``)
+    — one mesh serves both dispatches, and params stay TP-sharded either
+    way."""
     if tp < 1 or dp < 1:
         raise ValueError(f"tp and dp must be >= 1, got tp={tp} dp={dp}")
     devices = jax.devices()
@@ -63,3 +69,12 @@ def make_serving_mesh(tp: int = 1, dp: int = 1):
 def batch_axes(mesh) -> tuple:
     """Mesh axes that carry the global batch."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, name: str) -> int:
+    """Size of mesh axis `name`; 1 for mesh=None or an absent axis, so
+    callers can branch on "is this dimension actually split" without
+    special-casing unmeshed runs."""
+    if mesh is None or name not in getattr(mesh, "axis_names", ()):
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]

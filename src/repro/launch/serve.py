@@ -396,10 +396,10 @@ def main(argv=None):
             p.error("--paged-attn fused requires --kv-layout paged with "
                     "--kv-storage packed or packed4 (the kernel decodes "
                     "int8 BBFP pages)")
-        if args.tp is not None and args.tp > 1:
-            p.error("--paged-attn fused does not compose with --tp yet "
-                    "(pallas_call under GSPMD needs a shard_map over the "
-                    "page dim)")
+        # --tp composes: fused + TP page-shards the KV pool over the
+        # "model" axis (flash-decoding sequence parallelism) instead of
+        # head-sharding it — no kv_heads divisibility requirement, so even
+        # kv_heads < tp serves
     cfg = configs.smoke_config(args.arch) if args.smoke else configs.full_config(args.arch)
     kv_quant = args.kv_quant
     if kv_quant is None:

@@ -19,6 +19,16 @@ import re
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+# The mesh axis that carries the fused serving path's PAGE-dim KV sharding
+# (flash-decoding sequence parallelism). It is deliberately the SAME axis
+# as tensor parallelism: a serving mesh stays ("data", "model"), params
+# shard over "model" exactly as before, and the fused dispatch re-purposes
+# the axis to split the physical page pool instead of the KV heads — so
+# head-dim (jnp path) and page-dim (fused path) serving share one mesh and
+# one set of committed params. See runtime/paged_kv.shard_paged_cache
+# (shard_axis="pages") and kernels/paged_attention.merge_partials.
+PAGE_AXIS = "model"
+
 
 def _axis_size(mesh, name):
     return mesh.shape[name] if name in mesh.axis_names else 1

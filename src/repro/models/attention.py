@@ -12,6 +12,8 @@ Three execution regimes, all quant-aware:
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
@@ -84,7 +86,8 @@ def _score_mask(m: jax.Array) -> jax.Array:
     return m[:, None, None] if m.ndim == 3 else m[None, None, None]
 
 
-def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
+def _paged_append(pool, block_table, pos, rows, kv_fmt=None, *,
+                  page_axis: bool = False):
     """Scatter each slot's new rows (B, S, ...) — S consecutive KV rows
     starting at the slot's offset pos (B,) — into a page pool (n_pages,
     page, ...) at (block_table[b, (pos+i)//page], (pos+i) % page). S=1 is
@@ -107,8 +110,10 @@ def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
         nib = pool["q"].shape[-1] != rows.shape[-1]          # packed4 q leaf
         enc = (B.pack_kv_nibble if nib else B.pack_kv)(
             rows.astype(jnp.float32), kv_fmt)
-        return {"q": _paged_append(pool["q"], block_table, pos, enc["q"]),
-                "exp": _paged_append(pool["exp"], block_table, pos, enc["exp"])}
+        return {"q": _paged_append(pool["q"], block_table, pos, enc["q"],
+                                   page_axis=page_axis),
+                "exp": _paged_append(pool["exp"], block_table, pos,
+                                     enc["exp"], page_axis=page_axis)}
     pv = jnp.asarray(pos)
     assert pv.ndim == 1, "paged caches require per-slot pos (B,)"
     page = pool.shape[1]
@@ -120,10 +125,18 @@ def _paged_append(pool, block_table, pos, rows, kv_fmt=None):
     pg = jnp.where(idx < max_pages, pg, pool.shape[0])      # past table: drop
     new = pool.at[pg, rpos % page].set(rows, mode="drop")
     if new.ndim == 4:
-        # GQA pool (n_pages, page, KH, hd): pin the KV-heads dim to the TP
-        # axis so a head-sharded pool stays sharded through the scatter
-        # (no-op without a bound mesh; MLA's ndim-3 pools stay replicated)
-        new = PT.constrain(new, None, None, "heads", None)
+        if page_axis:
+            # fused path under page-dim sharding: pin the POOL dim to the
+            # TP axis so the scatter output keeps the flash-decoding page
+            # sharding — constraining KH here would reshard the whole pool
+            # onto the head layout every layer
+            new = PT.constrain(new, "pages", None, None, None)
+        else:
+            # GQA pool (n_pages, page, KH, hd): pin the KV-heads dim to the
+            # TP axis so a head-sharded pool stays sharded through the
+            # scatter (no-op without a bound mesh; MLA's ndim-3 pools stay
+            # replicated)
+            new = PT.constrain(new, None, None, "heads", None)
     return new
 
 
@@ -157,6 +170,59 @@ def _paged_view(pool, block_table, kv_fmt=None, dtype=None, nibble=False):
         # einsums downstream contract per-head, so no resharding happens
         out = PT.constrain(out, None, None, "heads", None)
     return out if dtype is None else out.astype(dtype)
+
+
+def _shard_map(f, mesh, *, in_specs, out_specs):
+    """shard_map across jax versions: the public ``jax.shard_map`` (newer
+    releases, `check_vma`) when present, else the experimental one
+    (`check_rep`). Replication checking is off either way — the fused
+    merge psums to a replicated result the checker cannot see through."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as esm
+    return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def _fused_page_sharded(q, k_pool, v_pool, block_table, pos, window, mesh, *,
+                        fmt, nibble, exp_fmt):
+    """Sequence-parallel fused paged attention (flash decoding over the
+    page dim). Each device owns a contiguous slice of the physical page
+    pool (``paged_kv.shard_paged_cache(..., shard_axis="pages")``); inside
+    the shard_map every shard translates the replicated GLOBAL block table
+    to its local page ids (non-local -> local sentinel, which kills the
+    tile via the kernel's partials live-gate), runs the fused kernel over
+    its local pool, and the per-slot online-softmax partials (m, l, acc)
+    are combined with one pmax + two psums over the page axis
+    (``paged_attention.merge_partials``). With one shard the merge is
+    bitwise the kernel's own normalisation, so tp=1 meshes exercise the
+    identical code path. q/table/pos are replicated, the output is
+    replicated — covers decode (q_len=1) and chunked prefill (q_len=S)
+    alike, with NO kv_heads divisibility requirement."""
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import paged_attention as PA
+    from repro.launch.sharding import PAGE_AXIS
+    from repro.runtime.paged_kv import translate_block_table
+
+    def body(q, k_pool, v_pool, bt, pos, win):
+        shard = jax.lax.axis_index(PAGE_AXIS)
+        local_n = k_pool["q"].shape[0]
+        lbt = translate_block_table(bt, local_n, shard)
+        acc, m, l = PA.paged_attention(q, k_pool, v_pool, lbt, pos, win,
+                                       fmt=fmt, nibble=nibble,
+                                       exp_fmt=exp_fmt, partials=True)
+        return PA.merge_partials(acc, m, l, axis_name=PAGE_AXIS).astype(q.dtype)
+
+    fn = _shard_map(body, mesh,
+                    in_specs=(P(), P(PAGE_AXIS), P(PAGE_AXIS), P(), P(), P()),
+                    out_specs=P())
+    return fn(q, k_pool, v_pool, jnp.asarray(block_table, jnp.int32),
+              jnp.asarray(pos, jnp.int32), jnp.asarray(window, jnp.int32))
 
 
 def _full_attention(q, k, v, q_pos, k_pos, causal, window, scale, qcfg):
@@ -329,8 +395,10 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
                 # all s rows (1 = decode, chunk = incremental prefill)
                 # scatter through the slot's block-table row
                 pv = jnp.asarray(pos)
-                k_pool = _paged_append(cache["k"], block_table, pv, k_st, kv_fmt)
-                v_pool = _paged_append(cache["v"], block_table, pv, v_st, kv_fmt)
+                k_pool = _paged_append(cache["k"], block_table, pv, k_st,
+                                       kv_fmt, page_axis=fused)
+                v_pool = _paged_append(cache["v"], block_table, pv, v_st,
+                                       kv_fmt, page_axis=fused)
                 new_cache = {"k": k_pool, "v": v_pool}
                 page = (k_pool["q"] if packed else k_pool).shape[1]
                 t_paged = block_table.shape[1] * page
@@ -386,10 +454,20 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
         from repro.kernels import paged_attention as PA   # lazy: pallas dep
         eff_window = window if window is not None else s_kv + 1
         exp_fmt = None if qcfg.nonlinear == "none" else qcfg.nonlinear_fmt
-        out = PA.paged_attention(
-            q_grp, new_cache["k"], new_cache["v"], block_table,
-            jnp.asarray(pos), jnp.asarray(eff_window, jnp.int32),
-            fmt=kv_fmt, nibble=nibble, exp_fmt=exp_fmt)
+        mesh = PT.bound_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            # tensor-parallel serving: run the kernel per page-pool shard
+            # inside a shard_map and log-sum-exp-merge the partials —
+            # flash-decoding sequence parallelism over the "model" axis
+            out = _fused_page_sharded(
+                q_grp, new_cache["k"], new_cache["v"], block_table,
+                jnp.asarray(pos), jnp.asarray(eff_window, jnp.int32), mesh,
+                fmt=kv_fmt, nibble=nibble, exp_fmt=exp_fmt)
+        else:
+            out = PA.paged_attention(
+                q_grp, new_cache["k"], new_cache["v"], block_table,
+                jnp.asarray(pos), jnp.asarray(eff_window, jnp.int32),
+                fmt=kv_fmt, nibble=nibble, exp_fmt=exp_fmt)
     elif pos is not None:
         # decode: mask by per-slot pos (cache rows beyond a slot's pos are
         # garbage). valid is (T,) for scalar pos, (B,T) for ragged vectors.
@@ -426,6 +504,11 @@ def gqa_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
 # MLA forward (DeepSeek-V2): compressed-KV attention
 # ---------------------------------------------------------------------------
 
+# one-time-per-process flag for the fused-on-MLA downgrade warning below
+# (tests reset it to re-arm the warning)
+_MLA_FUSED_WARNED = False
+
+
 def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
               positions, cache=None, pos=None, block_table=None,
               paged_attn: str = "unfused"):
@@ -435,10 +518,21 @@ def mla_apply(params, x, cfg: C.ArchConfig, qcfg: Q.QuantConfig, *,
     ckv/krope are then page pools (n_pages, page, ...), written by scatter
     at (page, offset) and read back through a per-slot page gather.
     paged_attn: accepted for call-site symmetry with ``gqa_apply`` but
-    IGNORED — absorbed-form MLA decode contracts q into the latent space
-    before scoring, which the fused GQA kernel's (q·k, p·v) shape cannot
-    express, so MLA always takes the gathered-dequant jnp path (and
-    ``paged_kv`` rejects storage="packed4" for MLA for the same reason)."""
+    DOWNGRADED to the jnp path — absorbed-form MLA decode contracts q into
+    the latent space before scoring, which the fused GQA kernel's
+    (q·k, p·v) shape cannot express, so MLA always takes the
+    gathered-dequant jnp path (and ``paged_kv`` rejects storage="packed4"
+    for MLA for the same reason). ``paged_attn="fused"`` warns ONCE per
+    process instead of being silently swallowed; ``kv_stats``'s
+    `paged_attn_effective` reports the path that actually ran."""
+    global _MLA_FUSED_WARNED
+    if paged_attn == "fused" and not _MLA_FUSED_WARNED:
+        _MLA_FUSED_WARNED = True
+        warnings.warn(
+            "paged_attn='fused' has no MLA kernel — absorbed-form latent "
+            "attention cannot run the fused GQA kernel; falling back to the "
+            "unfused jnp path (kv_stats reports "
+            "paged_attn_effective='unfused')", RuntimeWarning, stacklevel=2)
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads

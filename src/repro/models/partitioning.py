@@ -21,11 +21,15 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 _CTX: dict = {"mesh": None, "rules": {}}
 
-# default logical-axis bindings per step kind
+# default logical-axis bindings per step kind. "pages" is the physical
+# page-pool dim of fused-path paged KV (flash-decoding sequence
+# parallelism): it rides the SAME mesh axis as tensor parallelism, so the
+# fused dispatch splits pages while params stay TP-sharded on one mesh.
 TRAIN_RULES = {"batch": ("pod", "data"), "heads": "model", "ff": "model",
                "seq": None, "vocab": "model", "embed": None}
 SERVE_RULES = {"batch": ("pod", "data"), "heads": "model", "ff": "model",
-               "seq": None, "vocab": "model", "embed": None}
+               "seq": None, "vocab": "model", "embed": None,
+               "pages": "model"}
 LONG_RULES = {"batch": None, "heads": "model", "ff": "model",
               "seq": "data", "vocab": "model", "embed": None}
 
@@ -57,6 +61,14 @@ def resolve(mesh, rules, *logical) -> P:
         else:
             parts.append(ax if ax in mesh.axis_names else None)
     return P(*parts)
+
+
+def bound_mesh():
+    """The mesh bound by the enclosing ``activation_sharding`` context, or
+    None outside one. The fused paged-attention dispatch uses this to decide
+    between the plain kernel call and the page-sharded shard_map wrapper —
+    models stay mesh-agnostic; only the bound context carries the mesh."""
+    return _CTX["mesh"]
 
 
 def constrain(x, *logical):

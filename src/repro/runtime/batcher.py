@@ -152,18 +152,39 @@ class ContinuousBatcher:
                     "paged_attn='fused' requires kv_layout='paged' with "
                     "kv_storage='packed' or 'packed4' (the kernel decodes "
                     "int8 BBFP pages; fp pools have nothing to fuse)")
-            if mesh is not None or (runner is not None and runner.mesh is not None):
-                raise ValueError(
-                    "paged_attn='fused' does not compose with tensor "
-                    "parallelism yet: pallas_call under GSPMD needs a "
-                    "shard_map over the page dim (ROADMAP: sequence-parallel "
-                    "page-dim sharding)")
+        # which jnp-vs-fused path the model will ACTUALLY run: MLA has no
+        # fused kernel (absorbed-form latent attention doesn't fit its
+        # shape), so fused requests downgrade — mla_apply warns once and
+        # kv_stats surfaces the effective path
+        self.paged_attn_effective = \
+            "unfused" if (paged_attn == "fused" and cfg.mla is not None) \
+            else paged_attn
+        # the mesh the engine will really run on (a shared runner's mesh
+        # wins — adoption below rebinds self.mesh to it) must be known
+        # BEFORE the pool is sized: fused + TP page-shards the pool, so
+        # n_pages has to divide the "model" axis
+        eff_mesh = runner.mesh if runner is not None else mesh
+        tp_size = 1
+        if eff_mesh is not None:
+            tp_size = dict(zip(eff_mesh.axis_names,
+                               eff_mesh.devices.shape)).get("model", 1)
+        # KV sharding mode for this engine: the fused kernel runs per
+        # page-pool shard inside a shard_map (flash-decoding sequence
+        # parallelism — no kv_heads divisibility requirement); the jnp
+        # path head-shards the pools as before
+        self._kv_shard_axis = "pages" \
+            if self.paged_attn_effective == "fused" else "heads"
         if self.paged:
             self.max_pages = PK.pages_for(max_len, page_size)
             # default budget = dense-equivalent capacity (no overcommit);
             # pass a smaller n_pages to overcommit the pool
             self.n_pages = n_pages if n_pages is not None \
                 else n_slots * self.max_pages
+            if self._kv_shard_axis == "pages" and tp_size > 1:
+                # page-dim sharding splits the pool over the "model" axis:
+                # round the pool UP to a shard multiple (extra pages only
+                # add capacity; the sentinel moves with n_pages)
+                self.n_pages += (-self.n_pages) % tp_size
             self.kv = KVCacheManager(self.n_pages, page_size, n_slots,
                                      strict_reserve=not preempt,
                                      retain=self.prefix_cache)
@@ -200,10 +221,12 @@ class ContinuousBatcher:
                                       mesh=mesh, paged_attn=paged_attn)
             self.params = self.runner.params
         if self.paged and mesh is not None:
-            # head-shard the page pools; block table / pos stay replicated,
-            # so the Scheduler and KVCacheManager bookkeeping above (pure
+            # commit the pools to the mesh — head-sharded for the jnp path,
+            # page-sharded for fused; block table / pos stay replicated, so
+            # the Scheduler and KVCacheManager bookkeeping above (pure
             # host Python over page ids) is untouched by tensor parallelism
-            self.cache = PK.shard_paged_cache(self.cache, mesh)
+            self.cache = PK.shard_paged_cache(self.cache, mesh,
+                                              shard_axis=self._kv_shard_axis)
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self._decode = self.runner.make_decode()
         self.decode_calls = 0          # jitted decode invocations (1 per tick)
@@ -627,6 +650,13 @@ class ContinuousBatcher:
         directory holds no snapshot)."""
         assert self.paged, "restore_kv requires kv_layout='paged'"
         self.cache, n = self.kv.restore_kv(self.cache, ckpt_dir, step)
+        if n and self.mesh is not None:
+            # the restore scatters GLOBAL page contents host-side; re-commit
+            # the pools to this engine's mesh layout (snapshots are
+            # shard-count agnostic — a tp=2 snapshot restores onto tp=1 or
+            # tp=4 engines, head- or page-sharded alike)
+            self.cache = PK.shard_paged_cache(self.cache, self.mesh,
+                                              shard_axis=self._kv_shard_axis)
         return n
 
     # -- introspection ------------------------------------------------------
@@ -645,6 +675,10 @@ class ContinuousBatcher:
                                  self.mesh.devices.shape)).get("model", 1)
         stats = {"kv_layout": "paged" if self.paged else "dense",
                  "kv_storage": self.kv_storage,
+                 "paged_attn": self.paged_attn,
+                 "paged_attn_effective": self.paged_attn_effective,
+                 "kv_shard_axis": self._kv_shard_axis
+                 if self.mesh is not None else None,
                  "kv_store_bytes": total,
                  "kv_shards": kv_shards,
                  "kv_store_bytes_per_shard": PK.kv_bytes_shard(self.cache),

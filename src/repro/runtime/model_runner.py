@@ -60,7 +60,11 @@ class ModelRunner:
         self.mesh = mesh
         # "fused" routes packed paged decode/chunk-prefill attention through
         # the Pallas kernel (kernels/paged_attention.py); baked into the
-        # jitted closures below, so it is a per-runner compile-time choice
+        # jitted closures below, so it is a per-runner compile-time choice.
+        # With a mesh, the fused path runs per page-pool shard inside a
+        # shard_map over the "model" axis (flash-decoding sequence
+        # parallelism) — params stay TP-sharded via the same mesh, while
+        # the jnp path head-shards the KV pools instead
         self.paged_attn = paged_attn
         self._params_src = params       # pre-sharding identity (facade assert)
         if mesh is not None:

@@ -385,38 +385,98 @@ def kv_bytes_shard(cache) -> int:
 
 
 def _pool_spec(path, leaf, model_size: int):
-    """PartitionSpec for one page-pool leaf under tensor parallelism.
+    """PartitionSpec for one page-pool leaf under HEAD-dim tensor
+    parallelism (``shard_axis="heads"``).
 
     GQA pools — fp {"k","v"} (L, n_pages, page, KH, hd) and their packed
     {"q","exp"} sub-leaves — all carry the KV-heads axis at dim -2 with
     ndim 5, so they shard along "model" there, matching SERVE_RULES'
     "heads" rule for the attention computation. Everything else (MLA's
     ckv/krope, whose dim -2 is the PAGE axis — a quantisation block must
-    never straddle shards — plus block table and positions) replicates."""
+    never straddle shards — plus block table and positions) replicates.
+
+    A KV-heads axis that does NOT divide the model-axis size is a loud
+    error rather than a silent replicate: head-dim sharding fundamentally
+    needs ``kv_heads % tp == 0``, and the fix is the page-dim mode
+    (``shard_axis="pages"``, the fused-kernel path), which has no head
+    divisibility requirement at all."""
     from jax.sharding import PartitionSpec as P
     keys = {getattr(k, "key", None) for k in path}
-    if (model_size > 1 and leaf.ndim >= 5
-            and keys & {"k", "v"}
-            and leaf.shape[-2] % model_size == 0):
+    if model_size > 1 and leaf.ndim >= 5 and keys & {"k", "v"}:
+        if leaf.shape[-2] % model_size != 0:
+            raise ValueError(
+                f"head-dim KV sharding needs kv_heads % tp == 0, got "
+                f"kv_heads={leaf.shape[-2]} tp={model_size}. Page-dim "
+                f"sharding has no head divisibility requirement: use "
+                f"shard_paged_cache(..., shard_axis='pages') — the "
+                f"--paged-attn fused serving path.")
         return P(*([None] * (leaf.ndim - 2)), "model", None)
     return P()
 
 
-def shard_paged_cache(cache, mesh):
-    """Commit a paged cache pytree to `mesh`: page pools head-sharded along
-    the "model" axis (one BBFP block per page stays intact on each shard),
-    block table / positions replicated so the host-side Scheduler and
-    allocator bookkeeping never change. No-op-shaped for mesh=None."""
+def translate_block_table(block_table, local_n: int, shard):
+    """Global block table -> this shard's LOCAL table under page-dim
+    sharding. Shard s owns the contiguous global pages
+    [s*local_n, (s+1)*local_n); a global id it owns maps to
+    ``id - s*local_n``, every other entry — another shard's page OR the
+    global sentinel ``n_shards*local_n`` — maps to the LOCAL sentinel
+    ``local_n``, so the kernel's existing clamp+mask semantics kill it.
+    `shard` may be a traced ``axis_index`` (inside shard_map) or an int."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    lo = jnp.asarray(shard, jnp.int32) * local_n
+    local = bt - lo
+    return jnp.where((local >= 0) & (local < local_n), local, local_n)
+
+
+def global_page_id(local_id, local_n: int, shard):
+    """Inverse of ``translate_block_table`` for OWNED entries: shard s's
+    local page i is global page ``s*local_n + i``. The local sentinel
+    ``local_n`` has no single global preimage (it covers every non-local
+    id) and is mapped to the GLOBAL sentinel of a pool with ``local_n``
+    pages per shard — callers that need exact round-trips must only feed
+    owned ids."""
+    lid = jnp.asarray(local_id, jnp.int32)
+    return jnp.where(lid >= local_n, -1, lid + jnp.asarray(shard, jnp.int32) * local_n)
+
+
+def shard_paged_cache(cache, mesh, shard_axis: str = "heads"):
+    """Commit a paged cache pytree to `mesh`. Block table / positions stay
+    replicated in both modes, so the host-side Scheduler and allocator
+    bookkeeping never change. No-op-shaped for mesh=None.
+
+    shard_axis="heads" (default, the jnp `_paged_view` TP path): GQA page
+    pools shard their KV-heads axis along "model" (one BBFP block per page
+    stays intact on each shard); requires ``kv_heads % tp == 0``.
+
+    shard_axis="pages" (the fused-kernel flash-decoding path): EVERY pool
+    leaf — fp, packed, packed4, MLA latents alike — shards its n_pages
+    axis (dim 1 of the (L, n_pages, page, ...) layer stacks) along
+    "model": each device owns a contiguous slice of the physical page
+    pool and attention runs per-shard over local pages with a log-sum-exp
+    merge (``kernels.paged_attention.merge_partials``). No head
+    divisibility requirement; needs ``n_pages % tp == 0`` (the batcher
+    rounds the pool up)."""
     if mesh is None:
         return cache
+    assert shard_axis in ("heads", "pages"), shard_axis
     from jax.sharding import NamedSharding, PartitionSpec as P
     model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
 
     def put(subtree):
         leaves, treedef = jax.tree_util.tree_flatten_with_path(subtree)
-        out = [jax.device_put(
-                   leaf, NamedSharding(mesh, _pool_spec(path, leaf, model_size)))
-               for path, leaf in leaves]
+        out = []
+        for path, leaf in leaves:
+            if shard_axis == "pages" and model_size > 1:
+                if leaf.shape[1] % model_size != 0:
+                    raise ValueError(
+                        f"page-dim KV sharding needs n_pages % tp == 0, got "
+                        f"n_pages={leaf.shape[1]} tp={model_size} (the "
+                        f"batcher rounds the pool size up — reach here only "
+                        f"with a hand-built pool)")
+                spec = P(None, "model")
+            else:
+                spec = _pool_spec(path, leaf, model_size)
+            out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
     rep = NamedSharding(mesh, P())

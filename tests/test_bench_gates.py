@@ -94,8 +94,24 @@ def _tp_rows(match=True, shards=2, shard_bytes=32768, global_bytes=65536):
     ]
 
 
+def _fused_tp_rows(match=True, shards=2, shard_bytes=174080,
+                   global_bytes=348160, p4_shards=2, p4_shard=92160,
+                   p4_global=184320):
+    """The page-dim-sharded fused rows: only emitted with >= 2 devices."""
+    return [
+        ("serve/decode_tick_fused_tp2", 100.0,
+         f"tokens_match={match} kv_shards={shards} "
+         f"shard_bytes={shard_bytes} global_bytes={global_bytes} "
+         f"compute=fp32 storage=packed"),
+        ("serve/kv_bytes_per_shard_packed4_tp2", float(p4_shard),
+         f"unit=bytes kv_shards={p4_shards} global_bytes={p4_global} "
+         f"bits/elt=4.25"),
+    ]
+
+
 def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
-    rc = cbg.main(["--json", _artifact(tmp_path, "k.json", _kernel_rows()),
+    rc = cbg.main(["--json", _artifact(tmp_path, "k.json",
+                                       _kernel_rows() + _fused_tp_rows()),
                    "--json", _artifact(tmp_path, "s.json",
                                        _serving_rows() + _fault_rows()
                                        + _tp_rows())])
@@ -135,6 +151,11 @@ def test_all_gates_pass_on_good_artifacts(tmp_path, capsys):
     (_tp_rows(match=False), "TP=2 decode diverged"),
     (_tp_rows(shards=1), "not sharded"),
     (_tp_rows(shard_bytes=65536), "not split across shards"),
+    (_fused_tp_rows(match=False), "fused TP=2 decode diverged"),
+    (_fused_tp_rows(shards=1), "fused page pool not sharded"),
+    (_fused_tp_rows(shard_bytes=348160), "fused pool bytes not split"),
+    (_fused_tp_rows(p4_shards=1), "packed4 pool not sharded"),
+    (_fused_tp_rows(p4_shard=184320), "packed4 pool bytes not split"),
 ])
 def test_each_gate_catches_its_regression(tmp_path, capsys, rows, needle):
     rc = cbg.main(["--json", _artifact(tmp_path, "bad.json", rows)])

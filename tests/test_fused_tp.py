@@ -1,0 +1,333 @@
+"""Sequence-parallel fused paged attention (page-dim sharding + merge).
+
+The fused Pallas kernel composes with tensor parallelism via flash-decoding
+sequence parallelism: each device owns a contiguous slice of the physical
+page pool (``shard_paged_cache(..., shard_axis="pages")``), the kernel runs
+per shard over LOCAL pages inside a shard_map, and the per-slot online-
+softmax partials (m, l, acc) are combined with a log-sum-exp pmax/psum
+merge (``paged_attention.merge_partials``).
+
+Device-count-independent pieces — the merge math, block-table translation
+round-trips, the heads-mode divisibility error, the MLA downgrade warning —
+run everywhere. The TP=2 parity bars (decode + chunked prefill, packed AND
+packed4, kv_heads < tp, preemption, cross-shard-count warm restart) need
+>= 2 devices and are driven in CI by the `sharded-serving` job under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import dataclasses
+import tempfile
+import warnings
+
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.core import bbfp as B  # noqa: E402
+from repro.kernels import paged_attention as PA  # noqa: E402
+from repro.launch.mesh import axis_size, make_serving_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.quant import linear as Q  # noqa: E402
+from repro.runtime import paged_kv as PK  # noqa: E402
+from repro.runtime.batcher import ContinuousBatcher, Request  # noqa: E402
+
+NDEV = len(jax.devices())
+KEY = jax.random.PRNGKey(11)
+
+needs2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs >= 2 devices (force with "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _fp32(arch="llama7b", **over):
+    cfg = dataclasses.replace(configs.smoke_config(arch),
+                              compute_dtype=jnp.float32)
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+# ---------------------------------------------------------------------------
+# merge_partials: the log-sum-exp combine (any device count)
+# ---------------------------------------------------------------------------
+
+def test_merge_partials_matches_single_pass_softmax():
+    """Hand-built partials: split a score row into two 'shards', run the
+    online softmax per shard (exactly what the kernel's partials mode
+    emits), and check the merged result against the one-pass softmax over
+    the full row."""
+    rng = np.random.default_rng(0)
+    scores = jnp.asarray(rng.standard_normal((3, 8)) * 4, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    ref = (p @ v) / jnp.sum(p, axis=-1, keepdims=True)
+
+    def partial(sc, vv):        # one shard's unnormalised flash state
+        m = jnp.max(sc, axis=-1)
+        e = jnp.exp(sc - m[:, None])
+        return e @ vv, m, jnp.sum(e, axis=-1)
+
+    accs, ms, ls = zip(partial(scores[:, :3], v[:3]),
+                       partial(scores[:, 3:], v[3:]))
+    merged = PA.merge_partials(jnp.stack(accs), jnp.stack(ms), jnp.stack(ls))
+    assert np.abs(np.asarray(merged - ref)).max() < 1e-6
+
+
+def test_merge_partials_dead_shard_and_dead_slot():
+    """A shard that saw no live pages carries (m=-inf, l=0, acc=0) and must
+    contribute NOTHING; a slot dead on EVERY shard (exp(-inf - -inf) would
+    be NaN without the guard) must come out as zeros, matching the
+    unsharded kernel's fully-masked rows."""
+    acc = jnp.asarray([[[1.0, 2.0]], [[0.0, 0.0]]])      # (shard=2, slot=1, hd)
+    m = jnp.asarray([[0.5], [-jnp.inf]])
+    l = jnp.asarray([[2.0], [0.0]])
+    out = PA.merge_partials(acc, m, l)
+    assert np.allclose(np.asarray(out), [[0.5, 1.0]])    # acc / l, live shard only
+    dead = PA.merge_partials(jnp.zeros_like(acc), jnp.full_like(m, -jnp.inf),
+                             jnp.zeros_like(l))
+    assert np.asarray(dead == 0).all() and np.isfinite(np.asarray(dead)).all()
+
+
+def test_single_shard_merge_is_kernel_normalisation():
+    """With one shard the merge reduces to acc/max(l,eps) exactly
+    (scale = exp(0) = 1): partials mode + merge must be BITWISE the
+    kernel's own normalised output."""
+    fmt = B.parse_format("BBFP(6,3)")
+    kh, hd, page, n_pages = 2, 64, 32, 8
+    rng = np.random.default_rng(3)
+    pool = lambda: {
+        "q": jnp.asarray(rng.integers(-50, 50, (n_pages, page, kh, hd),
+                                      dtype=np.int8)),
+        "exp": jnp.asarray(rng.integers(-8, 0, (n_pages, page, kh, hd // 32),
+                                        dtype=np.int8))}
+    k_pool, v_pool = pool(), pool()
+    q = jnp.asarray(rng.standard_normal((2, 1, kh, 1, hd)), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2, 8], [3, 4, 8, 8]], jnp.int32)
+    pos = jnp.asarray([70, 40], jnp.int32)
+    win = jnp.asarray(10**9, jnp.int32)
+    ref = PA.paged_attention(q, k_pool, v_pool, bt, pos, win, fmt=fmt)
+    acc, m, l = PA.paged_attention(q, k_pool, v_pool, bt, pos, win, fmt=fmt,
+                                   partials=True)
+    merged = PA.merge_partials(acc[None], m[None], l[None])
+    assert (np.asarray(merged, np.float32) == np.asarray(ref)).all()
+
+
+# ---------------------------------------------------------------------------
+# block-table translation + pool sharding plumbing (any device count)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("storage,fmt_name", [
+    ("fp", None), ("packed", "BBFP(6,3)"), ("packed4", "BBFP(2,1)")])
+def test_translation_round_trips_every_pool_layout(storage, fmt_name):
+    """global -> local -> global is the identity for OWNED pages in every
+    storage layout's pool (the translation only consumes the table, so the
+    layout enters via the pool's n_pages); non-local entries and the
+    global sentinel both land on the LOCAL sentinel."""
+    cfg = configs.smoke_config("llama7b")
+    kv_fmt = B.parse_format(fmt_name) if fmt_name else None
+    cache = PK.init_paged_cache(cfg, 2, 64, n_pages=8, storage=storage,
+                                kv_fmt=kv_fmt)
+    leaf = jax.tree.leaves(cache["layers"])[0]
+    n_pages = leaf.shape[1]
+    assert n_pages == 8
+    shards, local_n = 2, n_pages // 2
+    gids = jnp.arange(n_pages + 1)          # every page + the global sentinel
+    for shard in range(shards):
+        local = PK.translate_block_table(gids, local_n, shard)
+        owned = (gids >= shard * local_n) & (gids < (shard + 1) * local_n)
+        # non-owned (other shard's pages AND the sentinel) -> local sentinel
+        assert (np.asarray(local[~np.asarray(owned)]) == local_n).all()
+        back = PK.global_page_id(local[np.asarray(owned)], local_n, shard)
+        assert (np.asarray(back) == np.asarray(gids[np.asarray(owned)])).all()
+        # the local sentinel has no global preimage
+        assert int(PK.global_page_id(jnp.asarray(local_n), local_n, shard)) == -1
+
+
+def test_heads_mode_divisibility_error_points_at_page_mode():
+    """The old silent replicate for kv_heads % tp != 0 is now a loud error
+    whose message names the fix: shard_axis='pages' (the fused path)."""
+    from jax.tree_util import DictKey
+    leaf = jnp.zeros((2, 4, 32, 3, 16), jnp.int8)   # kv_heads=3, tp=2
+    with pytest.raises(ValueError, match="pages"):
+        PK._pool_spec((DictKey("k"), DictKey("q")), leaf, 2)
+    # MLA latents (no k/v key in the path) still replicate silently
+    from jax.sharding import PartitionSpec as P
+    assert PK._pool_spec((DictKey("ckv"),), jnp.zeros((2, 4, 32, 7)), 2) == P()
+
+
+def test_page_mode_requires_dividing_pool():
+    mesh = make_serving_mesh(tp=NDEV)
+    if axis_size(mesh, "model") < 2:
+        pytest.skip("needs a model axis > 1")
+    cfg = configs.smoke_config("llama7b")
+    cache = PK.init_paged_cache(cfg, 2, 64, n_pages=NDEV + 1, storage="fp")
+    with pytest.raises(ValueError, match="n_pages"):
+        PK.shard_paged_cache(cache, mesh, shard_axis="pages")
+
+
+def test_mla_fused_downgrade_warns_once_and_reports():
+    """The MLA flag swallow is no longer silent: mla_apply warns ONCE per
+    process and kv_stats surfaces paged_attn_effective='unfused'."""
+    from repro.models import attention as A
+    cfg = _fp32("deepseek_v2_lite_16b")
+    assert cfg.mla is not None
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    bat = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=96,
+                            n_pages=20, kv_storage="packed",
+                            paged_attn="fused")
+    stats = bat.kv_stats()
+    assert stats["paged_attn"] == "fused"
+    assert stats["paged_attn_effective"] == "unfused"
+    bat.submit(Request(rid=0, prompt=jnp.asarray([1, 2, 3]), max_new=2))
+    A._MLA_FUSED_WARNED = False             # re-arm the one-time flag
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        bat.run()
+    msgs = [w for w in caught if "MLA" in str(w.message)]
+    assert msgs, "fused-on-MLA downgrade must warn"
+    # GQA fused engines report the fused path as effective
+    gcfg = _fp32()
+    gbat = ContinuousBatcher(gcfg, M.init(gcfg, KEY),
+                             Q.QuantConfig(kv_cache="BBFP(6,3)"),
+                             n_slots=2, max_len=96, n_pages=20,
+                             kv_storage="packed", paged_attn="fused")
+    assert gbat.kv_stats()["paged_attn_effective"] == "fused"
+    assert gbat.kv_stats()["kv_shard_axis"] is None   # no mesh bound
+
+
+# ---------------------------------------------------------------------------
+# TP=2 parity: the sharded-serving CI bars (>= 2 devices)
+# ---------------------------------------------------------------------------
+
+def _prompts(cfg, lens, salt=0):
+    return [jax.random.randint(jax.random.fold_in(KEY, salt + i), (n,), 0,
+                               cfg.vocab) for i, n in enumerate(lens)]
+
+
+def _run_fused(cfg, params, qcfg, prompts, gen, mesh, **kw):
+    kw.setdefault("n_pages", 40)
+    kw.setdefault("max_len", 96)
+    bat = ContinuousBatcher(cfg, params, qcfg, n_slots=4,
+                            paged_attn="fused", prefill_chunk=8,
+                            mesh=mesh, **kw)
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=gen))
+    fin, _ = bat.run()
+    assert len(fin) == len(prompts)
+    return {r.rid: r.out_tokens for r in fin}, bat
+
+
+@needs2
+@pytest.mark.parametrize("storage,fmt", [("packed", "BBFP(6,3)"),
+                                         ("packed4", "BBFP(2,1)")])
+def test_tp2_fused_token_identical_to_tp1(storage, fmt):
+    """THE acceptance bar: a TP=2 fused engine — page pool split across
+    devices, partials merged over the page axis — serves greedy tokens
+    IDENTICAL to the unsharded fused engine at fp32, for int8 (packed)
+    and sub-byte nibble (packed4) KV alike. Mixed prompt lengths with
+    prefill_chunk=8 exercise chunked prefill (q_len=S) and decode
+    (q_len=1) through the shard_map wrapper, with per-shard pool bytes
+    summing to the global pool."""
+    cfg = _fp32()
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache=fmt)
+    prompts = _prompts(cfg, [5, 9, 30])
+    ref, _ = _run_fused(cfg, params, qcfg, prompts, 6, None,
+                        kv_storage=storage)
+    got, bat = _run_fused(cfg, params, qcfg, prompts, 6,
+                          make_serving_mesh(tp=2), kv_storage=storage)
+    assert got == ref, storage
+    stats = bat.kv_stats()
+    assert stats["kv_shards"] == 2 and stats["kv_shard_axis"] == "pages"
+    assert stats["kv_store_bytes_per_shard"] * 2 == stats["kv_store_bytes"]
+
+
+@needs2
+def test_tp2_fused_kv_heads_smaller_than_tp():
+    """kv_heads=1 < tp=2 — impossible under head-dim sharding, previously
+    rejected outright — completes end to end AND matches the unsharded
+    fused engine's tokens (page-dim sharding has no head divisibility
+    requirement)."""
+    cfg = _fp32(n_kv_heads=1)
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    prompts = _prompts(cfg, [6, 21], salt=30)
+    ref, _ = _run_fused(cfg, params, qcfg, prompts, 5, None,
+                        kv_storage="packed")
+    got, bat = _run_fused(cfg, params, qcfg, prompts, 5,
+                          make_serving_mesh(tp=2), kv_storage="packed")
+    assert got == ref
+    assert all(len(t) == 5 for t in got.values())
+    assert bat.kv_stats()["kv_shards"] == 2
+
+
+@needs2
+def test_tp2_fused_pool_rounds_up_to_shard_multiple():
+    """An odd n_pages cannot split over 2 shards: the batcher rounds the
+    pool UP (extra capacity, sentinel moves with it) instead of erroring."""
+    cfg = _fp32()
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    bat = ContinuousBatcher(cfg, params, qcfg, n_slots=2, max_len=96,
+                            n_pages=7, kv_storage="packed",
+                            paged_attn="fused", mesh=make_serving_mesh(tp=2))
+    assert bat.n_pages == 8
+    leaf = jax.tree.leaves(bat.cache["layers"])[0]
+    assert leaf.shape[1] == 8
+    assert int(bat.cache["block_table"][0, 0]) == 8   # sentinel = n_pages
+
+
+@needs2
+def test_tp2_fused_preemption_token_identical():
+    """Preemption + recompute-on-readmit under page-dim sharding: a
+    starved TP=2 fused pool must preempt, recompute, and still emit the
+    unconstrained engine's exact tokens."""
+    cfg = _fp32()
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    # 55-61-row prompts hold 2 pages each; +10 decode rows crosses into a
+    # 3rd — 3 slots x 3 pages > the 6-page pool, forcing append-exhaustion
+    # eviction + recompute-on-readmit
+    prompts = _prompts(cfg, [55, 58, 61], salt=60)
+    gen = 10
+    ref, _ = _run_fused(cfg, params, qcfg, prompts, gen, None,
+                        kv_storage="packed")
+    got, bat = _run_fused(cfg, params, qcfg, prompts, gen,
+                          make_serving_mesh(tp=2), kv_storage="packed",
+                          n_pages=6, preempt=True)
+    assert bat.sched.preemptions >= 1, "starved pool must have preempted"
+    assert got == ref
+    assert all(len(t) == gen for t in got.values())
+
+
+@needs2
+def test_snapshot_restores_across_shard_counts():
+    """Warm restart is shard-count agnostic: snapshot a TP=2 page-sharded
+    fused engine (snapshot gathers GLOBAL pages), restore into an
+    UNSHARDED fused engine and into a fresh TP=2 engine — both re-serve
+    the donor's prompts with first-round prefix hits and identical greedy
+    tokens (bit-exact page bytes through the shard boundary)."""
+    cfg = _fp32()
+    params = M.init(cfg, KEY)
+    qcfg = Q.QuantConfig(kv_cache="BBFP(2,1)")
+    prefix = jax.random.randint(jax.random.fold_in(KEY, 70), (64,), 0,
+                                cfg.vocab)
+    prompts = [jnp.concatenate([prefix, t])
+               for t in _prompts(cfg, [5, 9], salt=71)]
+    kw = dict(kv_storage="packed4", max_len=128)
+    ref, donor = _run_fused(cfg, params, qcfg, prompts, 4,
+                            make_serving_mesh(tp=2), **kw)
+    snap = tempfile.mkdtemp()
+    n_snap = donor.snapshot_kv(snap)
+    assert n_snap > 0
+    for mesh in (None, make_serving_mesh(tp=2)):
+        warm = ContinuousBatcher(cfg, params, qcfg, n_slots=4, n_pages=40,
+                                 paged_attn="fused", prefill_chunk=8,
+                                 mesh=mesh, **kw)
+        assert warm.restore_kv(snap) == n_snap
+        for i, p in enumerate(prompts):
+            warm.submit(Request(rid=i, prompt=p, max_new=4))
+        warm.run()
+        assert {r.rid: r.out_tokens for r in warm.finished} == ref
+        assert warm.prefix_hit_pages > 0, "restored pages must serve hits"

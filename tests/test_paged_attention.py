@@ -299,15 +299,29 @@ def test_packed4_storage_guards():
                           kv_storage="packed4", paged_attn="fused")
 
 
-def test_fused_rejects_tensor_parallel_mesh():
-    """pallas_call under GSPMD would need a shard_map over the page dim
-    (the ROADMAP residual) — reject fused+mesh loudly instead of letting
-    the partitioner replicate the pools behind the user's back."""
+def test_fused_serves_on_tensor_parallel_mesh():
+    """Fused + mesh now COMPOSES (flash-decoding page-dim sharding): a
+    tp=1 serving mesh routes the fused path through the shard_map wrapper
+    — per-shard kernel partials + the log-sum-exp merge, which at one
+    shard is bitwise the kernel's own normalisation — so the meshed engine
+    must be greedy-token-identical to the no-mesh fused engine even on a
+    single device. kv_stats reports the page-dim sharding mode."""
     from repro.launch.mesh import make_serving_mesh
-    cfg = configs.smoke_config("llama7b")
+    cfg = _fp32()
     params = M.init(cfg, KEY)
     qcfg = Q.QuantConfig(kv_cache="BBFP(6,3)")
+    prompts = [jax.random.randint(jax.random.fold_in(KEY, 90 + i), (n,), 0,
+                                  cfg.vocab) for i, n in enumerate([5, 30])]
+    kw = dict(kv_storage="packed", paged_attn="fused", prefill_chunk=8)
+    ref = _run_engine(cfg, params, qcfg, prompts, 6, **kw)
+
     mesh = make_serving_mesh(tp=1)
-    with pytest.raises(ValueError, match="tensor"):
-        ContinuousBatcher(cfg, params, qcfg, kv_storage="packed",
-                          paged_attn="fused", mesh=mesh)
+    bat = ContinuousBatcher(cfg, params, qcfg, n_slots=4, max_len=96,
+                            n_pages=40, mesh=mesh, **kw)
+    stats = bat.kv_stats()
+    assert stats["paged_attn"] == stats["paged_attn_effective"] == "fused"
+    assert stats["kv_shard_axis"] == "pages"
+    for i, p in enumerate(prompts):
+        bat.submit(Request(rid=i, prompt=p, max_new=6))
+    fin, _ = bat.run()
+    assert {r.rid: r.out_tokens for r in fin} == ref
